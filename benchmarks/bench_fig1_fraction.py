@@ -1,0 +1,74 @@
+"""Paper Fig. 1: DIGC share of end-to-end ViG inference vs resolution.
+
+Times a full ViG forward against the same forward with the graph fixed
+(DIGC ablated): fraction = 1 - t_fixed/t_full. The paper reports 50-95%
+on CPU; the qualitative claim is that the share GROWS with resolution."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import vig
+from repro.models.module import init_params
+from repro.core.digc import digc_blocked
+from repro.core.graph import mr_aggregate
+from benchmarks.common import emit, timeit
+
+
+def _forward_fixed_graph(params, imgs, cfg, idx_cache):
+    """ViG forward with precomputed neighbor indices (DIGC ablated)."""
+    x = vig.patchify(imgs, cfg.patch) @ params["stem"]
+    x = x + params["pos"]
+    grid = cfg.base_grid
+    gb = 0
+    for si, depth in enumerate(cfg.depths):
+        r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
+        for bi in range(depth):
+            bp = params[f"stage{si}"][f"block{bi}"]
+            h = vig._ln(x, bp["ln_g"]["scale"])
+            h = h @ bp["fc_in"]
+            cond = vig._pool_conodes(h, grid, r)
+            idx = idx_cache[gb]
+            agg = jax.vmap(lambda hb, cb, ib: mr_aggregate(hb, cb, ib))(h, cond, idx)
+            h = jnp.concatenate([h, agg], axis=-1) @ bp["fc_graph"]
+            h = jax.nn.gelu(h) @ bp["fc_out"]
+            x = x + h
+            f = vig._ln(x, bp["ln_f"]["scale"])
+            x = x + jax.nn.gelu(f @ bp["fc1"]) @ bp["fc2"]
+            gb += 1
+        if si + 1 < len(cfg.depths):
+            x = vig._downsample(x, grid, params[f"down{si}"])
+            grid //= 2
+    return jnp.mean(x, axis=1) @ params["head"]
+
+
+def run(resolutions=(256, 512, 1024), depth=4):
+    rng = np.random.default_rng(0)
+    base = vig.VIG_VARIANTS["vig_ti_iso"]
+    for res in resolutions:
+        cfg = base.replace(image_size=res, depths=(depth,), num_classes=100)
+        params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+        imgs = jnp.asarray(rng.standard_normal((1, res, res, 3)), jnp.float32)
+
+        full = jax.jit(lambda p, im: vig.vig_forward(p, im, cfg))
+        t_full = timeit(full, params, imgs, iters=2)
+
+        # precompute the graphs once, then time the DIGC-ablated model
+        n = cfg.base_grid ** 2
+        work = vig.count_digc_work(cfg)
+        x0 = vig.patchify(imgs, cfg.patch) @ params["stem"] + params["pos"]
+        idx_cache = [
+            jax.vmap(lambda a: digc_blocked(a, a, k=w["k"], dilation=w["dilation"]))(x0)
+            for w in work
+        ]
+        fixed = jax.jit(lambda p, im: _forward_fixed_graph(p, im, cfg, idx_cache))
+        t_fixed = timeit(fixed, params, imgs, iters=2)
+
+        frac = max(0.0, 1.0 - t_fixed / t_full)
+        emit(f"fig1/digc_fraction_res{res}", t_full * 1e6,
+             f"fixed_us={t_fixed*1e6:.0f};digc_share={frac:.2f}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

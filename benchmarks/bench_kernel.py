@@ -1,0 +1,69 @@
+"""DIGC kernel microbenchmarks (supplement): blocked-impl block-size
+sweep + the §Perf hillclimb progression (modeled TPU terms + measured
+recall for the approximate variants). Wall-clock on XLA:CPU; the Pallas
+kernel itself is validated in interpret mode (tests)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.digc import digc_blocked
+from repro.core.perfmodel import tpu_digc_estimate
+from benchmarks.common import emit, timeit
+
+
+def _hillclimb():
+    """EXPERIMENTS.md §Perf Cell 1, regenerated: modeled terms at the
+    paper's largest workload (ViG @ 2048^2)."""
+    w = dict(n=16384, m=16384, d=192, k=8, dilation=2)
+    iters = [
+        ("K0_baseline", {}),
+        ("K1_packed", dict(packed=True)),
+        ("K2_bf16_mxu", dict(packed=True, mxu_bf16=True)),
+        ("K3_bf16_hbm", dict(packed=True, mxu_bf16=True, input_bytes=2)),
+        ("K4_big_blocks", dict(packed=True, mxu_bf16=True, input_bytes=2,
+                               block_n=512, block_m=1024)),
+        ("K5_bucketed_r2", dict(packed=True, mxu_bf16=True, input_bytes=2,
+                                block_n=512, block_m=1024, bucket_rounds=2)),
+    ]
+    base = None
+    for name, kw in iters:
+        e = tpu_digc_estimate(**w, **kw)
+        base = base or e["latency_s"]
+        mxu = e["flops"] / 197e12 / e["latency_s"]
+        emit(f"kernel/{name}_us", e["latency_s"] * 1e6,
+             f"bound={e['bound']};speedup={base/e['latency_s']:.2f}x;mxu_frac={mxu:.3f}")
+
+
+def _bucketed_recall():
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2048, 192)), jnp.float32)
+    _, i_ref = kref.digc_reference(x, x, kd=16)
+    a = np.asarray(i_ref)
+    for rounds in (1, 2, 3):
+        i_b = ops.digc_topk(x, x, k=16, block_n=128, block_m=256,
+                            packed=True, bucket_rounds=rounds)
+        b = np.asarray(i_b)
+        rec = np.mean([len(set(a[i]) & set(b[i])) / 16 for i in range(2048)])
+        emit(f"kernel/bucketed_r{rounds}_recall", rec * 100,
+             "recall@16 percent, N=2048 self-graph")
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n, d, k = 4096, 192, 9
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    for bm in (256, 512, 1024):
+        fn = jax.jit(lambda a: digc_blocked(a, a, k=k, block_m=bm))
+        t = timeit(fn, x, iters=2)
+        emit(f"kernel/blocked_bm{bm}_us", t * 1e6, f"N={n};D={d}")
+    _hillclimb()
+    _bucketed_recall()
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Table I: per-module cycle estimates from the performance model.
+
+Reproduces the paper's numbers for the ViG-Tiny reference config
+(N=M=196, D=192, k=8) and extends the model across resolutions; derives
+the modeled FPGA latency @600 MHz and the TPU-kernel estimate."""
+
+from repro.core.perfmodel import (
+    FPGAConfig,
+    fpga_cycles,
+    fpga_latency_ms,
+    tpu_digc_estimate,
+    vig_resolution_to_nodes,
+)
+from benchmarks.common import emit
+
+PAPER_TABLE1 = {"DCM": 4704, "LSM": 3920, "GMM": 4704, "NSM": 224}
+
+
+def run():
+    cyc = fpga_cycles(196, 196, 192, 8)
+    match = cyc == PAPER_TABLE1
+    for mod, c in cyc.items():
+        emit(f"table1/cycles_{mod}", float(c),
+             f"paper={PAPER_TABLE1[mod]};match={c == PAPER_TABLE1[mod]}")
+    emit("table1/model_matches_paper", 1.0 if match else 0.0,
+         "exact reproduction of Table I")
+
+    for res in (256, 512, 1024, 2048):
+        n = vig_resolution_to_nodes(res)
+        lat_ms = fpga_latency_ms(n, n, 192, 8)
+        est = tpu_digc_estimate(n, n, 192, 8, 2)
+        emit(f"table1/fpga_model_latency_ms_res{res}", lat_ms * 1e3,
+             f"N={n}")
+        emit(f"table1/tpu_kernel_est_us_res{res}", est["latency_s"] * 1e6,
+             f"bound={est['bound']};traffic_saving={est['traffic_saving']:.1f}x")
+    return True
+
+
+if __name__ == "__main__":
+    run()

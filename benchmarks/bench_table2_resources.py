@@ -1,0 +1,43 @@
+"""Paper Table II analogue: resource occupancy of the DIGC kernel.
+
+The paper reports DSP/LUT/BRAM usage on the U280; the TPU analogue is
+the VMEM working set per (block_n, block_m, D, kd) tile configuration
+vs the 128 MB VMEM budget, plus MXU occupancy (tile dims vs 128x128
+systolic array alignment)."""
+
+from repro.core.perfmodel import TPUConfig
+from benchmarks.common import emit
+
+
+def vmem_bytes(block_n: int, block_m: int, d: int, kd: int,
+               with_pos: bool = False) -> int:
+    f = 4  # fp32 in-kernel
+    x_tile = block_n * d * f
+    y_tile = block_m * d * f
+    dist = block_n * block_m * f
+    run = 2 * block_n * kd * f  # (dist, idx) running buffers
+    pos = block_n * block_m * f if with_pos else 0
+    # double buffering on the streamed operands (Pallas pipeline)
+    return 2 * (x_tile + y_tile + pos) + dist + run
+
+
+def run():
+    cfg = TPUConfig()
+    for (bn, bm, d, kd) in [
+        (128, 256, 192, 16),   # paper's ViG-Ti workload on our tiles
+        (128, 512, 192, 16),
+        (256, 512, 192, 16),
+        (128, 256, 640, 18),   # ViG-B feature dim
+        (512, 1024, 192, 16),  # large-tile variant
+        (8, 128, 192, 16),     # minimum aligned tile
+    ]:
+        used = vmem_bytes(bn, bm, d, kd)
+        frac = used / cfg.vmem_bytes
+        mxu_aligned = (bn % 8 == 0) and (bm % 128 == 0) and (d % 8 == 0)
+        emit(f"table2/vmem_kb_bn{bn}_bm{bm}_d{d}", used / 1024,
+             f"vmem_frac={frac:.4f};mxu_aligned={mxu_aligned};fits={used < cfg.vmem_bytes}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

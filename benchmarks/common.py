@@ -1,0 +1,31 @@
+"""Benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of fn(*args) in seconds (jit-compatible)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+
+from benchmarks.common import header
+from benchmarks import (
+    bench_table1_cycles,
+    bench_table2_resources,
+    bench_table3_digc_runtime,
+    bench_table4_e2e,
+    bench_fig1_fraction,
+    bench_kernel,
+    bench_strategies,
+)
+
+SUITES = {
+    "table1": bench_table1_cycles.run,
+    "table2": bench_table2_resources.run,
+    "table3": bench_table3_digc_runtime.run,
+    "table4": bench_table4_e2e.run,
+    "fig1": bench_fig1_fraction.run,
+    "kernel": bench_kernel.run,
+    "strategies": bench_strategies.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=list(SUITES))
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller resolutions for quick runs")
+    args = ap.parse_args()
+    header()
+    for name in args.only:
+        fn = SUITES[name]
+        if args.fast and name == "table3":
+            fn(resolutions=(256, 512), iters=1)
+        elif args.fast and name == "fig1":
+            fn(resolutions=(256,))
+        else:
+            fn()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,70 @@
+"""Beyond-paper: the paper's DIGC as the neighbor-list engine for
+KNN-sparse attention (sub-quadratic long-context attention).
+
+Compares dense causal attention vs DIGC-KNN attention on a long
+sequence: output agreement on early positions, wall-time, and the
+asymptotic memory argument.
+
+    PYTHONPATH=src python examples/knn_attention_longctx.py --seq 2048
+"""
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.knn_attention import knn_attention_mha
+
+
+def dense_causal(q, k, v):
+    s = q.shape[0]
+    logits = jnp.einsum("shd,thd->hst", q, k) / np.sqrt(q.shape[-1])
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    return jnp.einsum("hst,thd->shd", jax.nn.softmax(logits, -1), v)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--dh", type=int, default=32)
+    ap.add_argument("--neighbors", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    s, h, dh = args.seq, args.heads, args.dh
+    q, k, v = (jnp.asarray(rng.standard_normal((s, h, dh)), jnp.float32)
+               for _ in range(3))
+
+    dense = jax.jit(dense_causal)
+    knn = jax.jit(lambda a, b, c: knn_attention_mha(
+        a, b, c, num_neighbors=args.neighbors, causal=True))
+
+    out_d = jax.block_until_ready(dense(q, k, v))
+    out_k = jax.block_until_ready(knn(q, k, v))
+
+    t0 = time.perf_counter(); jax.block_until_ready(dense(q, k, v))
+    td = time.perf_counter() - t0
+    t0 = time.perf_counter(); jax.block_until_ready(knn(q, k, v))
+    tk = time.perf_counter() - t0
+
+    nn = args.neighbors
+    early = float(jnp.max(jnp.abs(out_d[:nn] - out_k[:nn])))
+    cos = float(jnp.mean(jnp.sum(out_d * out_k, -1) /
+                         (jnp.linalg.norm(out_d, axis=-1)
+                          * jnp.linalg.norm(out_k, axis=-1) + 1e-9)))
+    print(f"seq={s} heads={h} neighbors={nn}")
+    print(f"  early rows (full history covered) max err: {early:.2e}")
+    print(f"  mean cosine similarity dense vs knn: {cos:.3f}")
+    print(f"  dense: {td*1e3:.0f}ms (O(S^2) scores = {s*s*h*4/1e6:.0f} MB)")
+    print(f"  knn:   {tk*1e3:.0f}ms (O(S*k) gathered = {s*nn*h*4/1e6:.1f} MB)")
+    print("  decode cost per token: dense O(S) vs knn top-k over cache;")
+    print("  cache memory identical, attention compute k/S =",
+          f"{nn/s:.3%} of dense")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+# Fault-tolerant sharded checkpointing (atomic, elastic restore).

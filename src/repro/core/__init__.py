@@ -1,0 +1,34 @@
+# The paper's primary contribution: Dynamic Image Graph Construction
+# (DIGC) as a composable JAX feature — reference / blocked-streaming /
+# fused-Pallas / distributed-ring implementations plus the graph ops and
+# the paper's analytical performance model.
+
+from repro.core.digc import (
+    BIG,
+    digc,
+    digc_blocked,
+    digc_reference,
+    dilate,
+    merge_topk,
+    pairwise_sq_dists,
+)
+from repro.core.graph import (
+    AGGREGATORS,
+    degree_histogram,
+    edge_list,
+    grid_pos_bias,
+    knn_gather,
+    mean_aggregate,
+    mr_aggregate,
+    sum_aggregate,
+)
+from repro.core.perfmodel import (
+    FPGAConfig,
+    TPUConfig,
+    digc_flops,
+    digc_hbm_bytes,
+    fpga_cycles,
+    fpga_latency_ms,
+    tpu_digc_estimate,
+    vig_resolution_to_nodes,
+)

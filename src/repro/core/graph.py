@@ -1,0 +1,77 @@
+"""Graph operations consuming DIGC output: gather + GNN aggregation.
+
+ViG's Grapher block uses max-relative graph convolution (MRConv):
+    agg_i = max_{j in N(i)} (x_j - x_i)
+    out_i = W [x_i ; agg_i]
+The gather/aggregate here is the message-passing consumer of the
+neighbor lists produced by DIGC.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def knn_gather(y: Array, idx: Array) -> Array:
+    """Gather neighbor features. y: (M, D), idx: (N, k) -> (N, k, D)."""
+    return jnp.take(y, idx, axis=0)
+
+
+def mr_aggregate(x: Array, y: Array, idx: Array) -> Array:
+    """Max-relative aggregation: max_j (y_j - x_i). -> (N, D)."""
+    neigh = knn_gather(y, idx)  # (N, k, D)
+    rel = neigh - x[:, None, :]
+    return jnp.max(rel, axis=1)
+
+
+def sum_aggregate(x: Array, y: Array, idx: Array) -> Array:
+    neigh = knn_gather(y, idx)
+    return jnp.sum(neigh - x[:, None, :], axis=1)
+
+
+def mean_aggregate(x: Array, y: Array, idx: Array) -> Array:
+    neigh = knn_gather(y, idx)
+    return jnp.mean(neigh - x[:, None, :], axis=1)
+
+
+AGGREGATORS = {
+    "max": mr_aggregate,
+    "sum": sum_aggregate,
+    "mean": mean_aggregate,
+}
+
+
+def edge_list(idx: Array) -> Array:
+    """(N, k) neighbor indices -> COO edge list (2, N*k) of (src=j, dst=i)."""
+    n, k = idx.shape
+    dst = jnp.repeat(jnp.arange(n, dtype=idx.dtype), k)
+    src = idx.reshape(-1)
+    return jnp.stack([src, dst])
+
+
+def degree_histogram(idx: Array, m: int) -> Array:
+    """In-degree of each co-node given neighbor lists (diagnostics)."""
+    flat = idx.reshape(-1)
+    return jnp.zeros((m,), jnp.int32).at[flat].add(1)
+
+
+def grid_pos_bias(h: int, w: int, hc: Optional[int] = None, wc: Optional[int] = None,
+                  scale: float = 0.0) -> Array:
+    """Relative positional bias P (N, M) between an h*w node grid and an
+    hc*wc co-node grid (co-grid defaults to node grid). ViG adds a
+    distance-based spatial prior to D_XY; `scale` 0 disables (returns zeros)."""
+    hc = hc or h
+    wc = wc or w
+    ys, xs = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    pn = jnp.stack([ys.reshape(-1) / max(h - 1, 1), xs.reshape(-1) / max(w - 1, 1)], -1)
+    ysc, xsc = jnp.meshgrid(jnp.arange(hc), jnp.arange(wc), indexing="ij")
+    pc = jnp.stack(
+        [ysc.reshape(-1) / max(hc - 1, 1), xsc.reshape(-1) / max(wc - 1, 1)], -1
+    )
+    d2 = jnp.sum((pn[:, None, :] - pc[None, :, :]) ** 2, -1)
+    return (scale * d2).astype(jnp.float32)

@@ -1,0 +1,177 @@
+"""Alternative graph-construction strategies (paper §VI conclusion:
+"the graph construction approach can be generalized by adjusting the
+mechanism used to compute similarity ... clustering-based approaches
+exemplified by ClusterViG and greedy edge-selection techniques used in
+GreedyViG").
+
+Both reuse the DIGC substrate (blocked distance + top-k merge) and keep
+static shapes (TPU-compilable):
+
+  * ``cluster_digc`` — IVF-style two-stage search (ClusterViG family):
+    k-means centroids over co-nodes, queries probe only the n_probe
+    nearest clusters. O(N·(C + probe·cap)·D) vs O(N·M·D).
+  * ``axial_digc``   — GreedyViG-family axial construction: candidates
+    restricted to the query's grid row + column. O(N·(H+W)·D).
+
+Approximate by design; recall measured in tests/benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.digc import BIG, digc_blocked, dilate, merge_topk, pairwise_sq_dists
+
+
+def kmeans(y: jax.Array, n_clusters: int, iters: int = 5,
+           seed: int = 0) -> jax.Array:
+    """Lightweight Lloyd's iterations. y (M, D) -> centroids (C, D)."""
+    m = y.shape[0]
+    idx = jax.random.permutation(jax.random.PRNGKey(seed), m)[:n_clusters]
+    cents = y[idx]
+
+    def step(cents, _):
+        d = pairwise_sq_dists(y, cents)  # (M, C)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, n_clusters, dtype=y.dtype)  # (M, C)
+        sums = onehot.T @ y  # (C, D)
+        counts = jnp.sum(onehot, axis=0)[:, None]
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), cents)
+        return new, None
+
+    cents, _ = lax.scan(step, cents, None, length=iters)
+    return cents
+
+
+def cluster_digc(
+    x: jax.Array,
+    y: Optional[jax.Array] = None,
+    *,
+    k: int,
+    dilation: int = 1,
+    n_clusters: int = 16,
+    n_probe: int = 4,
+    capacity_factor: float = 2.0,
+    seed: int = 0,
+    return_dists: bool = False,
+):
+    """Two-stage ANN graph construction (ClusterViG family).
+
+    1. cluster co-nodes (k-means, static iters);
+    2. bucket members into fixed-capacity cluster lists (overflow drops,
+       like the MoE dispatch);
+    3. per query: top-n_probe centroids, then exact top-k·d over the
+       probed clusters' members only.
+    """
+    if y is None:
+        y = x
+    n, d = x.shape
+    m = y.shape[0]
+    kd = k * dilation
+    n_clusters = min(n_clusters, m)
+    n_probe = min(n_probe, n_clusters)
+    cap = max(int(m / n_clusters * capacity_factor), kd)
+
+    cents = kmeans(y, n_clusters, seed=seed)
+    d_yc = pairwise_sq_dists(y, cents)  # (M, C)
+    assign = jnp.argmin(d_yc, axis=1)  # (M,)
+    # fixed-capacity member lists via rank-in-cluster scatter
+    onehot = jax.nn.one_hot(assign, n_clusters, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot  # (M, C)
+    pos = jnp.sum(rank * onehot, axis=1)  # (M,)
+    keep = pos < cap
+    slot = jnp.where(keep, assign * cap + pos, n_clusters * cap)
+    members = jnp.full((n_clusters * cap + 1,), m, jnp.int32)  # m = pad id
+    members = members.at[slot].set(jnp.arange(m, dtype=jnp.int32))
+    members = members[:-1].reshape(n_clusters, cap)
+
+    # stage 1: nearest centroids per query
+    d_xc = pairwise_sq_dists(x, cents)  # (N, C)
+    _, probe = lax.top_k(-d_xc, n_probe)  # (N, n_probe)
+
+    # stage 2: exact top-kd over probed members (padded with id m)
+    cand = members[probe].reshape(n, n_probe * cap)  # (N, P)
+    y_pad = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    cand_feats = y_pad[cand]  # (N, P, D)
+    dists = jnp.sum((cand_feats - x[:, None, :]) ** 2, axis=-1)
+    dists = jnp.where(cand < m, dists, BIG)
+    kd_eff = min(kd, cand.shape[1])
+    neg, sel = lax.top_k(-dists, kd_eff)
+    idx = jnp.take_along_axis(cand, sel, axis=1)
+    dist = -neg
+    if kd_eff < kd:  # pad to kd for API uniformity
+        idx = jnp.pad(idx, ((0, 0), (0, kd - kd_eff)))
+        dist = jnp.pad(dist, ((0, 0), (0, kd - kd_eff)), constant_values=BIG)
+    idx = dilate(idx, dilation)
+    if return_dists:
+        return idx, dilate(dist, dilation)
+    return idx
+
+
+def axial_digc(
+    x: jax.Array,
+    *,
+    grid_h: int,
+    grid_w: int,
+    k: int,
+    dilation: int = 1,
+    return_dists: bool = False,
+):
+    """Axial construction (GreedyViG family): each patch considers only
+    its grid row and column — O(N·(H+W)·D), no full distance matrix.
+
+    x (N, D) with N == grid_h * grid_w, row-major patch order.
+    """
+    n, d = x.shape
+    assert n == grid_h * grid_w, (n, grid_h, grid_w)
+    kd = k * dilation
+    xg = x.reshape(grid_h, grid_w, d)
+
+    rows = jnp.arange(grid_h)
+    cols = jnp.arange(grid_w)
+    # row candidates for patch (r, c): ids r*W + c' for all c'
+    row_ids = rows[:, None, None] * grid_w + cols[None, None, :]  # (H,1,W)
+    row_ids = jnp.broadcast_to(row_ids, (grid_h, grid_w, grid_w))
+    # column candidates for patch (r, c): ids r'*W + c for all r'
+    col_ids = rows[None, None, :] * grid_w + cols[None, :, None]  # (1,W,H)
+    col_ids = jnp.broadcast_to(col_ids, (grid_h, grid_w, grid_h))
+    cand = jnp.concatenate([row_ids, col_ids], axis=-1).reshape(n, grid_w + grid_h)
+
+    feats = x[cand]  # (N, H+W, D)
+    dists = jnp.sum((feats - x[:, None, :]) ** 2, axis=-1)
+    # the row and column lists intersect exactly at the query itself:
+    # mask the column-side duplicate so it can't displace a neighbor
+    qid = jnp.arange(n, dtype=cand.dtype)
+    dup = cand[:, grid_w:] == qid[:, None]
+    dists = dists.at[:, grid_w:].set(
+        jnp.where(dup, BIG, dists[:, grid_w:])
+    )
+    kd_eff = min(kd, cand.shape[1])
+    neg, sel = lax.top_k(-dists, kd_eff)
+    idx = jnp.take_along_axis(cand, sel, axis=1)
+    dist = -neg
+    if kd_eff < kd:
+        idx = jnp.pad(idx, ((0, 0), (0, kd - kd_eff)))
+        dist = jnp.pad(dist, ((0, 0), (0, kd - kd_eff)), constant_values=BIG)
+    idx = dilate(idx, dilation)
+    if return_dists:
+        return idx, dilate(dist, dilation)
+    return idx
+
+
+def recall_vs_exact(x, y, idx_approx, k: int) -> float:
+    """Neighbor-set recall of an approximate construction vs Algorithm 1."""
+    import numpy as np
+
+    from repro.core.digc import digc_reference
+
+    exact = np.asarray(digc_reference(x, y, k=k))
+    approx = np.asarray(idx_approx)[:, :k]
+    hits = 0
+    for i in range(exact.shape[0]):
+        hits += len(set(exact[i]) & set(approx[i]))
+    return hits / exact.size

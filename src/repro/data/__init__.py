@@ -1,0 +1,1 @@
+# Synthetic deterministic data pipelines (host-sharded, prefetch).

@@ -1,0 +1,1 @@
+# Distributed utilities: compression, stragglers, pipeline parallelism.

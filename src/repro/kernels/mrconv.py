@@ -1,0 +1,89 @@
+"""Fused max-relative graph convolution (MRConv) kernel.
+
+The consumer of DIGC's neighbor lists inside every ViG Grapher block:
+
+    agg[i] = max_{j in N(i)} (y[idx[i, j]] - x[i])
+
+TPU adaptation: arbitrary row gathers are the classic weak spot of the
+vector unit, so the gather is expressed as a one-hot contraction on the
+MXU (`onehot(idx) @ Y`) — the standard TPU embedding-gather idiom. The
+co-node table streams through VMEM in blocks; each (node-block,
+co-block) tile contributes its rows via a masked one-hot matmul and a
+running elementwise max, so neither the full one-hot matrix nor an
+(N, k, D) gathered tensor ever materializes.
+
+grid = (N/bn, M/bm); per-tile work: bn*k x bm one-hot + MXU contraction
+(bn*k, bm) @ (bm, D). Validated in interpret mode vs ref.mr_aggregate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mrconv_kernel(x_ref, idx_ref, y_ref, o_ref, *, block_m: int, k: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, NEG, jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, D)
+    y = y_ref[...].astype(jnp.float32)  # (bm, D)
+    idx = idx_ref[...]  # (bn, k) global co-node ids
+    bn, d = x.shape
+    bm = y.shape[0]
+
+    # one-hot rows for neighbors that live in THIS co-block
+    local = idx - j * block_m  # (bn, k)
+    flat = local.reshape(bn * k)
+    cols = lax.broadcasted_iota(jnp.int32, (bn * k, bm), 1)
+    onehot = (cols == flat[:, None]).astype(y.dtype)  # 0 rows if out of block
+    gathered = lax.dot_general(
+        onehot, y, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bn, k, d)
+    in_block = (local >= 0) & (local < bm)  # (bn, k)
+    rel = gathered - x[:, None, :]
+    rel = jnp.where(in_block[:, :, None], rel, NEG)
+    o_ref[...] = jnp.maximum(o_ref[...], jnp.max(rel, axis=1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def mrconv_pallas(x: jax.Array, y: jax.Array, idx: jax.Array, *,
+                  block_n: int = 128, block_m: int = 512,
+                  interpret: bool = True) -> jax.Array:
+    """x: (N, D) nodes, y: (M, D) co-nodes, idx: (N, k) neighbor ids
+    -> (N, D) max-relative aggregate. Requires N % block_n == 0 and
+    M % block_m == 0 (see ops.mrconv for the padding wrapper)."""
+    n, d = x.shape
+    m = y.shape[0]
+    k = idx.shape[1]
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    grid = (n // block_n, m // block_m)
+    kernel = functools.partial(_mrconv_kernel, block_m=block_m, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(x, idx.astype(jnp.int32), y)

@@ -1,0 +1,90 @@
+"""jit'd public wrappers for the Pallas kernels (padding + NSM)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.digc_topk import digc_topk_pallas
+from repro.kernels.mrconv import mrconv_pallas
+
+
+def _ceil_to(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def mrconv(x: jax.Array, y: jax.Array, idx: jax.Array, *,
+           block_n: int = 128, block_m: int = 512,
+           interpret: bool = True) -> jax.Array:
+    """Fused max-relative aggregation with automatic padding.
+    x: (N, D), y: (M, D), idx: (N, k) -> (N, D)."""
+    n, d = x.shape
+    m = y.shape[0]
+    block_n = min(block_n, _ceil_to(n, 8))
+    block_m = min(block_m, _ceil_to(m, 128))
+    n_pad = _ceil_to(n, block_n)
+    m_pad = _ceil_to(m, block_m)
+    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    y_p = jnp.pad(y, ((0, m_pad - m), (0, 0)))
+    idx_p = jnp.pad(idx, ((0, n_pad - n), (0, 0)))
+    out = mrconv_pallas(x_p, y_p, idx_p, block_n=block_n, block_m=block_m,
+                        interpret=interpret)
+    return out[:n].astype(x.dtype)
+
+
+def digc_topk(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    k: int,
+    dilation: int = 1,
+    pos_bias: Optional[jax.Array] = None,
+    block_n: int = 128,
+    block_m: int = 256,
+    interpret: bool = True,
+    return_dists: bool = False,
+    causal: bool = False,
+    packed: bool = False,
+    mxu_bf16: bool = False,
+    bucket_rounds: int = 0,
+):
+    """Fused-kernel DIGC with automatic padding and dilated selection.
+
+    x: (N, D) nodes, y: (M, D) co-nodes, optional pos_bias (N, M).
+    Returns idx (N, k) [, dist (N, k)].
+    """
+    n, feat = x.shape
+    m = y.shape[0]
+    kd = k * dilation
+    if kd > m:
+        raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
+    block_n = min(block_n, _ceil_to(n, 8))
+    block_m = min(block_m, _ceil_to(m, 128))
+    n_pad = _ceil_to(n, block_n)
+    m_pad = _ceil_to(m, block_m)
+    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    y_p = jnp.pad(y, ((0, m_pad - m), (0, 0)))
+    p_p = None
+    if pos_bias is not None:
+        p_p = jnp.pad(pos_bias, ((0, n_pad - n), (0, m_pad - m)))
+    dist, idx = digc_topk_pallas(
+        x_p,
+        y_p,
+        p_p,
+        kd=kd,
+        block_n=block_n,
+        block_m=block_m,
+        interpret=interpret,
+        m_valid=m,
+        causal=causal,
+        packed=packed,
+        mxu_bf16=mxu_bf16,
+        bucket_rounds=bucket_rounds,
+    )
+    dist = dist[:n, ::dilation]
+    idx = idx[:n, ::dilation]
+    if return_dists:
+        return idx, dist
+    return idx

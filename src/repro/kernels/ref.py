@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the DIGC kernels (Algorithm 1, no blocking)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pairwise_sq_dists(x, y, pos_bias=None):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d = (
+        jnp.sum(x * x, -1, keepdims=True)
+        - 2.0 * (x @ y.T)
+        + jnp.sum(y * y, -1)[None, :]
+    )
+    if pos_bias is not None:
+        d = d + pos_bias
+    return d
+
+
+def digc_reference(
+    x: jax.Array,
+    y: jax.Array,
+    pos_bias: Optional[jax.Array] = None,
+    *,
+    kd: int,
+):
+    """Full-matrix top-kd: returns (dist, idx), each (N, kd), ascending."""
+    d_xy = pairwise_sq_dists(x, y, pos_bias)
+    neg, idx = lax.top_k(-d_xy, kd)
+    return -neg, idx.astype(jnp.int32)

@@ -1,0 +1,1 @@
+# Launchers: meshes, dry-run, roofline, train/serve drivers.

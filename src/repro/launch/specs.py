@@ -1,0 +1,210 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(arch x input-shape) dry-run cell. No device allocation happens here —
+everything is abstract until .lower().compile()."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.api import get_api
+from repro.models.config import ModelConfig
+from repro.models.module import (
+    DEFAULT_RULES,
+    abstract_params,
+    make_shardings,
+    mesh_axes_for,
+    rules_for,
+    _drop_indivisible,
+)
+from repro.train.optimizer import OptConfig, OptState
+from repro.train.trainer import make_train_step
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _shard(mesh: Mesh, shape, spec_entries) -> NamedSharding:
+    ps = _drop_indivisible(shape, P(*spec_entries), mesh)
+    return NamedSharding(mesh, ps)
+
+
+def shard_batch_tree(tree, mesh: Mesh, rules=DEFAULT_RULES):
+    """Batch inputs: dim0 = batch per the active rules (default
+    (pod, data); batch-over-model policies add the model axis)."""
+    bd = tuple(a for a in _as_tuple(rules.get("batch", ("pod", "data")))
+               if a in mesh.axis_names)
+
+    def one(x):
+        entries = [bd] + [None] * (x.ndim - 1)
+        return _shard(mesh, x.shape, entries)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def _as_tuple(v):
+    return (v,) if isinstance(v, str) else tuple(v)
+
+
+def shard_cache_tree(tree, mesh: Mesh):
+    """Decode caches: stacked (L, B, T, ...) leaves. Batch over
+    (pod,data); for KV-like leaves shard heads over model when they
+    divide, else the sequence dim (sequence-parallel decode)."""
+    bd = _batch_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape[model] if model else 1
+
+    def one(x):
+        entries: list[Any] = [None] * x.ndim
+        if x.ndim >= 2:
+            entries[1] = bd  # batch after layers dim
+        if model and x.ndim >= 3:
+            # Model-axis placement order matters (§Perf iteration D2.1):
+            # kv-heads (ndim-2) is collective-free for attention; the
+            # sequence dim (2) costs one small LSE-combine psum
+            # (flash-decode); head_dim (last) would shard the attention
+            # CONTRACTION and is never chosen.
+            candidates = []
+            if x.ndim >= 4:
+                candidates.append(x.ndim - 2)  # kv heads
+            candidates.append(2)  # sequence
+            for d in candidates:
+                if d < x.ndim and x.shape[d] % msize == 0 and x.shape[d] >= msize:
+                    entries[d] = model
+                    break
+        return _shard(mesh, x.shape, entries)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def make_cell(arch: str, shape_id: str, mesh: Mesh, *,
+              cfg: Optional[ModelConfig] = None,
+              rules=DEFAULT_RULES):
+    """Build (step_fn, abstract args, in_shardings) for one dry-run cell.
+
+    Returns dict with keys: fn, args (tuple of ShapeDtypeStruct trees),
+    in_shardings (matching tuple), kind.
+    """
+    cfg = cfg or get_config(arch)
+    if rules is DEFAULT_RULES:
+        rules = rules_for(cfg)
+    seq_len, global_batch, kind = SHAPES[shape_id]
+    api = get_api(cfg)
+    spec_tree = api.param_spec()
+    params_abs = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cfg.compute_dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating) else jax.ShapeDtypeStruct(s.shape, s.dtype),
+        abstract_params(spec_tree),
+    )
+    params_sh = make_shardings(spec_tree, mesh, rules)
+
+    if kind == "train":
+        batch = _train_batch_abs(cfg, seq_len, global_batch)
+        batch_sh = shard_batch_tree(batch, mesh, rules)
+        oc = OptConfig()
+        train_step = make_train_step(cfg, oc, loss_fn=api.loss_fn)
+        opt_abs = OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=_as_f32(params_abs),
+            nu=_as_f32(params_abs),
+            master=_as_f32(params_abs),
+        )
+        opt_sh = OptState(
+            step=NamedSharding(mesh, P()),
+            mu=params_sh,
+            nu=params_sh,
+            master=params_sh,
+        )
+        return {
+            "fn": train_step,
+            "args": (params_abs, opt_abs, batch),
+            "in_shardings": (params_sh, opt_sh, batch_sh),
+            "kind": kind,
+            "cfg": cfg,
+            "rules": rules,
+        }
+
+    if kind == "prefill":
+        batch = _prefill_batch_abs(cfg, seq_len, global_batch)
+        batch_sh = shard_batch_tree(batch, mesh, rules)
+        return {
+            "fn": lambda params, batch: api.prefill_fn(params, batch),
+            "args": (params_abs, batch),
+            "in_shardings": (params_sh, batch_sh),
+            "kind": kind,
+            "cfg": cfg,
+            "rules": rules,
+        }
+
+    # decode: one new token against a cache of length seq_len
+    cache_abs = jax.eval_shape(
+        functools.partial(
+            _init_cache_host, api=api, cfg=cfg, batch=global_batch,
+            max_len=seq_len,
+        )
+    )
+    cache_sh = shard_cache_tree(cache_abs, mesh)
+    tokens = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    tokens_sh = shard_batch_tree(tokens, mesh, rules)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    args = [params_abs, cache_abs, tokens, pos_abs]
+    shardings = [params_sh, cache_sh, tokens_sh, pos_sh]
+    fn = api.decode_fn
+    if cfg.mrope_sections:
+        positions = jax.ShapeDtypeStruct((3, global_batch, 1), jnp.int32)
+        positions_sh = _shard(mesh, positions.shape,
+                              [None, _batch_axes(mesh), None])
+        args.append(positions)
+        shardings.append(positions_sh)
+        fn = lambda p, c, t, pos, positions: api.decode_fn(
+            p, c, t, pos, positions=positions
+        )
+    return {
+        "fn": fn,
+        "args": tuple(args),
+        "in_shardings": tuple(shardings),
+        "kind": kind,
+        "cfg": cfg,
+        "rules": rules,
+    }
+
+
+def _init_cache_host(batch, max_len, *, api, cfg):
+    return api.init_cache(batch, max_len)
+
+
+def _as_f32(tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree
+    )
+
+
+def _train_batch_abs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    b, s = global_batch, seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.compute_dtype)
+    if cfg.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return batch
+
+
+def _prefill_batch_abs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    b, s = global_batch, seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.compute_dtype)
+    if cfg.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return batch

@@ -1,0 +1,114 @@
+"""Griffin / RecurrentGemma: RG-LRU recurrent blocks + local attention,
+interleaved (rec, rec, attn). Train/prefill uses an associative scan
+(log-time recurrence); decode carries (h, conv) state per recurrent
+layer and a rolling window KV cache per attention layer."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.module import spec
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def rglru_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    w = _lru_width(cfg)
+    k = cfg.hybrid.d_conv
+    return {
+        "w_x": spec((d, w), ("embed", "mlp")),
+        "w_gate_branch": spec((d, w), ("embed", "mlp")),
+        "conv_w": spec((k, w), ("conv", "mlp"), init="fanin"),
+        "conv_b": spec((w,), ("mlp",), init="zeros"),
+        "w_input_gate": spec((w, w), ("mlp", None), init="fanin"),
+        "b_input_gate": spec((w,), (None,), init="zeros"),
+        "w_rec_gate": spec((w, w), ("mlp", None), init="fanin"),
+        "b_rec_gate": spec((w,), (None,), init="zeros"),
+        "lam": spec((w,), ("mlp",), init="normal", scale=1.0),
+        "w_out": spec((w, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(u, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + u.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def _gates(params, u, cfg, dt):
+    c = cfg.hybrid.c_factor
+    i_gate = jax.nn.sigmoid(
+        u.astype(jnp.float32) @ params["w_input_gate"].astype(jnp.float32)
+        + params["b_input_gate"].astype(jnp.float32)
+    )
+    r_gate = jax.nn.sigmoid(
+        u.astype(jnp.float32) @ params["w_rec_gate"].astype(jnp.float32)
+        + params["b_rec_gate"].astype(jnp.float32)
+    )
+    log_a = c * r_gate * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * u.astype(jnp.float32))
+    return a, beta
+
+
+def rglru_apply(params, x, cfg: ModelConfig, *, state: Optional[dict] = None):
+    """Recurrent block. state = {"h": (B,W), "conv": (B,K-1,W)} for decode."""
+    dt = cfg.compute_dtype
+    k = cfg.hybrid.d_conv
+    ub = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(dt))
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"].astype(dt))
+    )
+
+    if state is None:
+        u = _causal_conv(ub, params["conv_w"].astype(dt), params["conv_b"].astype(dt))
+        a, beta = _gates(params, u, cfg, dt)  # (B,S,W) fp32
+
+        # h_t = a_t h_{t-1} + beta_t: associative scan over time
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_sc, h = lax.associative_scan(combine, (a, beta), axis=1)
+        out = jnp.einsum(
+            "bsw,wd->bsd", (gate_branch.astype(jnp.float32) * h).astype(dt),
+            params["w_out"].astype(dt),
+        )
+        seq = x.shape[1]
+        tail = ub[:, -(k - 1):, :] if seq >= k - 1 else jnp.pad(
+            ub, ((0, 0), (k - 1 - seq, 0), (0, 0))
+        )
+        final = {"h": h[:, -1].astype(jnp.float32), "conv": tail.astype(jnp.float32)}
+        return out, final
+
+    # ---- decode
+    window = jnp.concatenate([state["conv"].astype(dt), ub], axis=1)  # (B,K,W)
+    u = (
+        jnp.einsum("bkw,kw->bw", window, params["conv_w"].astype(dt))
+        + params["conv_b"].astype(dt)
+    )[:, None, :]
+    a, beta = _gates(params, u, cfg, dt)  # (B,1,W)
+    h = state["h"] * a[:, 0] + beta[:, 0]
+    out = jnp.einsum(
+        "bsw,wd->bsd", (gate_branch.astype(jnp.float32) * h[:, None]).astype(dt),
+        params["w_out"].astype(dt),
+    )
+    conv_new = jnp.concatenate([state["conv"][:, 1:], ub.astype(jnp.float32)], axis=1)
+    return out, {"h": h, "conv": conv_new}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int):
+    w = _lru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.hybrid.d_conv - 1, w), jnp.float32),
+    }

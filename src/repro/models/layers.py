@@ -1,0 +1,364 @@
+"""Layer library: norms, rotary embeddings, attention (GQA/MQA/local/
+KNN/MLA), MLPs. Pure functions over param dicts from module.ParamSpec."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.module import active_mesh, constrain, spec
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def norm_spec(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": spec((d,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": spec((d,), ("embed",), init="ones"),
+            "bias": spec((d,), ("embed",), init="zeros"),
+        }
+    if cfg.norm == "nonparam_ln":  # OLMo: no learnable affine
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(params, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(x32 * x32, -1, keepdims=True)
+        out = x32 * lax.rsqrt(var + 1e-6) * params["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        out = (x32 - mean) * lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(
+                jnp.float32
+            )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+
+
+def _rope_freqs(dh_half: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(dh_half, dtype=jnp.float32) / dh_half))
+
+
+def rope_angles(positions: jax.Array, dh: int, theta: float,
+                mrope_sections: Optional[tuple[int, ...]] = None) -> jax.Array:
+    """positions: (B, S) or (3, B, S) for M-RoPE -> angles (B, S, dh//2)."""
+    half = dh // 2
+    freqs = _rope_freqs(half, theta)  # (half,)
+    if mrope_sections is None:
+        return positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    assert positions.ndim == 3, "M-RoPE needs (3, B, S) position ids"
+    assert sum(mrope_sections) == half, (mrope_sections, half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(mrope_sections):
+        f = freqs[start : start + sec]
+        parts.append(positions[i][..., None].astype(jnp.float32) * f)
+        start += sec
+    return jnp.concatenate(parts, axis=-1)  # (B, S, half)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); angles: (B, S, dh//2). NeoX half-rotation."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+def embed_spec(cfg: ModelConfig):
+    s = {"tokens": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                        init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                            init="fanin")
+    return s
+
+
+def embed_apply(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tokens"], tokens, axis=0).astype(cfg.compute_dtype)
+    return constrain(x, ("batch", "act_seq", "act_embed"))
+
+
+def unembed_apply(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["tokens"].T
+    else:
+        w = params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(cfg.compute_dtype))
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, ("batch", "act_seq", "act_vocab"))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "wi_gate": spec((d, f), ("embed", "mlp")),
+            "wi_up": spec((d, f), ("embed", "mlp")),
+            "wo": spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": spec((d, f), ("embed", "mlp")),
+        "bi": spec((f,), ("mlp",), init="zeros"),
+        "wo": spec((f, d), ("mlp", "embed")),
+        "bo": spec((d,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+        h = constrain(h, ("batch", "act_seq", "act_heads"))
+        return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dt)) + params["bi"].astype(dt)
+    h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", "act_seq", "act_heads"))
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt)) + params["bo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, optional bias, qk-norm, local window, KNN)
+
+
+def attention_spec(cfg: ModelConfig):
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    s = {
+        "wq": spec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": spec((d, kvh, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, kvh, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = spec((h, dh), ("heads", "head_dim"), init="zeros")
+        s["bk"] = spec((kvh, dh), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = spec((kvh, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = spec((dh,), ("head_dim",), init="ones")
+        s["k_norm"] = spec((dh,), ("head_dim",), init="ones")
+    return s
+
+
+def _rms_head(x, scale):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, -1, keepdims=True)
+    return (x32 * lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _qkv(params, x, cfg: ModelConfig, positions, *, rope: bool = True):
+    dt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = _rms_head(q, params["q_norm"])
+        k = _rms_head(k, params["k_norm"])
+    if rope and cfg.rope_theta > 0:  # rope_theta == 0: absolute positions
+        ang = rope_angles(positions, cfg.dh, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+    return q, k, v
+
+
+def _repeat_kv(k, num_heads):
+    """(B,S,KVH,dh) -> (B,S,H,dh) by repetition for grouped-query attn."""
+    kvh = k.shape[2]
+    if kvh == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kvh, axis=2)
+
+
+def mha_chunked(q, k, v, *, causal: bool, window: int = 0,
+                q_offset: Any = 0, kv_len: Optional[jax.Array] = None,
+                q_chunk: int = 512):
+    """Memory-bounded exact attention: iterate query chunks, full softmax
+    over keys per chunk. q: (B,Sq,H,dh), k/v: (B,Skv,KVH,dv).
+
+    Grouped-query form: KV heads are NEVER repeated/materialized — the
+    einsum carries the (kv_head, group) split, so MQA (granite, 48x) and
+    GQA (qwen3, 8x) avoid the repeated-KV memory blowup and GSPMD keeps
+    the cache sharding instead of re-sharding to q-heads (§Perf D2.2).
+
+    q_offset: absolute position of q[0] relative to k[0] (decode uses
+    cache_len). kv_len: valid key prefix (masks cache tail).
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    dv = v.shape[-1]  # may differ from dh (MLA: qk 192, v 128)
+    scale = dh**-0.5
+    qc = min(q_chunk, sq)
+    while sq % qc:
+        qc //= 2
+    nc = sq // qc
+    kpos = jnp.arange(skv)
+
+    def chunk(carry, qi):
+        qblk, start = qi  # (B,qc,H,dh), scalar
+        qg = qblk.reshape(b, qc, kvh, g, dh)
+        logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32)
+        logits = logits * scale
+        qpos = q_offset + start + jnp.arange(qc)
+        mask = jnp.ones((qc, skv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", w, v)
+        return carry, out.reshape(b, qc, h, dv)
+
+    if nc == 1:
+        _, out = chunk(None, (q, jnp.int32(0)))
+        return out
+    qs = q.reshape(b, nc, qc, h, dh).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nc, dtype=jnp.int32) * qc
+    _, outs = lax.scan(chunk, None, (qs, starts))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+
+
+def attention_apply(params, x, cfg: ModelConfig, *, positions,
+                    cache: Optional[dict] = None, pos: Any = None,
+                    memory: Optional[tuple] = None, causal: bool = True):
+    """Full attention forward.
+
+    train/prefill: cache=None -> (out, (k, v)) so callers may build caches.
+    decode: cache={"k","v"} (B,T,KVH,dh) + scalar `pos` -> (out, new_cache).
+    memory: (mk, mv) for cross-attention (q from x, kv precomputed).
+    """
+    dt = cfg.compute_dtype
+    window = cfg.window if cfg.attention == "local" else 0
+
+    if memory is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        if cfg.qkv_bias:
+            q = q + params["bq"].astype(dt)
+        k, v = memory
+        out = mha_chunked(q, k, v, causal=False, q_chunk=cfg.q_chunk)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)), None
+
+    if cache is None:
+        q, k, v = _qkv(params, x, cfg, positions)
+        # NOTE §Perf T3.1 (refuted): constraining just the attention
+        # region to batch-over-model sharding forces a full activation
+        # reshard into and out of every layer (collective term 3.3s ->
+        # 46.9s). The working policy is rule-driven whole-model batch
+        # sharding (ModelConfig.shard_batch_over_model, §Perf T3.2).
+        q = constrain(q, ("batch", "act_seq", "act_heads", None))
+        k = constrain(k, ("batch", "act_seq", "act_kv", None))
+        out = mha_chunked(
+            q, k, v, causal=causal, window=window, q_chunk=cfg.q_chunk
+        )
+        out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return out, (k, v)
+
+    # ---- decode: single new token against the cache (grouped-query,
+    # no KV repetition: the cache keeps its seq/kv-head sharding and the
+    # softmax/AV contraction reduces across shards — flash-decode).
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    b = q.shape[0]
+    kvh, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    t = cache["k"].shape[1]
+    if window > 0:
+        slot = pos % t  # rolling buffer for local attention
+    else:
+        slot = pos
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    qg = q.reshape(b, 1, kvh, g, cfg.dh)
+    logits = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg, k_cache.astype(dt)
+    ).astype(jnp.float32) * cfg.dh**-0.5
+    logits = constrain(logits, ("batch", "act_kv", None, None, "act_cache"))
+    kpos = jnp.arange(t)
+    if window > 0:
+        # rolling buffer: slot s holds absolute position derived from pos
+        abs_pos = jnp.where(kpos <= slot, pos - slot + kpos, pos - slot - t + kpos)
+        mask = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+    else:
+        mask = kpos <= pos
+    logits = jnp.where(mask[None, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w, v_cache.astype(dt))
+    out = out.reshape(b, 1, cfg.num_heads, cfg.dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def knn_attention_apply(params, x, cfg: ModelConfig, *, positions,
+                        cache: Optional[dict] = None, pos: Any = None):
+    """DIGC-backed sparse attention (beyond-paper; attention='knn')."""
+    from repro.core.knn_attention import knn_attention_decode, knn_attention_mha
+
+    dt = cfg.compute_dtype
+    q, k, v = _qkv(params, x, cfg, positions)
+    kk = _repeat_kv(k, cfg.num_heads)
+    vv = _repeat_kv(v, cfg.num_heads)
+    if cache is None:
+        def per_batch(qb, kb, vb):
+            return knn_attention_mha(
+                qb, kb, vb, num_neighbors=cfg.knn_neighbors, causal=True
+            )
+
+        out = jax.vmap(per_batch)(q, kk, vv)
+        out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return out, (k, v)
+    t = cache["k"].shape[1]
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    kk = _repeat_kv(k_cache.astype(dt), cfg.num_heads)
+    vv = _repeat_kv(v_cache.astype(dt), cfg.num_heads)
+
+    def per_batch(qb, kb, vb):
+        return knn_attention_decode(
+            qb, kb, vb, pos + 1, num_neighbors=cfg.knn_neighbors
+        )
+
+    out = jax.vmap(per_batch)(q[:, 0], kk, vv)  # (B,H,dh)
+    out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(dt))[:, None]
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (DeepSeek-V2). KV compressed to a small
+latent (kv_lora) + a shared RoPE key; decode uses the absorbed form so
+the cache stays (B, T, kv_lora + rope_dim) — the memory win that lets
+V2-Lite serve long contexts."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import NEG_INF, apply_rope, mha_chunked, rope_angles
+from repro.models.module import spec
+
+
+def mla_spec(cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": spec((d, h, qk), ("embed", "heads", "head_dim")),
+        "w_dkv": spec((d, m.kv_lora), ("embed", "kv_lora")),
+        "w_kpe": spec((d, m.qk_rope_dim), ("embed", "head_dim")),
+        "kv_norm": spec((m.kv_lora,), ("kv_lora",), init="ones"),
+        "w_uk": spec((m.kv_lora, h, m.qk_nope_dim), ("kv_lora", "heads", "head_dim")),
+        "w_uv": spec((m.kv_lora, h, m.v_dim), ("kv_lora", "heads", "head_dim")),
+        "wo": spec((h, m.v_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _rms(x, scale):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, -1, keepdims=True)
+    return (x32 * lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _compress(params, x, cfg: ModelConfig, positions):
+    """x -> (c_kv (B,S,lora), k_pe (B,S,rope)) cache entries."""
+    m = cfg.mla
+    dt = cfg.compute_dtype
+    c_kv = jnp.einsum("bsd,dl->bsl", x, params["w_dkv"].astype(dt))
+    c_kv = _rms(c_kv, params["kv_norm"])
+    k_pe = jnp.einsum("bsd,dr->bsr", x, params["w_kpe"].astype(dt))
+    ang = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], ang)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def _queries(params, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    dt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope = q[..., : m.qk_nope_dim]
+    q_pe = apply_rope(
+        q[..., m.qk_nope_dim :],
+        rope_angles(positions, m.qk_rope_dim, cfg.rope_theta),
+    )
+    return q_nope, q_pe
+
+
+def mla_apply(params, x, cfg: ModelConfig, *, positions,
+              cache: Optional[dict] = None, pos: Any = None):
+    """Returns (out, cache_entries). Cache = {"c_kv", "k_pe"}."""
+    m = cfg.mla
+    dt = cfg.compute_dtype
+    h = cfg.num_heads
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+    if cache is None:
+        # train / prefill: expand per-head keys and values from the latent.
+        c_kv, k_pe = _compress(params, x, cfg, positions)
+        q_nope, q_pe = _queries(params, x, cfg, positions)
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("bsl,lhk->bshk", c_kv, params["w_uv"].astype(dt))
+        q_cat = jnp.concatenate([q_nope, q_pe], -1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], q_pe.shape[:1] + k_pe.shape[1:2] + (h, m.qk_rope_dim))],
+            -1,
+        )
+        out = mha_chunked(q_cat, k_cat, v, causal=True, q_chunk=cfg.q_chunk)
+        out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return out, (c_kv, k_pe)
+
+    # decode: absorbed attention directly in the latent space.
+    c_new, kpe_new = _compress(params, x, cfg, positions)
+    c_cache = lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, 1
+    )
+    kpe_cache = lax.dynamic_update_slice_in_dim(
+        cache["k_pe"], kpe_new.astype(cache["k_pe"].dtype), pos, 1
+    )
+    q_nope, q_pe = _queries(params, x, cfg, positions)  # (B,1,H,*)
+    # absorb W_uk into the query: q_lat = q_nope @ W_uk^T per head
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["w_uk"].astype(dt))
+    logits = (
+        jnp.einsum("bshl,btl->bhst", q_lat, c_cache.astype(dt))
+        + jnp.einsum("bshr,btr->bhst", q_pe, kpe_cache.astype(dt))
+    ).astype(jnp.float32) * scale
+    t = c_cache.shape[1]
+    mask = jnp.arange(t) <= pos
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhst,btl->bshl", w, c_cache.astype(dt))
+    out = jnp.einsum("bshl,lhk->bshk", ctx, params["w_uv"].astype(dt))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, {"c_kv": c_cache, "k_pe": kpe_cache}

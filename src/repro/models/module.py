@@ -1,0 +1,242 @@
+"""Minimal param-spec module system.
+
+Models declare their parameters as a nested dict of ``ParamSpec`` leaves
+(shape / dtype / logical axes / initializer). From one spec tree we
+derive:
+
+  * ``init_params``     -- materialized arrays (smoke tests, examples)
+  * ``abstract_params`` -- ShapeDtypeStructs (the multi-pod dry-run
+    lowers 72B-parameter models without allocating a byte)
+  * ``logical_axes``    -- pytree of logical axis-name tuples
+  * ``make_shardings``  -- NamedShardings from logical->mesh rules
+
+Logical axis names are mapped to mesh axes by a rules dict
+(MaxText-style), so the same model definition runs on any mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# ---------------------------------------------------------------------------
+# Param specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical axis names (len == ndim)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed | fanin
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="fanin", dtype=jnp.float32, scale=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree):
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree)
+
+
+def logical_axes(spec_tree):
+    return _tree_map(lambda s: s.axes, spec_tree)
+
+
+def _init_leaf(s: ParamSpec, key) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "normal":
+        sd = s.scale if s.scale is not None else 0.02
+        return (jax.random.normal(key, s.shape) * sd).astype(s.dtype)
+    if s.init == "embed":
+        sd = s.scale if s.scale is not None else 1.0
+        return (jax.random.normal(key, s.shape) * sd).astype(s.dtype)
+    if s.init == "fanin":
+        fan_in = s.shape[0] if len(s.shape) >= 1 else 1
+        # contraction dim is the first axis by convention here
+        sd = s.scale if s.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, s.shape) * sd).astype(s.dtype)
+    raise ValueError(f"unknown init {s.init!r}")
+
+
+def init_params(spec_tree, rng: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    arrays = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+
+# Default logical-axis -> mesh-axis mapping. "model" carries tensor/expert
+# parallelism; "data" carries FSDP (ZeRO-3) sharding of the d_model /
+# embed dimension of parameters; batch is sharded over (pod, data).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    # attention fallback when heads % TP != 0: batch takes the model
+    # axis too (data+model first so single-pod meshes fully shard)
+    "attn_batch": ("data", "model", "pod"),
+    "embed": "data",  # FSDP axis for params
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_lora": None,
+    "head_dim": None,
+    "state": None,
+    "conv": None,
+    "seq": None,
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_vocab": "model",
+    "act_kv": None,
+    "act_cache": "model",  # decode logits' cache-seq dim (flash-decode)
+    "stage": "stage",
+    "layers": None,
+}
+
+
+def rules_for(cfg) -> dict:
+    """Sharding rules adjusted for the config's parallelism policy."""
+    if getattr(cfg, "shard_batch_over_model", False):
+        r = dict(DEFAULT_RULES)
+        r["batch"] = ("data", "model", "pod")
+        r["act_heads"] = None  # heads replicated; batch covers model
+        r["act_kv"] = None
+        r["act_vocab"] = None  # logits batch-sharded instead
+        r["act_cache"] = None
+        return r
+    return DEFAULT_RULES
+
+
+def mesh_axes_for(axes: Sequence[Optional[str]], rules: Mapping[str, Any],
+                  mesh: Mesh) -> PartitionSpec:
+    """Translate logical axes to a PartitionSpec valid for `mesh`."""
+    names = set(mesh.axis_names)
+    out = []
+    for ax in axes:
+        target = rules.get(ax) if ax is not None else None
+        if target is None:
+            out.append(None)
+            continue
+        if isinstance(target, str):
+            out.append(target if target in names else None)
+        else:  # tuple of axes; keep the ones present in this mesh
+            kept = tuple(t for t in target if t in names)
+            out.append(kept if kept else None)
+    return PartitionSpec(*out)
+
+
+def make_shardings(spec_tree, mesh: Mesh, rules: Mapping[str, Any] = DEFAULT_RULES):
+    def one(s: ParamSpec):
+        ps = mesh_axes_for(s.axes, rules, mesh)
+        ps = _drop_indivisible(s.shape, ps, mesh)
+        return NamedSharding(mesh, ps)
+
+    return _tree_map(one, spec_tree)
+
+
+def _drop_indivisible(shape, ps: PartitionSpec, mesh: Mesh) -> PartitionSpec:
+    """Drop mesh axes that don't divide the dim (keeps GSPMD happy without
+    padding surprises; e.g. kv_heads=1 can't shard 16 ways)."""
+    out = []
+    for dim, entry in zip(shape, tuple(ps) + (None,) * (len(shape) - len(ps))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = 1
+        kept = []
+        for a in axes:
+            size = mesh.shape[a]
+            if dim % (total * size) == 0:
+                kept.append(a)
+                total *= size
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return PartitionSpec(*out)
+
+
+def scan_or_unroll(body, carry, xs, use_scan: bool):
+    """`lax.scan` or a Python unroll with identical semantics.
+
+    The dry-run unrolls because XLA's HloCostAnalysis counts a while
+    loop body ONCE (trip count unknown at that level) — unrolled HLO
+    gives exact per-step flops/bytes/collective totals."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys_list = []
+    for i in range(length):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys_list.append(y)
+    ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys_list)
+    return carry, ys
+
+
+# Explicit (mesh, rules) context for activation sharding constraints.
+# Must be active while the step function is *traced* (jit(...).lower
+# under `with use_mesh(mesh)`), which is how launch/dryrun.py drives it.
+_ACTIVE_MESH: list[tuple[Mesh, Mapping[str, Any]]] = []
+
+
+class use_mesh:
+    """Context manager making `mesh` (+ sharding rules) visible to
+    `constrain`."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Mapping[str, Any]] = None):
+        self.mesh = mesh
+        self.rules = rules if rules is not None else DEFAULT_RULES
+
+    def __enter__(self):
+        _ACTIVE_MESH.append((self.mesh, self.rules))
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH.pop()
+        return False
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH[-1][0] if _ACTIVE_MESH else None
+
+
+def active_rules() -> Mapping[str, Any]:
+    return _ACTIVE_MESH[-1][1] if _ACTIVE_MESH else DEFAULT_RULES
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]],
+              rules: Optional[Mapping[str, Any]] = None) -> jax.Array:
+    """Activation sharding constraint by logical axes. No-op when no
+    mesh context is active (single-device smoke tests)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    rules = rules if rules is not None else active_rules()
+    ps = mesh_axes_for(axes, rules, mesh)
+    ps = _drop_indivisible(x.shape, ps, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))

@@ -1,0 +1,187 @@
+"""Mamba-2 (state-space duality / SSD) layer.
+
+Chunked SSD for train/prefill (intra-chunk quadratic + inter-chunk
+linear state recurrence) and an O(1)-per-token stateful decode step.
+Shapes follow the minimal-SSD formulation: heads H = d_inner/head_dim,
+scalar decay per head, B/C shared across heads (n_groups=1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.module import spec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, heads, conv_dim
+
+
+def ssm_spec(cfg: ModelConfig):
+    s, d_in, heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": spec(
+            (d, 2 * d_in + 2 * s.n_groups * s.d_state + heads), ("embed", "mlp")
+        ),
+        "conv_w": spec((s.d_conv, conv_dim), ("conv", "mlp"), init="fanin"),
+        "conv_b": spec((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": spec((heads,), ("heads",), init="zeros"),
+        "d_skip": spec((heads,), ("heads",), init="ones"),
+        "dt_bias": spec((heads,), ("heads",), init="zeros"),
+        "norm": spec((d_in,), ("mlp",), init="ones"),
+        "out_proj": spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _split(zxbcdt, cfg):
+    s, d_in, heads, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """xbc (B,S,C), w (K,C): depthwise causal conv along S."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, scale):
+    y32 = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(y32 * y32, -1, keepdims=True)
+    return (y32 * lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """Minimal SSD. xh (B,S,H,P), dt (B,S,H), a (H,) negative,
+    b/c (B,S,N). Returns y (B,S,H,P), final state (B,H,N,P)."""
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    xd = xh * dt[..., None]  # fold dt into inputs
+    la = dt * a  # (B,S,H) log-decay per step
+    # chunked views
+    xd_c = xd.reshape(bsz, nc, q, h, p)
+    la_c = la.reshape(bsz, nc, q, h)
+    b_c = bmat.reshape(bsz, nc, q, n)
+    c_c = cmat.reshape(bsz, nc, q, n)
+    cum = jnp.cumsum(la_c, axis=2)  # (B,nc,q,H)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)  # (B,nc,i,j)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, lmat, xd_c)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) B_j xd_j^T
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", b_c, decay_states, xd_c)
+
+    # inter-chunk recurrence over nc (sequential scan)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def step(hprev, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    init = jnp.zeros((bsz, h, n, p), xh.dtype)
+    hfinal, hprevs = lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state before chunk
+
+    # inter-chunk contribution: C_i · h_prev scaled by exp(cum_i)
+    y_off = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", c_c, jnp.exp(cum), hprevs
+    )
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, hfinal
+
+
+def ssm_apply(params, x, cfg: ModelConfig, *, state: Optional[dict] = None):
+    """Mamba-2 block.
+
+    train/prefill: state=None -> (out, final_state) where final_state =
+    {"h": (B,H,N,P), "conv": (B,K-1,convdim)}.
+    decode: state given, x is (B,1,D) -> (out, new_state).
+    """
+    s, d_in, heads, conv_dim = _dims(cfg)
+    dt_ = cfg.compute_dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xbc_raw, dtp = _split(zxbcdt, cfg)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,)
+
+    if state is None:
+        xbc = _causal_conv(xbc_raw, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+        xin = xbc[..., :d_in]
+        bmat = xbc[..., d_in : d_in + s.d_state].astype(jnp.float32)
+        cmat = xbc[..., d_in + s.d_state :].astype(jnp.float32)
+        dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+        bsz, seq = x.shape[:2]
+        xh = xin.reshape(bsz, seq, heads, s.head_dim).astype(jnp.float32)
+        y, hfinal = _ssd_chunked(xh, dt, a, bmat, cmat, s.chunk)
+        y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+        y = y.reshape(bsz, seq, d_in).astype(dt_)
+        y = _gated_norm(y, z, params["norm"])
+        out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+        k = s.d_conv
+        conv_tail = xbc_raw[:, -(k - 1) :, :] if seq >= k - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (k - 1 - seq, 0), (0, 0))
+        )
+        return out, {"h": hfinal.astype(jnp.float32), "conv": conv_tail}
+
+    # ---- decode (single token)
+    conv_prev = state["conv"]  # (B, K-1, convdim)
+    k = s.d_conv
+    window = jnp.concatenate([conv_prev.astype(dt_), xbc_raw], axis=1)  # (B,K,convdim)
+    w = params["conv_w"].astype(dt_)
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dt_)
+    )[:, None, :]
+    xin = xbc[..., :d_in]
+    bmat = xbc[..., d_in : d_in + s.d_state].astype(jnp.float32)[:, 0]  # (B,N)
+    cmat = xbc[..., d_in + s.d_state :].astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(
+        dtp[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    bsz = x.shape[0]
+    xh = xin.reshape(bsz, heads, s.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    h_new = state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", bmat, dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat, h_new)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, d_in).astype(dt_)
+    y = _gated_norm(y, z, params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    conv_new = jnp.concatenate([conv_prev[:, 1:], xbc_raw.astype(conv_prev.dtype)], axis=1)
+    return out, {"h": h_new, "conv": conv_new}
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int):
+    s, d_in, heads, conv_dim = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, heads, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.float32),
+    }

@@ -1,0 +1,398 @@
+"""Decoder-only LM assembly for every assigned family.
+
+One config-driven model: dense GQA (qwen/olmo/granite), qk-norm
+(qwen3), MLA+MoE (deepseek), routed MoE (qwen3-moe), SSD (mamba2),
+RG-LRU hybrid (recurrentgemma), M-RoPE VLM backbone (qwen2-vl).
+
+Layers are scanned (stacked params, `lax.scan`) so the lowered HLO is
+O(1) in depth — required to compile 88-94 layer models quickly — with a
+configurable remat policy on the block body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.griffin import rglru_apply, rglru_init_state, rglru_spec
+from repro.models.layers import (
+    attention_apply,
+    attention_spec,
+    embed_apply,
+    embed_spec,
+    knn_attention_apply,
+    mlp_apply,
+    mlp_spec,
+    norm_apply,
+    norm_spec,
+    unembed_apply,
+)
+from repro.models.mla import mla_apply, mla_spec
+from repro.models.module import ParamSpec, constrain, is_spec, scan_or_unroll
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.ssm import ssm_apply, ssm_init_state, ssm_spec
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+
+
+def stack_specs(tree, n: int):
+    def one(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale)
+
+    return jax.tree_util.tree_map(one, tree, is_leaf=is_spec)
+
+
+def _attn_spec(cfg: ModelConfig):
+    return mla_spec(cfg) if cfg.mla else attention_spec(cfg)
+
+
+def _mixer_layer_spec(cfg: ModelConfig, kind: str):
+    """One residual layer: temporal mixer + channel mixer."""
+    if kind == "ssm":
+        return {"ln1": norm_spec(cfg), "ssm": ssm_spec(cfg)}
+    s = {"ln1": norm_spec(cfg), "ln2": norm_spec(cfg)}
+    s["mix"] = rglru_spec(cfg) if kind == "rec" else _attn_spec(cfg)
+    s["mlp"] = moe_spec(cfg) if (cfg.moe and kind == "attn_moe") else mlp_spec(cfg)
+    return s
+
+
+def _layer_kind(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.moe:
+        return "attn_moe"
+    return "attn"
+
+
+def param_spec(cfg: ModelConfig):
+    p: dict[str, Any] = {"embed": embed_spec(cfg), "final_norm": norm_spec(cfg)}
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        n_groups = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - n_groups * len(pat)
+        group = {
+            f"l{i}_{kind}": _mixer_layer_spec(cfg, "rec" if kind == "rec" else "attn")
+            for i, kind in enumerate(pat)
+        }
+        p["groups"] = stack_specs(group, n_groups)
+        if rem:
+            p["rem"] = {
+                f"l{i}_rec": _mixer_layer_spec(cfg, "rec") for i in range(rem)
+            }
+        return p
+    p["layers"] = stack_specs(_mixer_layer_spec(cfg, _layer_kind(cfg)), cfg.num_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def _apply_mixer(lp, x, cfg: ModelConfig, kind: str, *, positions,
+                 cache=None, pos=None):
+    """Temporal mixing sublayer. Returns (out, cache_entry)."""
+    if kind == "ssm":
+        return ssm_apply(lp["ssm"], x, cfg, state=cache)
+    if kind == "rec":
+        return rglru_apply(lp["mix"], x, cfg, state=cache)
+    if cfg.mla:
+        return mla_apply(lp["mix"], x, cfg, positions=positions, cache=cache, pos=pos)
+    if cfg.attention == "knn":
+        return knn_attention_apply(
+            lp["mix"], x, cfg, positions=positions, cache=cache, pos=pos
+        )
+    return attention_apply(lp["mix"], x, cfg, positions=positions, cache=cache, pos=pos)
+
+
+def _block(lp, x, cfg: ModelConfig, kind: str, *, positions, cache=None, pos=None):
+    """One residual layer: x + mixer(norm(x)); x + mlp(norm(x))."""
+    metrics = {}
+    h = norm_apply(lp["ln1"], x, cfg)
+    mix_out, cache_entry = _apply_mixer(
+        lp, h, cfg, kind, positions=positions, cache=cache, pos=pos
+    )
+    x = x + mix_out
+    if kind != "ssm":  # mamba2 blocks have no separate channel mixer
+        h = norm_apply(lp["ln2"], x, cfg)
+        if cfg.moe and kind != "rec":
+            mlp_out, metrics = moe_apply(lp["mlp"], h, cfg)
+        else:
+            mlp_out = mlp_apply(lp["mlp"], h, cfg)
+        x = x + mlp_out
+    x = constrain(x, ("batch", "act_seq", "act_embed"))
+    aux = metrics.get("moe_aux", jnp.float32(0.0))
+    drop = metrics.get("moe_drop_frac", jnp.float32(0.0))
+    return x, cache_entry, aux, drop
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, positions=None,
+            return_cache: bool = False):
+    """tokens (B,S) -> logits (B,S,V) [+ layer caches for prefill]."""
+    b, s = tokens.shape[-2:] if tokens.ndim >= 2 else (1, tokens.shape[0])
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions, (3, b, s))
+    x = embed_apply(params["embed"], tokens, cfg)
+
+    aux_total = jnp.float32(0.0)
+    drop_total = jnp.float32(0.0)
+    caches = None
+
+    if cfg.family == "hybrid":
+        x, caches, aux_total, drop_total = _hybrid_forward(
+            params, x, cfg, positions, return_cache
+        )
+    else:
+        kind = _layer_kind(cfg)
+
+        def body(carry, lp):
+            h = carry
+            h, cache_entry, aux, drop = _block(
+                lp, h, cfg, kind, positions=positions
+            )
+            ys = (cache_entry if return_cache else None, aux, drop)
+            return h, ys
+
+        body = _remat(body, cfg)
+        x, (caches, auxs, drops) = scan_or_unroll(
+            body, x, params["layers"], cfg.scan_layers
+        )
+        aux_total = jnp.sum(auxs)
+        drop_total = jnp.mean(drops)
+
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg)
+    metrics = {"moe_aux": aux_total, "moe_drop_frac": drop_total}
+    if return_cache:
+        return logits, caches, metrics
+    return logits, metrics
+
+
+def _hybrid_forward(params, x, cfg: ModelConfig, positions, return_cache):
+    pat = cfg.hybrid.pattern
+
+    def group_body(carry, gp):
+        h = carry
+        entries = {}
+        for i, kind in enumerate(pat):
+            lp = gp[f"l{i}_{kind}"]
+            h, ce, _, _ = _block(lp, h, cfg, kind, positions=positions)
+            entries[f"l{i}_{kind}"] = ce if return_cache else None
+        return h, entries
+
+    group_body = _remat(group_body, cfg)
+    x, group_caches = scan_or_unroll(
+        group_body, x, params["groups"], cfg.scan_layers
+    )
+    rem_caches = {}
+    if "rem" in params:
+        for name, lp in params["rem"].items():
+            x, ce, _, _ = _block(lp, x, cfg, "rec", positions=positions)
+            rem_caches[name] = ce if return_cache else None
+    caches = {"groups": group_caches, "rem": rem_caches} if return_cache else None
+    return x, caches, jnp.float32(0.0), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+
+
+def softmax_xent(logits, labels):
+    """CE without gathering along the (model-sharded) vocab axis: the
+    gather would force SPMD to replicate the full logits tensor (13 GB/
+    device at olmo train_4k). The iota-match reduction is shard-local;
+    only the scalar per-token sums cross shards."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    viota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(viota == labels[..., None], logits.astype(jnp.float32), 0.0),
+        axis=-1,
+    )
+    return logz - gold
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: tokens (B,S), labels (B,S), mask (B,S)."""
+    logits, metrics = forward(params, batch["tokens"], cfg,
+                              positions=batch.get("positions"))
+    nll = softmax_xent(logits, batch["labels"])
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = loss + 0.01 * metrics["moe_aux"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Functional decode cache, leading `layers` dim where scanned."""
+    dt = cfg.compute_dtype
+
+    def attn_entry():
+        if cfg.mla:
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((batch, max_len, m.kv_lora), dt),
+                "k_pe": jnp.zeros((batch, max_len, m.qk_rope_dim), dt),
+            }
+        t = max_len if cfg.attention != "local" else min(cfg.window, max_len)
+        return {
+            "k": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.dh), dt),
+            "v": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.dh), dt),
+        }
+
+    if cfg.family == "ssm":
+        one = ssm_init_state(cfg, batch)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
+        )
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        n_groups = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - n_groups * len(pat)
+        group = {}
+        for i, kind in enumerate(pat):
+            one = rglru_init_state(cfg, batch) if kind == "rec" else attn_entry()
+            group[f"l{i}_{kind}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one
+            )
+        return {
+            "groups": group,
+            "rem": {f"l{i}_rec": rglru_init_state(cfg, batch) for i in range(rem)},
+        }
+    one = attn_entry()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
+    )
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *, positions=None):
+    """One decode step. tokens (B,1); pos scalar int32 (write slot /
+    absolute position). Returns (logits (B,1,V), new_cache)."""
+    b = tokens.shape[0]
+    if positions is None:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions, (3, b, 1))
+    x = embed_apply(params["embed"], tokens, cfg)
+
+    if cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(params, cache, x, cfg, positions, pos)
+    else:
+        kind = _layer_kind(cfg)
+
+        def body(carry, xs):
+            h = carry
+            lp, layer_cache = xs
+            h, new_entry, _, _ = _block(
+                lp, h, cfg, kind, positions=positions, cache=layer_cache, pos=pos
+            )
+            return h, new_entry
+
+        x, new_cache = scan_or_unroll(
+            body, x, (params["layers"], cache), cfg.scan_layers
+        )
+
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def _hybrid_decode(params, cache, x, cfg: ModelConfig, positions, pos):
+    pat = cfg.hybrid.pattern
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gc = xs
+        new_entries = {}
+        for i, kind in enumerate(pat):
+            name = f"l{i}_{kind}"
+            h, ce, _, _ = _block(
+                gp[name], h, cfg, kind, positions=positions, cache=gc[name], pos=pos
+            )
+            new_entries[name] = ce
+        return h, new_entries
+
+    x, new_groups = scan_or_unroll(
+        group_body, x, (params["groups"], cache["groups"]), cfg.scan_layers
+    )
+    new_rem = {}
+    for name, lp in params.get("rem", {}).items():
+        x, ce, _, _ = _block(
+            lp, x, cfg, "rec", positions=positions, cache=cache["rem"][name], pos=pos
+        )
+        new_rem[name] = ce
+    return x, {"groups": new_groups, "rem": new_rem}
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len: Optional[int] = None,
+            positions=None):
+    """Run the prompt, return (logits, cache ready for decode_step at
+    pos = S)."""
+    logits, caches, _ = forward(
+        params, tokens, cfg, positions=positions, return_cache=True
+    )
+    if cfg.family in ("ssm", "hybrid"):
+        return logits, caches  # states are already decode-ready
+    s = tokens.shape[1]
+    max_len = max_len or s
+    window = cfg.window if cfg.attention == "local" else 0
+
+    # stacked caches have a leading `layers` dim: seq axis is 2.
+    def pad_kv(kv):
+        k, v = kv
+        if window:
+            k, v = k[:, :, -window:], v[:, :, -window:]
+            tgt = min(window, max_len)
+        else:
+            tgt = max_len
+        pad = tgt - k.shape[2]
+        if pad > 0:
+            pw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, pw)
+            v = jnp.pad(v, pw)
+        return {"k": k, "v": v}
+
+    if cfg.mla:
+        def pad_mla(kv):
+            c, kp = kv
+            pad = max_len - c.shape[2]
+            if pad > 0:
+                pw = ((0, 0), (0, 0), (0, pad), (0, 0))
+                c = jnp.pad(c, pw)
+                kp = jnp.pad(kp, pw)
+            return {"c_kv": c, "k_pe": kp}
+
+        cache = jax.tree_util.tree_map(
+            pad_mla, caches, is_leaf=lambda t: isinstance(t, tuple)
+        )
+    else:
+        cache = jax.tree_util.tree_map(
+            pad_kv, caches, is_leaf=lambda t: isinstance(t, tuple)
+        )
+    return logits, cache

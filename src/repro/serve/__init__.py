@@ -1,0 +1,1 @@
+# Serving substrate: KV caches, slot-based continuous batching.

@@ -1,0 +1,97 @@
+"""AdamW with fp32 master weights, cosine schedule, global-norm clip.
+
+Optimizer state is sharded identically to the parameters (the ZeRO-3
+property falls out of the FSDP param sharding rules: every state tensor
+inherits the param's NamedSharding)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment  (fp32, param-sharded)
+    nu: Any  # second moment (fp32, param-sharded)
+    master: Any  # fp32 master copy of params
+
+
+def lr_at(step, oc: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_frac + (1 - oc.min_lr_frac) * cos)
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+    master = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, params),
+        nu=jax.tree_util.tree_map(f32, params),
+        master=master,
+    )
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(grads, opt_state: OptState, oc: OptConfig, params_dtype=None):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(step, oc)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / bc1
+        nu_hat = nu / bc2
+        new_master = master - lr * (
+            mu_hat / (jnp.sqrt(nu_hat) + oc.eps) + oc.weight_decay * master
+        )
+        return mu, nu, new_master
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state.mu)
+    flat_nu = treedef.flatten_up_to(opt_state.nu)
+    flat_ma = treedef.flatten_up_to(opt_state.master)
+    out = [upd(g, m, n, w) for g, m, n, w in zip(flat_g, flat_mu, flat_nu, flat_ma)]
+    mu = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    master = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    dt = params_dtype
+    new_params = jax.tree_util.tree_map(
+        lambda w, g: w.astype(g.dtype if dt is None else dt), master, grads
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, mu, nu, master), metrics

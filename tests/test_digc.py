@@ -1,0 +1,182 @@
+"""DIGC correctness: reference vs blocked streaming, semantics, properties."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BIG, digc, digc_blocked, digc_reference, pairwise_sq_dists
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def assert_same_valid(i_a, d_a, i_b, d_b):
+    """Indices must agree wherever entries are valid; validity must agree."""
+    va = np.asarray(d_a) < BIG / 2
+    vb = np.asarray(d_b) < BIG / 2
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(
+        np.where(va, np.asarray(i_a), -1), np.where(vb, np.asarray(i_b), -1)
+    )
+    np.testing.assert_allclose(
+        np.where(va, np.asarray(d_a), 0.0),
+        np.where(vb, np.asarray(d_b), 0.0),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("n,m,d", [(16, 16, 8), (64, 33, 17), (100, 128, 48), (7, 200, 3)])
+@pytest.mark.parametrize("k,dil", [(1, 1), (4, 1), (3, 2)])
+def test_blocked_matches_reference(n, m, d, k, dil):
+    if k * dil > m:
+        pytest.skip("kd > M")
+    rng = np.random.default_rng(n * 1000 + m)
+    x, y = _rand(rng, n, d), _rand(rng, m, d)
+    i_r, d_r = digc_reference(x, y, k=k, dilation=dil, return_dists=True)
+    i_b, d_b = digc_blocked(x, y, k=k, dilation=dil, block_m=32, return_dists=True)
+    assert_same_valid(i_r, d_r, i_b, d_b)
+
+
+@pytest.mark.parametrize("block_m", [8, 16, 64, 256, 1024])
+def test_blocked_block_size_invariance(block_m):
+    rng = np.random.default_rng(0)
+    x, y = _rand(rng, 50, 12), _rand(rng, 70, 12)
+    i_r = digc_reference(x, y, k=5)
+    i_b = digc_blocked(x, y, k=5, block_m=block_m)
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_b))
+
+
+def test_pos_bias_changes_selection():
+    rng = np.random.default_rng(1)
+    x, y = _rand(rng, 20, 8), _rand(rng, 30, 8)
+    p = jnp.zeros((20, 30)).at[:, 0].set(-1e6)  # co-node 0 irresistibly close
+    i_b = digc_blocked(x, y, k=3, pos_bias=p, block_m=16)
+    assert bool(jnp.all(i_b[:, 0] == 0))
+
+
+def test_pos_bias_agreement():
+    rng = np.random.default_rng(2)
+    x, y = _rand(rng, 40, 8), _rand(rng, 50, 8)
+    p = _rand(rng, 40, 50) * 0.3
+    i_r, d_r = digc_reference(x, y, k=4, pos_bias=p, return_dists=True)
+    i_b, d_b = digc_blocked(x, y, k=4, pos_bias=p, block_m=16, return_dists=True)
+    assert_same_valid(i_r, d_r, i_b, d_b)
+
+
+def test_causal_masks_future():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 32, 8)
+    for impl in ("reference", "blocked"):
+        i, d = digc(x, k=4, causal=True, impl=impl, return_dists=True)
+        valid = np.asarray(d) < BIG / 2
+        rows = np.arange(32)[:, None]
+        assert np.all(np.where(valid, np.asarray(i) <= rows, True))
+        # row r has min(r+1, k) valid entries
+        assert np.array_equal(valid.sum(1), np.minimum(np.arange(32) + 1, 4))
+
+
+def test_self_graph_nearest_is_self():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, 30, 16)
+    i = digc(x, k=3, impl="blocked")
+    np.testing.assert_array_equal(np.asarray(i[:, 0]), np.arange(30))
+
+
+def test_dilation_subsamples_sorted_list():
+    rng = np.random.default_rng(5)
+    x, y = _rand(rng, 25, 8), _rand(rng, 60, 8)
+    i_full, d_full = digc_reference(x, y, k=8, dilation=1, return_dists=True)
+    i_dil = digc_reference(x, y, k=4, dilation=2)
+    np.testing.assert_array_equal(np.asarray(i_full[:, ::2][:, :4]), np.asarray(i_dil))
+
+
+def test_kd_exceeds_m_raises():
+    rng = np.random.default_rng(6)
+    x, y = _rand(rng, 10, 4), _rand(rng, 5, 4)
+    with pytest.raises(ValueError):
+        digc_reference(x, y, k=3, dilation=2)
+    with pytest.raises(ValueError):
+        digc_blocked(x, y, k=6)
+
+
+def test_distances_sorted_ascending():
+    rng = np.random.default_rng(7)
+    x, y = _rand(rng, 40, 8), _rand(rng, 90, 8)
+    _, d = digc_blocked(x, y, k=10, return_dists=True, block_m=32)
+    d = np.asarray(d)
+    assert np.all(np.diff(d, axis=1) >= -1e-5)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((32, 16)), jnp.bfloat16)
+    y = jnp.asarray(rng.standard_normal((48, 16)), jnp.bfloat16)
+    i_r = digc_reference(x, y, k=4)
+    i_b = digc_blocked(x, y, k=4, block_m=16)
+    # fp32 compute inside: identical results
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    m=st.integers(2, 60),
+    d=st.integers(1, 24),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_blocked_equals_reference(n, m, d, k, seed):
+    if k > m:
+        k = m
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, n, d), _rand(rng, m, d)
+    i_r, d_r = digc_reference(x, y, k=k, return_dists=True)
+    i_b, d_b = digc_blocked(x, y, k=k, block_m=16, return_dists=True)
+    assert_same_valid(i_r, d_r, i_b, d_b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 8))
+def test_property_neighbors_are_true_knn(seed, k):
+    """The returned set must equal the brute-force numpy KNN set."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, 20, 6), _rand(rng, 30, 6)
+    idx = np.asarray(digc_blocked(x, y, k=k, block_m=8))
+    d = np.asarray(pairwise_sq_dists(x, y))
+    brute = np.argsort(d, axis=1, kind="stable")[:, :k]
+    # compare as sets per row with distance multiset (ties tolerated)
+    for r in range(20):
+        np.testing.assert_allclose(
+            np.sort(d[r, idx[r]]), np.sort(d[r, brute[r]]), rtol=1e-5, atol=1e-5
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_permutation_equivariance(seed):
+    """Permuting co-nodes permutes indices: idx' = perm^{-1} applied."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, 15, 5), _rand(rng, 25, 5)
+    perm = rng.permutation(25)
+    y_p = y[perm]
+    i0, d0 = digc_blocked(x, y, k=3, return_dists=True, block_m=8)
+    i1, d1 = digc_blocked(x, y_p, k=3, return_dists=True, block_m=8)
+    # distances invariant under co-node permutation
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5, atol=1e-5)
+    # mapped indices point at identical feature rows
+    np.testing.assert_allclose(
+        np.asarray(y)[np.asarray(i0)], np.asarray(y_p)[np.asarray(i1)], rtol=1e-6
+    )
+
+
+def test_jit_blocked():
+    rng = np.random.default_rng(9)
+    x, y = _rand(rng, 32, 8), _rand(rng, 64, 8)
+    f = jax.jit(lambda a, b: digc_blocked(a, b, k=4))
+    np.testing.assert_array_equal(
+        np.asarray(f(x, y)), np.asarray(digc_reference(x, y, k=4))
+    )

@@ -1,0 +1,87 @@
+"""Optimized kernel variants (§Perf iterations): packed keys, bf16 MXU,
+bucketed pre-reduction — correctness/recall guarantees vs the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.digc_topk import _pack_keys, _unpack_keys
+
+
+def _recall(i_ref, i_k):
+    a, b = np.asarray(i_ref), np.asarray(i_k)
+    return np.mean([len(set(a[i]) & set(b[i])) / a.shape[1]
+                    for i in range(a.shape[0])])
+
+
+def test_pack_unpack_roundtrip_order():
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(np.sort(rng.standard_normal(256) * 100), jnp.float32)
+    idx = jnp.arange(256, dtype=jnp.int32)
+    keys = _pack_keys(d, idx, idx_bits=8)
+    # packed keys preserve the (ascending) distance order
+    assert bool(jnp.all(jnp.diff(keys) > 0))
+    d2, i2 = _unpack_keys(keys, idx_bits=8)
+    np.testing.assert_array_equal(np.asarray(i2), np.arange(256))
+    # truncation error bounded by the dropped mantissa bits
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d), rtol=2e-2)
+
+
+def test_pack_handles_negatives_and_zero():
+    d = jnp.asarray([-1e5, -2.0, -1.0, -1e-8, 0.0, 1e-8, 1.0, 2.0, 1e5],
+                    jnp.float32)
+    idx = jnp.arange(9, dtype=jnp.int32)
+    keys = _pack_keys(d, idx, idx_bits=4)
+    assert bool(jnp.all(jnp.diff(keys) >= 0))
+
+
+@pytest.mark.parametrize("n,m,kd", [(64, 256, 8), (196, 196, 16), (100, 300, 9)])
+def test_packed_mode_near_exact(n, m, kd):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((n, 48)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((m, 48)), jnp.float32)
+    _, i_ref = kref.digc_reference(x, y, kd=kd)
+    i_pk = ops.digc_topk(x, y, k=kd, block_n=32, block_m=128, packed=True)
+    assert _recall(i_ref, i_pk) >= 0.99
+
+
+def test_bf16_mxu_high_recall():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((196, 192)), jnp.float32)
+    _, i_ref = kref.digc_reference(x, x, kd=16)
+    i_bf = ops.digc_topk(x, x, k=16, block_n=32, block_m=128, mxu_bf16=True)
+    assert _recall(i_ref, i_bf) >= 0.98
+
+
+# r=1 recall floor is workload-dependent: with few tiles more of the
+# global top-kd lands in one tile and bucket collisions bite (measured
+# 0.81 @ 2 tiles, 0.95 @ 64 tiles). r>=2 is robust.
+@pytest.mark.parametrize("rounds,floor", [(1, 0.78), (2, 0.97), (3, 0.99)])
+def test_bucketed_recall_floor(rounds, floor):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)
+    _, i_ref = kref.digc_reference(x, x, kd=16)
+    i_b = ops.digc_topk(x, x, k=16, block_n=64, block_m=256, packed=True,
+                        bucket_rounds=rounds)
+    assert _recall(i_ref, i_b) >= floor
+
+
+def test_bucketed_self_neighbor_survives():
+    """The nearest neighbor (self, distance 0) must never be dropped."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+    idx = ops.digc_topk(x, x, k=8, block_n=64, block_m=128, packed=True,
+                        bucket_rounds=1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]), np.arange(256))
+
+
+def test_packed_dilation_consistent():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    i_full = ops.digc_topk(x, x, k=16, block_n=32, block_m=128, packed=True)
+    i_dil = ops.digc_topk(x, x, k=8, dilation=2, block_n=32, block_m=128,
+                          packed=True)
+    np.testing.assert_array_equal(np.asarray(i_full[:, ::2][:, :8]),
+                                  np.asarray(i_dil))

@@ -1,0 +1,62 @@
+"""Model-level invariants across families: causality, determinism,
+batch-element independence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import transformer as tr
+from repro.models.module import init_params
+
+DECODER_ARCHS = [a for a in ARCH_IDS if a != "whisper-tiny"]
+B, S = 2, 12
+
+
+def _params(cfg):
+    return init_params(tr.param_spec(cfg), jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_causality(arch):
+    """Perturbing tokens at positions > t must not change logits at t."""
+    cfg = get_smoke(arch).replace(dtype="float32")
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (B, S))
+    t_cut = S // 2
+    toks2 = toks.copy()
+    toks2[:, t_cut + 1 :] = rng.integers(0, cfg.vocab_size, (B, S - t_cut - 1))
+    l1, _ = tr.forward(params, jnp.asarray(toks, jnp.int32), cfg)
+    l2, _ = tr.forward(params, jnp.asarray(toks2, jnp.int32), cfg)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, : t_cut + 1]), np.asarray(l2[:, : t_cut + 1]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-370m", "recurrentgemma-9b"])
+def test_determinism(arch):
+    cfg = get_smoke(arch)
+    params = _params(cfg)
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    l1, _ = tr.forward(params, toks, cfg)
+    l2, _ = tr.forward(params, toks, cfg)
+    np.testing.assert_array_equal(np.asarray(l1, np.float32), np.asarray(l2, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "deepseek-v2-lite-16b"])
+def test_batch_independence(arch):
+    """Row 0's logits must not depend on row 1's tokens (no batch mixing
+    through MoE dispatch or attention)."""
+    cfg = get_smoke(arch).replace(dtype="float32")
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, cfg.vocab_size, (2, S))
+    b = a.copy()
+    b[1] = rng.integers(0, cfg.vocab_size, S)
+    la, _ = tr.forward(params, jnp.asarray(a, jnp.int32), cfg)
+    lb, _ = tr.forward(params, jnp.asarray(b, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(la[0]), np.asarray(lb[0]),
+                               rtol=1e-4, atol=1e-4)

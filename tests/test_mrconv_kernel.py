@@ -1,0 +1,73 @@
+"""MRConv Pallas kernel: shape/dtype sweeps + properties vs the
+pure-jnp oracle (core.graph.mr_aggregate)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import mr_aggregate
+from repro.kernels import ops
+
+
+def _case(rng, n, m, d, k, dtype=jnp.float32):
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    y = jnp.asarray(rng.standard_normal((m, d)), dtype)
+    idx = jnp.asarray(rng.integers(0, m, (n, k)), jnp.int32)
+    return x, y, idx
+
+
+@pytest.mark.parametrize("n,m,d,k", [
+    (8, 128, 8, 1), (64, 256, 32, 4), (100, 300, 48, 9),
+    (196, 196, 192, 16), (33, 513, 7, 5),
+])
+def test_mrconv_shape_sweep(n, m, d, k):
+    rng = np.random.default_rng(n + m)
+    x, y, idx = _case(rng, n, m, d, k)
+    ref = mr_aggregate(x, y, idx)
+    out = ops.mrconv(x, y, idx, block_n=32, block_m=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mrconv_dtype_sweep(dtype):
+    rng = np.random.default_rng(7)
+    x, y, idx = _case(rng, 48, 160, 24, 4, dtype)
+    ref = mr_aggregate(x.astype(jnp.float32), y.astype(jnp.float32), idx)
+    out = ops.mrconv(x, y, idx, block_n=16, block_m=128)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("block_n,block_m", [(8, 128), (64, 256), (128, 512)])
+def test_mrconv_block_invariance(block_n, block_m):
+    rng = np.random.default_rng(8)
+    x, y, idx = _case(rng, 96, 600, 32, 6)
+    ref = mr_aggregate(x, y, idx)
+    out = ops.mrconv(x, y, idx, block_n=block_n, block_m=block_m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 40), m=st.integers(2, 80), d=st.integers(1, 24),
+       k=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_mrconv_property(n, m, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x, y, idx = _case(rng, n, m, d, k)
+    ref = mr_aggregate(x, y, idx)
+    out = ops.mrconv(x, y, idx, block_n=16, block_m=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mrconv_duplicate_neighbors():
+    """Duplicated neighbor ids must not change the max."""
+    rng = np.random.default_rng(9)
+    x, y, _ = _case(rng, 16, 32, 8, 1)
+    idx1 = jnp.asarray(rng.integers(0, 32, (16, 1)), jnp.int32)
+    idx3 = jnp.concatenate([idx1, idx1, idx1], axis=1)
+    out1 = ops.mrconv(x, y, idx1, block_n=16, block_m=128)
+    out3 = ops.mrconv(x, y, idx3, block_n=16, block_m=128)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out3), rtol=1e-6)

@@ -1,0 +1,103 @@
+"""Alternative construction strategies (paper §VI modularity claim):
+ClusterViG-family IVF search and GreedyViG-family axial graphs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.digc import BIG, digc_reference
+from repro.core.strategies import axial_digc, cluster_digc, kmeans, recall_vs_exact
+
+
+def test_kmeans_reduces_quantization_error():
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    c1 = kmeans(y, 8, iters=1)
+    c8 = kmeans(y, 8, iters=8)
+
+    def qerr(c):
+        d = jnp.min(
+            jnp.sum((y[:, None] - c[None]) ** 2, -1), axis=1
+        )
+        return float(jnp.mean(d))
+
+    assert qerr(c8) <= qerr(c1) + 1e-5
+
+
+def test_cluster_recall_improves_with_probes():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((400, 48)), jnp.float32)
+    i_lo = cluster_digc(x, k=8, n_clusters=20, n_probe=2)
+    i_hi = cluster_digc(x, k=8, n_clusters=20, n_probe=16)
+    r_lo = recall_vs_exact(x, x, i_lo, 8)
+    r_hi = recall_vs_exact(x, x, i_hi, 8)
+    assert r_hi > r_lo
+    assert r_hi > 0.85  # probing 16/20 clusters ~ near-exact
+
+
+def test_cluster_full_probe_is_near_exact():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((200, 24)), jnp.float32)
+    idx = cluster_digc(x, k=5, n_clusters=8, n_probe=8, capacity_factor=8.0)
+    # probing all clusters with no capacity drops == exact
+    assert recall_vs_exact(x, x, idx, 5) == 1.0
+
+
+def test_cluster_clustered_data_high_recall_few_probes():
+    """On genuinely clustered data (the ViG-feature regime) few probes
+    suffice — the ClusterViG premise."""
+    rng = np.random.default_rng(3)
+    centers = rng.standard_normal((8, 24)) * 10
+    pts = np.concatenate(
+        [centers[i] + 0.1 * rng.standard_normal((50, 24)) for i in range(8)]
+    )
+    x = jnp.asarray(pts, jnp.float32)
+    idx = cluster_digc(x, k=5, n_clusters=8, n_probe=2, capacity_factor=2.0)
+    assert recall_vs_exact(x, x, idx, 5) > 0.95
+
+
+def test_axial_support_and_exactness_within_support():
+    rng = np.random.default_rng(4)
+    h, w, d, k = 8, 8, 16, 4
+    x = jnp.asarray(rng.standard_normal((h * w, d)), jnp.float32)
+    idx, dist = axial_digc(x, grid_h=h, grid_w=w, k=k, return_dists=True)
+    idx_np = np.asarray(idx)
+    for i in range(h * w):
+        r, c = divmod(i, w)
+        for j in idx_np[i]:
+            jr, jc = divmod(int(j), w)
+            assert jr == r or jc == c, (i, j)  # axial support
+    # exact top-k *within* the axial support
+    xn = np.asarray(x)
+    for i in range(0, h * w, 7):
+        r, c = divmod(i, w)
+        support = [r * w + cc for cc in range(w)] + [rr * w + c for rr in range(h)]
+        ds = {j: float(np.sum((xn[j] - xn[i]) ** 2)) for j in support}
+        best = sorted(set(ds), key=lambda j: (ds[j]))[:k]
+        got = sorted(idx_np[i].tolist(), key=lambda j: ds[int(j)])[:k]
+        assert sorted(ds[j] for j in best) == pytest.approx(
+            sorted(ds[int(j)] for j in got), rel=1e-5
+        )
+
+
+def test_axial_self_first():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((36, 8)), jnp.float32)
+    idx = axial_digc(x, grid_h=6, grid_w=6, k=3)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]), np.arange(36))
+
+
+def test_vig_runs_with_all_strategies():
+    from repro.models import vig
+    from repro.models.module import init_params
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=64, embed_dims=(32,), depths=(1,), num_classes=5, k=3
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64, 3))
+    for impl in ("blocked", "cluster", "axial"):
+        out = vig.vig_forward(params, imgs, cfg, digc_impl=impl)
+        assert out.shape == (1, 5)
+        assert bool(jnp.all(jnp.isfinite(out))), impl
