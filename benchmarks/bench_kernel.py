@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.digc import digc_blocked
+from repro.core import DigcSpec, digc
 from repro.core.perfmodel import tpu_digc_estimate
 from benchmarks.common import emit, timeit
 
@@ -36,7 +36,6 @@ def _hillclimb():
 
 
 def _bucketed_recall():
-    from repro.kernels import ops
     from repro.kernels import ref as kref
 
     rng = np.random.default_rng(0)
@@ -44,12 +43,13 @@ def _bucketed_recall():
     _, i_ref = kref.digc_reference(x, x, kd=16)
     a = np.asarray(i_ref)
     for rounds in (1, 2, 3):
-        i_b = ops.digc_topk(x, x, k=16, block_n=128, block_m=256,
-                            packed=True, bucket_rounds=rounds)
+        spec = DigcSpec(impl="pallas", k=16, block_n=128, block_m=256,
+                        packed=True, bucket_rounds=rounds)
+        i_b = digc(x, spec=spec)
         b = np.asarray(i_b)
         rec = np.mean([len(set(a[i]) & set(b[i])) / 16 for i in range(2048)])
         emit(f"kernel/bucketed_r{rounds}_recall", rec * 100,
-             "recall@16 percent, N=2048 self-graph")
+             "recall@16 percent, N=2048 self-graph (registry pallas spec)")
 
 
 def run():
@@ -57,7 +57,8 @@ def run():
     n, d, k = 4096, 192, 9
     x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
     for bm in (256, 512, 1024):
-        fn = jax.jit(lambda a: digc_blocked(a, a, k=k, block_m=bm))
+        spec = DigcSpec(impl="blocked", k=k, block_m=bm)
+        fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
         t = timeit(fn, x, iters=2)
         emit(f"kernel/blocked_bm{bm}_us", t * 1e6, f"N={n};D={d}")
     _hillclimb()

@@ -1,52 +1,92 @@
 """Construction-strategy ablation (paper §VI: the modular architecture
-"supports diverse graph construction strategies" — ClusterViG-family
-clustering and GreedyViG-family axial). Runtime + recall vs Algorithm 1
-at the ViG pyramid stage-1 workload (N=3136 grid 56x56)."""
+"supports diverse graph construction strategies"). The impl list comes
+from the GraphBuilder registry — a newly registered strategy shows up
+here with zero benchmark edits. Runtime + recall vs Algorithm 1 on a
+ViG-style square grid, batched (B, N, D) as the serving path runs it."""
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.digc import digc_blocked
-from repro.core.strategies import axial_digc, cluster_digc, recall_vs_exact
+from repro.core import DigcSpec, digc, list_builders
+from repro.core.strategies import recall_vs_exact
 from benchmarks.common import emit, timeit
 
+# Per-impl workload scale: the interpret-mode Pallas kernel emulates the
+# TPU grid on CPU, so it benchmarks at a smaller grid than the XLA tiers.
+GRID_SIDE = {"default": 56, "pallas": 16}
+BATCH = 2
 
-def _clustered(rng, n, d, c=16, spread=0.15):
+
+def _clustered(rng, b, n, d, c=16, spread=0.15):
     centers = rng.standard_normal((c, d)) * 4
-    pts = centers[rng.integers(0, c, n)] + spread * rng.standard_normal((n, d))
-    return jnp.asarray(pts, jnp.float32)
+    pts = centers[rng.integers(0, c, b * n)] + spread * rng.standard_normal(
+        (b * n, d)
+    )
+    return jnp.asarray(pts.reshape(b, n, d), jnp.float32)
+
+
+def _spec_for(builder, h, w, k):
+    # Default knobs everywhere (cluster gets its workload-adaptive
+    # heuristic here; the explicit n_clusters/n_probe sweep lives in
+    # _cluster_probe_ablation) — only the grid geometry is required.
+    knobs = {}
+    if "grid_h" in builder.knobs:
+        knobs = {"grid_h": h, "grid_w": w}
+    return DigcSpec(impl=builder.name, k=k, **knobs)
+
+
+def _cluster_probe_ablation(rng, d, k):
+    """ClusterViG knob ablation: recall on clustered features (the
+    ViG regime) AND on random features — the IVF worst case, where a
+    recall regression would otherwise be invisible."""
+    h = GRID_SIDE["default"]
+    n = h * h
+    x_clus = _clustered(rng, BATCH, n, d)
+    x_rand = jnp.asarray(rng.standard_normal((BATCH, n, d)), jnp.float32)
+    for probes in (2, 8):
+        spec = DigcSpec(impl="cluster", k=k, n_clusters=h, n_probe=probes)
+        fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
+        t = timeit(fn, x_clus, iters=2)
+        rec_c = recall_vs_exact(x_clus, x_clus, fn(x_clus), k)
+        rec_r = recall_vs_exact(x_rand, x_rand, fn(x_rand), k)
+        emit(f"strategies/cluster_p{probes}_us", t * 1e6,
+             f"recall_clustered={rec_c:.3f};recall_random={rec_r:.3f};"
+             f"distance_work={probes/h:.2f}x_of_exact (random features "
+             "are the IVF worst case)")
 
 
 def run():
     rng = np.random.default_rng(0)
-    h = w = 56
-    n, d, k = h * w, 96, 9
-    x_rand = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
-    x_clus = _clustered(rng, n, d)  # the ViG-feature regime ClusterViG assumes
+    d, k = 96, 9
+    for builder in list_builders():
+        if builder.distributed:
+            # No fake 0-us row in the perf record: distributed builders
+            # need a device mesh (exactness covered in tests/test_ring.py).
+            print(f"# strategies/{builder.name}: skipped, needs a device mesh",
+                  flush=True)
+            continue
+        h = w = GRID_SIDE.get(builder.name, GRID_SIDE["default"])
+        n = h * w
+        x = (_clustered(rng, BATCH, n, d) if not builder.exact
+             else jnp.asarray(rng.standard_normal((BATCH, n, d)), jnp.float32))
+        spec = _spec_for(builder, h, w, k)
+        fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
+        t = timeit(fn, x, iters=2)
+        idx = fn(x)
+        rec = recall_vs_exact(x, x, idx, k)
+        work = 1.0
+        if builder.name == "cluster":
+            from repro.core.strategies import default_cluster_params
 
-    exact = jax.jit(lambda a: digc_blocked(a, a, k=k))
-    t = timeit(exact, x_rand, iters=2)
-    emit("strategies/exact_knn_us", t * 1e6,
-         f"recall=1.00 (Algorithm 1); distance work = N*M*D = {n*n*d/1e9:.2f} GFLOP-pairs")
-
-    for probes in (2, 8):
-        fn = jax.jit(lambda a: cluster_digc(a, k=k, n_clusters=56, n_probe=probes))
-        t = timeit(fn, x_clus, iters=2)
-        rec_c = recall_vs_exact(x_clus, x_clus, fn(x_clus), k)
-        rec_r = recall_vs_exact(x_rand, x_rand, fn(x_rand), k)
-        work = probes / 56  # probed fraction of co-nodes
-        emit(f"strategies/cluster_p{probes}_us", t * 1e6,
-             f"recall_clustered={rec_c:.3f};recall_random={rec_r:.3f};"
-             f"distance_work={work:.2f}x_of_exact (ClusterViG family; random "
-             "features are the IVF worst case — CPU gathers dominate wall-time)")
-
-    fn = jax.jit(lambda a: axial_digc(a, grid_h=h, grid_w=w, k=k))
-    t = timeit(fn, x_rand, iters=2)
-    rec = recall_vs_exact(x_rand, x_rand, fn(x_rand), k)
-    emit("strategies/axial_us", t * 1e6,
-         f"recall_vs_full_knn={rec:.3f};distance_work={(h+w)/n:.3f}x_of_exact "
-         "(GreedyViG family; different graph family, not a KNN approximation)")
+            nc, npr = default_cluster_params(n, spec.n_clusters, spec.n_probe)
+            work = npr / nc
+        elif builder.name == "axial":
+            work = (h + w) / n
+        emit(f"strategies/{builder.name}_us", t * 1e6,
+             f"recall_vs_exact={rec:.3f};distance_work={work:.2f}x;"
+             f"B={BATCH};N={n};D={d};exact={builder.exact}")
+    _cluster_probe_ablation(rng, d, k)
     return True
 
 

@@ -1,8 +1,11 @@
-"""Benchmark utilities: timing + CSV emission."""
+"""Benchmark utilities: timing + CSV emission + JSON dump."""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -29,3 +32,22 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def header():
     print("name,us_per_call,derived", flush=True)
+
+
+def dump_json(path: str | Path, *, suites=None) -> Path:
+    """Write every emitted row to ``path`` so the perf trajectory is
+    recorded run over run (BENCH_digc.json)."""
+    out = {
+        "bench": "digc",
+        "schema": 1,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "suites": list(suites) if suites is not None else None,
+        "rows": [
+            {"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS
+        ],
+    }
+    path = Path(path)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    return path

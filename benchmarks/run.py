@@ -1,7 +1,8 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV
+# and dump the rows to BENCH_digc.json (perf trajectory record).
 import argparse
 
-from benchmarks.common import header
+from benchmarks.common import dump_json, header
 from benchmarks import (
     bench_table1_cycles,
     bench_table2_resources,
@@ -28,6 +29,8 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=list(SUITES))
     ap.add_argument("--fast", action="store_true",
                     help="smaller resolutions for quick runs")
+    ap.add_argument("--json", default="BENCH_digc.json",
+                    help="output JSON path ('' disables)")
     args = ap.parse_args()
     header()
     for name in args.only:
@@ -38,6 +41,9 @@ def main() -> None:
             fn(resolutions=(256,))
         else:
             fn()
+    if args.json:
+        path = dump_json(args.json, suites=args.only)
+        print(f"# wrote {path}", flush=True)
 
 
 if __name__ == '__main__':

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.ckpt import checkpoint as ckpt
+from repro.core import available_impls, get_builder
 from repro.data.pipeline import DataConfig, image_pipeline
 from repro.models import vig
 from repro.models.module import init_params
@@ -29,11 +30,17 @@ def main(argv=None):
     ap.add_argument("--image-size", type=int, default=64)
     ap.add_argument("--num-classes", type=int, default=10)
     ap.add_argument("--full", action="store_true", help="real ViG-Ti config")
+    # choices from the registry by name only (no eager builder imports);
+    # distributed builders are rejected after parsing, importing just
+    # the selected one.
     ap.add_argument("--digc-impl", default="blocked",
-                    choices=["blocked", "reference", "pallas"])
+                    choices=list(available_impls()))
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--lr", type=float, default=1e-3)
     args = ap.parse_args(argv)
+    if get_builder(args.digc_impl).distributed:
+        ap.error(f"--digc-impl {args.digc_impl} needs a device mesh; "
+                 "this single-host example cannot drive it")
 
     if args.full:
         cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(

@@ -1,8 +1,19 @@
 # The paper's primary contribution: Dynamic Image Graph Construction
 # (DIGC) as a composable JAX feature — reference / blocked-streaming /
-# fused-Pallas / distributed-ring implementations plus the graph ops and
-# the paper's analytical performance model.
+# fused-Pallas / distributed-ring / cluster / axial implementations
+# behind one GraphBuilder registry, plus the graph ops and the paper's
+# analytical performance model. Everything is batched-first: (B, N, D)
+# in, (B, N, k) out, with (N, D) promoted to B=1.
 
+from repro.core.builder import (
+    DigcSpec,
+    GraphBuilder,
+    available_impls,
+    get_builder,
+    list_builders,
+    register,
+    resolve_spec,
+)
 from repro.core.digc import (
     BIG,
     digc,

@@ -1,0 +1,279 @@
+"""DigcSpec + GraphBuilder registry (DESIGN.md §4).
+
+The paper's modularity claim — "the graph construction approach can be
+generalized by adjusting the mechanism used to compute similarity" — is
+realized here as first-class objects instead of stringly-typed if/elif
+chains:
+
+  * ``DigcSpec``     — a frozen dataclass naming the implementation plus
+    every tunable knob (k, dilation, block shapes, strategy-specific
+    parameters). Unknown knobs for a given builder *raise* instead of
+    being silently dropped.
+  * ``GraphBuilder`` — one registered entry per implementation tier or
+    strategy: a batched build function, the set of knobs it accepts,
+    capability flags (pos_bias / causal / exact / distributed) and an
+    optional fused aggregation kernel.
+  * the registry    — ``register`` / ``get_builder`` / ``list_builders``.
+    Builders self-register at import time; ``_LAZY`` maps names to the
+    module that registers them so ``get_builder("pallas")`` works without
+    eagerly importing the kernel package.
+
+Every build function is **batched-first**: it receives x (B, N, D),
+y (B, M, D) and optional pos_bias (B, N, M) and returns (idx, dist),
+each (B, N, k). ``promote_batch`` lifts single-image (N, D) inputs to
+B=1 so the public ``digc`` entry point accepts both ranks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DigcSpec:
+    """Complete specification of one DIGC invocation.
+
+    ``impl``, ``k``, ``dilation`` and ``causal`` are common to every
+    builder; the remaining fields are strategy-specific knobs that
+    default to None (= builder default). Setting a knob the selected
+    builder does not accept is a ``ValueError`` at dispatch time.
+    ``k`` has no default on purpose (None = unset): consumers that own
+    a k (e.g. the ViG config) fill it in, so a spec passed only to pick
+    an impl can never silently override the model's neighbor count.
+    """
+
+    impl: str = "blocked"
+    k: Optional[int] = None
+    dilation: int = 1
+    causal: bool = False
+    # --- blocked / pallas tiling
+    block_n: Optional[int] = None
+    block_m: Optional[int] = None
+    # --- pallas kernel variants (§Perf iterations)
+    interpret: Optional[bool] = None
+    packed: Optional[bool] = None
+    mxu_bf16: Optional[bool] = None
+    bucket_rounds: Optional[int] = None
+    # --- cluster (ClusterViG family)
+    n_clusters: Optional[int] = None
+    n_probe: Optional[int] = None
+    capacity_factor: Optional[float] = None
+    seed: Optional[int] = None
+    # --- axial (GreedyViG family)
+    grid_h: Optional[int] = None
+    grid_w: Optional[int] = None
+    # --- ring (distributed)
+    mesh: Optional[Any] = None
+    axis_name: Optional[str] = None
+
+    def replace(self, **kw) -> "DigcSpec":
+        return dataclasses.replace(self, **kw)
+
+    def with_grid(self, grid_h: int, grid_w: int) -> "DigcSpec":
+        """Fill grid-geometry knobs if this spec's builder accepts them.
+
+        Models re-derive geometry per stage (pyramid stages shrink the
+        grid), so any user-supplied grid knobs are replaced by the
+        actual stage grid; a no-op for builders without grid knobs.
+        """
+        builder = get_builder(self.impl)
+        updates = {
+            f: v
+            for f, v in (("grid_h", grid_h), ("grid_w", grid_w))
+            if f in builder.knobs
+        }
+        return self.replace(**updates) if updates else self
+
+    def knobs(self) -> dict[str, Any]:
+        """The non-None strategy-specific knobs of this spec."""
+        return {
+            f: getattr(self, f)
+            for f in KNOB_FIELDS
+            if getattr(self, f) is not None
+        }
+
+
+_COMMON_FIELDS = ("impl", "k", "dilation", "causal")
+KNOB_FIELDS: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(DigcSpec) if f.name not in _COMMON_FIELDS
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBuilder:
+    """One registered graph-construction implementation.
+
+    ``build(x, y, pos_bias, spec) -> (idx, dist)`` with batched inputs
+    x (B, N, D), y (B, M, D), pos_bias (B, N, M) | None; outputs are
+    (B, N, k) each, distances ascending, BIG-sentinel for invalid lanes.
+
+    ``y`` is None for a self-graph call (the caller passed no co-nodes)
+    — the explicit marker object identity cannot provide under jit.
+    Builders that differentiate the self-graph case (axial) key on it;
+    everyone else treats None as "co-nodes = x".
+    """
+
+    name: str
+    build: Callable
+    knobs: frozenset
+    exact: bool = True
+    supports_pos_bias: bool = False
+    supports_causal: bool = False
+    distributed: bool = False
+    # Optional fused neighbor aggregation (x, y, idx) -> (B, N, D);
+    # None means the consumer uses the generic mr_aggregate.
+    aggregate: Optional[Callable] = None
+    doc: str = ""
+
+    def validate(self, spec: DigcSpec, *, has_pos_bias: bool = False) -> None:
+        """Reject knobs this builder does not accept (no silent drops)."""
+        bad = [
+            f
+            for f in KNOB_FIELDS
+            if getattr(spec, f) is not None and f not in self.knobs
+        ]
+        if bad:
+            raise ValueError(
+                f"DIGC impl {self.name!r} does not accept knob(s) {bad}; "
+                f"accepted: {sorted(self.knobs) or '(none)'}"
+            )
+        if spec.causal and not self.supports_causal:
+            raise ValueError(f"DIGC impl {self.name!r} does not support causal")
+        if has_pos_bias and not self.supports_pos_bias:
+            raise ValueError(f"DIGC impl {self.name!r} does not support pos_bias")
+
+
+_REGISTRY: dict[str, GraphBuilder] = {}
+
+# name -> module whose import registers it (keeps the import graph light:
+# asking for "pallas" is what pulls in the kernel package).
+_LAZY: dict[str, str] = {
+    "reference": "repro.core.digc",
+    "blocked": "repro.core.digc",
+    "pallas": "repro.kernels.ops",
+    "ring": "repro.core.ring",
+    "cluster": "repro.core.strategies",
+    "axial": "repro.core.strategies",
+}
+
+
+def register(builder: GraphBuilder, *, overwrite: bool = False) -> GraphBuilder:
+    if builder.name in _REGISTRY and not overwrite:
+        raise ValueError(f"GraphBuilder {builder.name!r} already registered")
+    _REGISTRY[builder.name] = builder
+    return builder
+
+
+def available_impls() -> tuple[str, ...]:
+    """Names of every registered (or lazily registrable) builder."""
+    return tuple(sorted(set(_REGISTRY) | set(_LAZY)))
+
+
+def get_builder(name: str) -> GraphBuilder:
+    if name not in _REGISTRY and name in _LAZY:
+        importlib.import_module(_LAZY[name])
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown DIGC impl: {name!r}; available: {available_impls()}"
+        )
+    return _REGISTRY[name]
+
+
+def list_builders() -> tuple[GraphBuilder, ...]:
+    """All builders, lazily importing their defining modules."""
+    return tuple(get_builder(n) for n in available_impls())
+
+
+def resolve_spec(
+    spec: Optional[DigcSpec] = None,
+    *,
+    impl: Optional[str] = None,
+    k: Optional[int] = None,
+    dilation: Optional[int] = None,
+    causal: Optional[bool] = None,
+    **knobs,
+) -> DigcSpec:
+    """Build (or refine) a DigcSpec from keyword-style arguments.
+
+    With ``spec=None`` this is the legacy ``digc(x, k=.., impl=..)``
+    path; with a spec, any explicitly passed common field or knob
+    overrides the spec's value. Unknown knob *names* raise immediately.
+    """
+    unknown = set(knobs) - set(KNOB_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"unknown DIGC knob(s) {sorted(unknown)}; valid knobs: "
+            f"{list(KNOB_FIELDS)}"
+        )
+    if spec is None:
+        if k is None:
+            raise TypeError("digc() requires k= (or a full spec=)")
+        return DigcSpec(
+            impl=impl or "blocked",
+            k=k,
+            dilation=1 if dilation is None else dilation,
+            causal=bool(causal),
+            **knobs,
+        )
+    overrides: dict[str, Any] = dict(knobs)
+    if impl is not None:
+        overrides["impl"] = impl
+    if k is not None:
+        overrides["k"] = k
+    if dilation is not None:
+        overrides["dilation"] = dilation
+    if causal is not None:
+        overrides["causal"] = causal
+    spec = spec.replace(**overrides) if overrides else spec
+    if spec.k is None:
+        raise TypeError("DigcSpec.k is unset: pass k= or spec.replace(k=...)")
+    return spec
+
+
+def promote_batch(x, y=None, pos_bias=None):
+    """Lift (N, D) [+ (N, M) pos_bias] to B=1; pass (B, N, D) through.
+
+    Returns (x3, y3, pos3, squeeze) where squeeze records whether the
+    caller should drop the batch axis from the outputs.
+    """
+    import jax.numpy as jnp
+
+    if x.ndim not in (2, 3):
+        raise ValueError(f"DIGC nodes must be (N, D) or (B, N, D); got {x.shape}")
+    squeeze = x.ndim == 2
+    x3 = x[None] if squeeze else x
+    if y is None:
+        y3 = x3
+    else:
+        if y.ndim not in (2, 3):
+            raise ValueError(
+                f"DIGC co-nodes must be (M, D) or (B, M, D); got {y.shape}"
+            )
+        y3 = y[None] if y.ndim == 2 else y
+    if y3.shape[0] != x3.shape[0]:
+        raise ValueError(
+            f"batch mismatch: nodes {x3.shape[0]} vs co-nodes {y3.shape[0]}"
+        )
+    p3 = None
+    if pos_bias is not None:
+        if pos_bias.ndim not in (2, 3):
+            raise ValueError(
+                f"pos_bias must be (N, M) or (B, N, M); got {pos_bias.shape}"
+            )
+        p3 = pos_bias[None] if pos_bias.ndim == 2 else pos_bias
+        n, m = x3.shape[1], y3.shape[1]
+        if p3.shape[1:] != (n, m):
+            raise ValueError(
+                f"pos_bias shape {pos_bias.shape} does not match "
+                f"N={n} nodes x M={m} co-nodes"
+            )
+        if p3.shape[0] not in (1, x3.shape[0]):
+            raise ValueError(
+                f"pos_bias batch {p3.shape[0]} does not match nodes batch "
+                f"{x3.shape[0]} (or 1 for shared)"
+            )
+        if p3.shape[0] != x3.shape[0]:
+            p3 = jnp.broadcast_to(p3, (x3.shape[0],) + p3.shape[1:])
+    return x3, y3, p3, squeeze

@@ -1,0 +1,29 @@
+"""jax version-compat shims (the container pins an older jax than the
+newest APIs some modules were written against).
+
+  * ``shard_map``       — jax >= 0.5 exposes ``jax.shard_map(check_vma=)``;
+    older versions have ``jax.experimental.shard_map.shard_map(check_rep=)``.
+  * ``CompilerParams``  — jax >= 0.5 renamed ``pltpu.TPUCompilerParams``
+    to ``pltpu.CompilerParams``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, *, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

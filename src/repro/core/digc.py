@@ -9,20 +9,28 @@ k-nearest co-nodes under squared euclidean distance:
     I'   = argsort(D_XY)[:, :k*d]
     I    = I'[:, ::d]
 
-Three implementation tiers (see DESIGN.md §3):
+Every implementation is **batched-first**: inputs may be (B, N, D) /
+(B, M, D) (a batch of images, the serving case) or (N, D) / (M, D)
+(promoted to B=1, outputs squeezed back).
+
+Implementation tiers (see DESIGN.md §3):
 
   * ``digc_reference``   -- Algorithm 1 verbatim. Materializes the full
-    N x M distance matrix (this is the paper's CPU/GPU baseline and the
-    oracle for every test).
+    B x N x M distance matrix (this is the paper's CPU/GPU baseline and
+    the oracle for every test).
   * ``digc_blocked``     -- the paper's streaming insight at the XLA
     level: co-nodes are processed in uniform blocks; a running, sorted
     top-(k*d) candidate list is merged with each block (LSM+GMM as an
-    online reduction). Live memory is O(N * block_m), never O(N * M).
+    online reduction). Live memory is O(B * N * block_m), never
+    O(B * N * M).
   * ``digc_pallas``      -- the fused Pallas TPU kernel
     (``repro.kernels.digc_topk``): distance + selection in one pass with
-    the running candidate buffer resident in VMEM.
+    the running candidate buffer resident in VMEM and batch as the
+    leading grid dimension.
 
-``digc`` is the public entry point; ``impl`` selects the tier.
+``digc`` is the public entry point: a thin lookup into the GraphBuilder
+registry (``repro.core.builder``, DESIGN.md §4). Select a tier with a
+``DigcSpec`` (``digc(x, y, spec=...)``) or the legacy ``impl=`` keyword.
 """
 
 from __future__ import annotations
@@ -34,6 +42,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.builder import (
+    DigcSpec,
+    GraphBuilder,
+    get_builder,
+    promote_batch,
+    register,
+    resolve_spec,
+)
+
 # Large-but-finite sentinel: inf would produce nan under (inf - inf) when a
 # positional bias is added to a padded lane.
 BIG = float(1e30)
@@ -42,12 +59,16 @@ Array = jax.Array
 
 
 def pairwise_sq_dists(x: Array, y: Array, pos_bias: Optional[Array] = None) -> Array:
-    """Full N x M squared-euclidean distance matrix (Algorithm 1 lines 3-7)."""
+    """Squared-euclidean distance matrix (Algorithm 1 lines 3-7).
+
+    x (..., N, D), y (..., M, D) -> (..., N, M); leading batch dims
+    broadcast through the einsum.
+    """
     x = x.astype(jnp.float32)
     y = y.astype(jnp.float32)
-    inner = -2.0 * (x @ y.T)
-    sq_x = jnp.sum(x * x, axis=-1, keepdims=True)  # (N, 1)
-    sq_y = jnp.sum(y * y, axis=-1, keepdims=True).T  # (1, M)
+    inner = -2.0 * jnp.einsum("...nd,...md->...nm", x, y)
+    sq_x = jnp.sum(x * x, axis=-1)[..., :, None]
+    sq_y = jnp.sum(y * y, axis=-1)[..., None, :]
     d = inner + sq_x + sq_y
     if pos_bias is not None:
         d = d + pos_bias
@@ -71,28 +92,30 @@ def digc_reference(
     return_dists: bool = False,
     causal: bool = False,
 ):
-    """Algorithm 1, verbatim (materializes the N x M distance matrix).
+    """Algorithm 1, verbatim (materializes the full distance matrix).
 
-    Entries reported with distance >= BIG/2 are invalid placeholders
-    (causally excluded / padding); their indices are unspecified and
-    consumers must mask on the distance. This matches the blocked and
-    Pallas tiers.
+    Accepts (N, D) or (B, N, D). Entries reported with distance >=
+    BIG/2 are invalid placeholders (causally excluded / padding); their
+    indices are unspecified and consumers must mask on the distance.
+    This matches the blocked and Pallas tiers.
     """
-    if y is None:
-        y = x
+    x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
     kd = k * dilation
-    m = y.shape[0]
+    _, n, _ = x3.shape
+    m = y3.shape[1]
     if kd > m:
         raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
-    d_xy = pairwise_sq_dists(x, y, pos_bias)
+    d_xy = pairwise_sq_dists(x3, y3, p3)
     if causal:
-        n = x.shape[0]
         keep = jnp.arange(m)[None, :] <= jnp.arange(n)[:, None]
-        d_xy = jnp.where(keep, d_xy, BIG)
+        d_xy = jnp.where(keep[None], d_xy, BIG)
     neg_top, idx = lax.top_k(-d_xy, kd)  # sorted ascending by distance
     idx = dilate(idx.astype(jnp.int32), dilation)
+    dist = dilate(-neg_top, dilation)
+    if squeeze:
+        idx, dist = idx[0], dist[0]
     if return_dists:
-        return idx, dilate(-neg_top, dilation)
+        return idx, dist
     return idx
 
 
@@ -105,7 +128,8 @@ def merge_topk(
     running list plays the role of the heap contents, the block plays the
     role of a freshly-sorted local stream. Output is sorted ascending.
 
-    run_d/run_i: (N, kd); blk_d/blk_i: (N, B). Returns new (N, kd) pair.
+    run_d/run_i: (..., N, kd); blk_d/blk_i: (..., N, B). Returns the new
+    (..., N, kd) pair; leading batch dims pass through.
     """
     cand_d = jnp.concatenate([run_d, blk_d], axis=-1)
     cand_i = jnp.concatenate([run_i, blk_i], axis=-1)
@@ -129,36 +153,37 @@ def digc_blocked(
 
     Paper-faithful dataflow (DCM block -> local candidates -> global
     merge -> dilated selection) expressed in pure XLA so it runs on any
-    backend; the Pallas kernel implements the same dataflow fused.
+    backend; the Pallas kernel implements the same dataflow fused. The
+    whole batch advances through each co-node block together, so live
+    memory is O(B * N * block_m).
     """
-    if y is None:
-        y = x
-    x = x.astype(jnp.float32)
-    y = y.astype(jnp.float32)
-    n, feat = x.shape
-    m = y.shape[0]
+    x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
+    x3 = x3.astype(jnp.float32)
+    y3 = y3.astype(jnp.float32)
+    b, n, feat = x3.shape
+    m = y3.shape[1]
     kd = k * dilation
     if kd > m:
         raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
-    block_m = min(block_m, _ceil_to(m, 1))
+    block_m = min(block_m, m)
     m_pad = _ceil_to(m, block_m)
     nb = m_pad // block_m
 
-    y_p = jnp.pad(y, ((0, m_pad - m), (0, 0)))
-    sq_y = jnp.sum(y_p * y_p, axis=-1)
+    y_p = jnp.pad(y3, ((0, 0), (0, m_pad - m), (0, 0)))
+    sq_y = jnp.sum(y_p * y_p, axis=-1)  # (B, m_pad)
     # Mask padded co-nodes out via their squared norm term.
-    sq_y = jnp.where(jnp.arange(m_pad) < m, sq_y, BIG)
-    y_blocks = y_p.reshape(nb, block_m, feat)
-    sqy_blocks = sq_y.reshape(nb, block_m)
+    sq_y = jnp.where(jnp.arange(m_pad)[None, :] < m, sq_y, BIG)
+    y_blocks = y_p.reshape(b, nb, block_m, feat).transpose(1, 0, 2, 3)
+    sqy_blocks = sq_y.reshape(b, nb, block_m).transpose(1, 0, 2)
     offsets = jnp.arange(nb, dtype=jnp.int32) * block_m
 
-    if pos_bias is not None:
-        p_pad = jnp.pad(pos_bias.astype(jnp.float32), ((0, 0), (0, m_pad - m)))
-        p_blocks = jnp.transpose(p_pad.reshape(n, nb, block_m), (1, 0, 2))
+    if p3 is not None:
+        p_pad = jnp.pad(p3.astype(jnp.float32), ((0, 0), (0, 0), (0, m_pad - m)))
+        p_blocks = p_pad.reshape(b, n, nb, block_m).transpose(2, 0, 1, 3)
     else:
         p_blocks = None
 
-    sq_x = jnp.sum(x * x, axis=-1, keepdims=True)  # (N, 1)
+    sq_x = jnp.sum(x3 * x3, axis=-1)[..., None]  # (B, N, 1)
 
     def step(carry, blk):
         run_d, run_i = carry
@@ -167,19 +192,23 @@ def digc_blocked(
             p_blk = None
         else:
             y_blk, sqy_blk, off, p_blk = blk
-        d_blk = sq_x - 2.0 * (x @ y_blk.T) + sqy_blk[None, :]
+        d_blk = (
+            sq_x
+            - 2.0 * jnp.einsum("bnd,bmd->bnm", x3, y_blk)
+            + sqy_blk[:, None, :]
+        )
         if p_blk is not None:
             d_blk = d_blk + p_blk
-        blk_i = off + lax.broadcasted_iota(jnp.int32, d_blk.shape, 1)
+        blk_i = off + lax.broadcasted_iota(jnp.int32, d_blk.shape, 2)
         if causal:
-            rows = lax.broadcasted_iota(jnp.int32, d_blk.shape, 0)
+            rows = lax.broadcasted_iota(jnp.int32, d_blk.shape, 1)
             d_blk = jnp.where(blk_i <= rows, d_blk, BIG)
         run_d, run_i = merge_topk(run_d, run_i, d_blk, blk_i, kd)
         return (run_d, run_i), None
 
     init = (
-        jnp.full((n, kd), BIG, jnp.float32),
-        jnp.zeros((n, kd), jnp.int32),
+        jnp.full((b, n, kd), BIG, jnp.float32),
+        jnp.zeros((b, n, kd), jnp.int32),
     )
     xs = (y_blocks, sqy_blocks, offsets)
     if p_blocks is not None:
@@ -187,8 +216,11 @@ def digc_blocked(
     (run_d, run_i), _ = lax.scan(step, init, xs)
 
     idx = dilate(run_i, dilation)
+    dist = dilate(run_d, dilation)
+    if squeeze:
+        idx, dist = idx[0], dist[0]
     if return_dists:
-        return idx, dilate(run_d, dilation)
+        return idx, dist
     return idx
 
 
@@ -196,61 +228,37 @@ def digc(
     x: Array,
     y: Optional[Array] = None,
     *,
-    k: int,
-    dilation: int = 1,
+    spec: Optional[DigcSpec] = None,
+    k: Optional[int] = None,
+    dilation: Optional[int] = None,
+    impl: Optional[str] = None,
     pos_bias: Optional[Array] = None,
-    impl: str = "blocked",
     return_dists: bool = False,
-    causal: bool = False,
-    **kwargs,
+    causal: Optional[bool] = None,
+    **knobs,
 ):
-    """Public DIGC API. ``impl``: reference | blocked | pallas | ring."""
-    if impl == "reference":
-        return digc_reference(
-            x,
-            y,
-            k=k,
-            dilation=dilation,
-            pos_bias=pos_bias,
-            return_dists=return_dists,
-            causal=causal,
-        )
-    if impl == "blocked":
-        return digc_blocked(
-            x,
-            y,
-            k=k,
-            dilation=dilation,
-            pos_bias=pos_bias,
-            return_dists=return_dists,
-            causal=causal,
-            **kwargs,
-        )
-    if impl == "pallas":
-        from repro.kernels import ops as _kops
+    """Public DIGC API: a thin GraphBuilder-registry lookup.
 
-        return _kops.digc_topk(
-            x,
-            y if y is not None else x,
-            k=k,
-            dilation=dilation,
-            pos_bias=pos_bias,
-            return_dists=return_dists,
-            causal=causal,
-            **kwargs,
-        )
-    if impl == "ring":
-        from repro.core import ring as _ring
-
-        return _ring.ring_digc(
-            x,
-            y if y is not None else x,
-            k=k,
-            dilation=dilation,
-            return_dists=return_dists,
-            **kwargs,
-        )
-    raise ValueError(f"unknown DIGC impl: {impl!r}")
+    Either pass a full ``spec=DigcSpec(...)`` or the legacy keywords
+    (``k``, ``dilation``, ``impl``, plus builder knobs). Unknown knobs
+    for the selected builder raise instead of being silently dropped.
+    Accepts (N, D) or (B, N, D) nodes; outputs match the input rank.
+    ``y=None`` is the self-graph spelling — builders that distinguish it
+    (axial) see None; passing x explicitly as y counts as external
+    co-nodes (so eager and jitted calls agree).
+    """
+    spec = resolve_spec(
+        spec, impl=impl, k=k, dilation=dilation, causal=causal, **knobs
+    )
+    builder = get_builder(spec.impl)
+    builder.validate(spec, has_pos_bias=pos_bias is not None)
+    x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
+    idx, dist = builder.build(x3, None if y is None else y3, p3, spec)
+    if squeeze:
+        idx, dist = idx[0], dist[0]
+    if return_dists:
+        return idx, dist
+    return idx
 
 
 def _ceil_to(v: int, mult: int) -> int:
@@ -260,3 +268,44 @@ def _ceil_to(v: int, mult: int) -> int:
 @functools.partial(jax.jit, static_argnames=("k", "dilation"))
 def digc_blocked_jit(x, y, k: int, dilation: int = 1):
     return digc_blocked(x, y, k=k, dilation=dilation)
+
+
+# --------------------------------------------------------------------------
+# Registry entries (DESIGN.md §4). Build fns take batched (B, N, D) /
+# (B, M, D) / (B, N, M) and return ((B, N, k) idx, (B, N, k) dist).
+
+
+def _build_reference(x, y, pos_bias, spec: DigcSpec):
+    return digc_reference(
+        x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
+        causal=spec.causal, return_dists=True,
+    )
+
+
+def _build_blocked(x, y, pos_bias, spec: DigcSpec):
+    return digc_blocked(
+        x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
+        causal=spec.causal, return_dists=True,
+        block_m=spec.block_m if spec.block_m is not None else 256,
+    )
+
+
+register(GraphBuilder(
+    name="reference",
+    build=_build_reference,
+    knobs=frozenset(),
+    exact=True,
+    supports_pos_bias=True,
+    supports_causal=True,
+    doc="Algorithm 1 verbatim; full distance matrix (oracle tier)",
+))
+
+register(GraphBuilder(
+    name="blocked",
+    build=_build_blocked,
+    knobs=frozenset({"block_m"}),
+    exact=True,
+    supports_pos_bias=True,
+    supports_causal=True,
+    doc="streaming XLA tier: co-node blocks + running top-kd merge",
+))

@@ -18,25 +18,29 @@ Array = jax.Array
 
 
 def knn_gather(y: Array, idx: Array) -> Array:
-    """Gather neighbor features. y: (M, D), idx: (N, k) -> (N, k, D)."""
-    return jnp.take(y, idx, axis=0)
+    """Gather neighbor features. y: (M, D), idx: (N, k) -> (N, k, D);
+    batched (B, M, D) + (B, N, k) -> (B, N, k, D)."""
+    if y.ndim == 2:
+        return jnp.take(y, idx, axis=0)
+    return jax.vmap(lambda yb, ib: jnp.take(yb, ib, axis=0))(y, idx)
 
 
 def mr_aggregate(x: Array, y: Array, idx: Array) -> Array:
-    """Max-relative aggregation: max_j (y_j - x_i). -> (N, D)."""
-    neigh = knn_gather(y, idx)  # (N, k, D)
-    rel = neigh - x[:, None, :]
-    return jnp.max(rel, axis=1)
+    """Max-relative aggregation: max_j (y_j - x_i). Output matches x's
+    rank: (N, D) or (B, N, D)."""
+    neigh = knn_gather(y, idx)  # (..., N, k, D)
+    rel = neigh - x[..., :, None, :]
+    return jnp.max(rel, axis=-2)
 
 
 def sum_aggregate(x: Array, y: Array, idx: Array) -> Array:
     neigh = knn_gather(y, idx)
-    return jnp.sum(neigh - x[:, None, :], axis=1)
+    return jnp.sum(neigh - x[..., :, None, :], axis=-2)
 
 
 def mean_aggregate(x: Array, y: Array, idx: Array) -> Array:
     neigh = knn_gather(y, idx)
-    return jnp.mean(neigh - x[:, None, :], axis=1)
+    return jnp.mean(neigh - x[..., :, None, :], axis=-2)
 
 
 AGGREGATORS = {

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.builder import DigcSpec, GraphBuilder, register
+from repro.core.compat import shard_map as _shard_map
 from repro.core.digc import BIG, dilate, merge_topk
 
 
@@ -93,6 +95,19 @@ def ring_digc(
         y = x
     if mesh is None:
         raise ValueError("ring_digc requires an explicit mesh")
+    if x.ndim == 3:
+        # Batched: each image's ring pass is an independent shard_map
+        # program; B is static, so unroll (the node axis, not the batch
+        # axis, is what the ring shards).
+        y3 = y if y.ndim == 3 else jnp.broadcast_to(y[None], (x.shape[0],) + y.shape)
+        outs = [
+            ring_digc(x[b], y3[b], k=k, dilation=dilation, mesh=mesh,
+                      axis_name=axis_name, return_dists=True)
+            for b in range(x.shape[0])
+        ]
+        idx = jnp.stack([o[0] for o in outs])
+        dist = jnp.stack([o[1] for o in outs])
+        return (idx, dist) if return_dists else idx
     n_dev = mesh.shape[axis_name]
     n, feat = x.shape
     m = y.shape[0]
@@ -115,12 +130,11 @@ def ring_digc(
     body = functools.partial(
         ring_digc_local, kd=kd, axis_name=axis_name, n_dev=n_dev
     )
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(P(axis_name, None), P(axis_name, None)),
         out_specs=(P(axis_name, None), P(axis_name, None)),
-        check_vma=False,
     )
     run_d, run_i = mapped(x_p, y_p)
     run_d = run_d[:n]
@@ -133,3 +147,27 @@ def ring_digc(
 
 def _ceil_to(v: int, mult: int) -> int:
     return ((v + mult - 1) // mult) * mult
+
+
+# --------------------------------------------------------------------------
+# Registry entry (DESIGN.md §4).
+
+
+def _build_ring(x, y, pos_bias, spec: DigcSpec):
+    del pos_bias  # validated unsupported upstream
+    return ring_digc(
+        x, y, k=spec.k, dilation=spec.dilation, mesh=spec.mesh,
+        axis_name=spec.axis_name if spec.axis_name is not None else "data",
+        return_dists=True,
+    )
+
+
+register(GraphBuilder(
+    name="ring",
+    build=_build_ring,
+    knobs=frozenset({"mesh", "axis_name"}),
+    exact=True,
+    distributed=True,
+    doc="pod-level GMM: co-node shards rotate a device ring "
+        "(requires mesh= knob)",
+))

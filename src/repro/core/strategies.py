@@ -4,8 +4,9 @@ mechanism used to compute similarity ... clustering-based approaches
 exemplified by ClusterViG and greedy edge-selection techniques used in
 GreedyViG").
 
-Both reuse the DIGC substrate (blocked distance + top-k merge) and keep
-static shapes (TPU-compilable):
+Both reuse the DIGC substrate (blocked distance + top-k merge), keep
+static shapes (TPU-compilable), and are batched-first — (B, N, D) in,
+(B, N, k) out, with (N, D) promoted to B=1:
 
   * ``cluster_digc`` — IVF-style two-stage search (ClusterViG family):
     k-means centroids over co-nodes, queries probe only the n_probe
@@ -13,7 +14,8 @@ static shapes (TPU-compilable):
   * ``axial_digc``   — GreedyViG-family axial construction: candidates
     restricted to the query's grid row + column. O(N·(H+W)·D).
 
-Approximate by design; recall measured in tests/benchmarks.
+Approximate by design; recall measured in tests/benchmarks. Both are
+registered GraphBuilders (DESIGN.md §4), peers of the exact tiers.
 """
 
 from __future__ import annotations
@@ -24,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.builder import DigcSpec, GraphBuilder, promote_batch, register
 from repro.core.digc import BIG, digc_blocked, dilate, merge_topk, pairwise_sq_dists
 
 
@@ -47,34 +50,23 @@ def kmeans(y: jax.Array, n_clusters: int, iters: int = 5,
     return cents
 
 
-def cluster_digc(
-    x: jax.Array,
-    y: Optional[jax.Array] = None,
-    *,
-    k: int,
-    dilation: int = 1,
-    n_clusters: int = 16,
-    n_probe: int = 4,
-    capacity_factor: float = 2.0,
-    seed: int = 0,
-    return_dists: bool = False,
-):
-    """Two-stage ANN graph construction (ClusterViG family).
+def default_cluster_params(m: int, n_clusters: Optional[int],
+                           n_probe: Optional[int]) -> tuple[int, int]:
+    """Workload-adaptive defaults (previously hard-coded in the model):
+    ~28 co-nodes per cluster, probe up to 8 clusters."""
+    if n_clusters is None:
+        n_clusters = max(m // 28, 4)
+    n_clusters = min(n_clusters, m)
+    if n_probe is None:
+        n_probe = 8
+    return n_clusters, min(n_probe, n_clusters)
 
-    1. cluster co-nodes (k-means, static iters);
-    2. bucket members into fixed-capacity cluster lists (overflow drops,
-       like the MoE dispatch);
-    3. per query: top-n_probe centroids, then exact top-k·d over the
-       probed clusters' members only.
-    """
-    if y is None:
-        y = x
+
+def _cluster_single(x, y, *, k, dilation, n_clusters, n_probe, cap, seed):
+    """Single-image IVF search core; vmapped over the batch axis."""
     n, d = x.shape
     m = y.shape[0]
     kd = k * dilation
-    n_clusters = min(n_clusters, m)
-    n_probe = min(n_probe, n_clusters)
-    cap = max(int(m / n_clusters * capacity_factor), kd)
 
     cents = kmeans(y, n_clusters, seed=seed)
     d_yc = pairwise_sq_dists(y, cents)  # (M, C)
@@ -106,9 +98,52 @@ def cluster_digc(
     if kd_eff < kd:  # pad to kd for API uniformity
         idx = jnp.pad(idx, ((0, 0), (0, kd - kd_eff)))
         dist = jnp.pad(dist, ((0, 0), (0, kd - kd_eff)), constant_values=BIG)
+    return idx, dist
+
+
+def cluster_digc(
+    x: jax.Array,
+    y: Optional[jax.Array] = None,
+    *,
+    k: int,
+    dilation: int = 1,
+    n_clusters: Optional[int] = None,
+    n_probe: Optional[int] = None,
+    capacity_factor: float = 2.0,
+    seed: int = 0,
+    return_dists: bool = False,
+):
+    """Two-stage ANN graph construction (ClusterViG family).
+
+    1. cluster co-nodes (k-means, static iters);
+    2. bucket members into fixed-capacity cluster lists (overflow drops,
+       like the MoE dispatch);
+    3. per query: top-n_probe centroids, then exact top-k·d over the
+       probed clusters' members only.
+
+    Accepts (N, D) or (B, N, D); the whole batch shares static cluster
+    shapes, each image clusters its own co-nodes. ``n_clusters`` /
+    ``n_probe`` default to a workload-adaptive heuristic
+    (``default_cluster_params``).
+    """
+    x3, y3, _, squeeze = promote_batch(x, y)
+    m = y3.shape[1]
+    kd = k * dilation
+    n_clusters, n_probe = default_cluster_params(m, n_clusters, n_probe)
+    cap = max(int(m / n_clusters * capacity_factor), kd)
+
+    idx, dist = jax.vmap(
+        lambda xb, yb: _cluster_single(
+            xb, yb, k=k, dilation=dilation, n_clusters=n_clusters,
+            n_probe=n_probe, cap=cap, seed=seed,
+        )
+    )(x3, y3)
     idx = dilate(idx, dilation)
+    dist = dilate(dist, dilation)
+    if squeeze:
+        idx, dist = idx[0], dist[0]
     if return_dists:
-        return idx, dilate(dist, dilation)
+        return idx, dist
     return idx
 
 
@@ -124,12 +159,14 @@ def axial_digc(
     """Axial construction (GreedyViG family): each patch considers only
     its grid row and column — O(N·(H+W)·D), no full distance matrix.
 
-    x (N, D) with N == grid_h * grid_w, row-major patch order.
+    x (N, D) or (B, N, D) with N == grid_h * grid_w, row-major patch
+    order. The candidate structure is shared across the batch, so the
+    whole batch runs as one gather + one top-k.
     """
-    n, d = x.shape
+    x3, _, _, squeeze = promote_batch(x)
+    b, n, d = x3.shape
     assert n == grid_h * grid_w, (n, grid_h, grid_w)
     kd = k * dilation
-    xg = x.reshape(grid_h, grid_w, d)
 
     rows = jnp.arange(grid_h)
     cols = jnp.arange(grid_w)
@@ -141,25 +178,30 @@ def axial_digc(
     col_ids = jnp.broadcast_to(col_ids, (grid_h, grid_w, grid_h))
     cand = jnp.concatenate([row_ids, col_ids], axis=-1).reshape(n, grid_w + grid_h)
 
-    feats = x[cand]  # (N, H+W, D)
-    dists = jnp.sum((feats - x[:, None, :]) ** 2, axis=-1)
+    feats = x3[:, cand]  # (B, N, H+W, D)
+    dists = jnp.sum((feats - x3[:, :, None, :]) ** 2, axis=-1)  # (B, N, H+W)
     # the row and column lists intersect exactly at the query itself:
     # mask the column-side duplicate so it can't displace a neighbor
     qid = jnp.arange(n, dtype=cand.dtype)
-    dup = cand[:, grid_w:] == qid[:, None]
-    dists = dists.at[:, grid_w:].set(
-        jnp.where(dup, BIG, dists[:, grid_w:])
+    dup = cand[:, grid_w:] == qid[:, None]  # (N, H)
+    dists = dists.at[:, :, grid_w:].set(
+        jnp.where(dup[None], BIG, dists[:, :, grid_w:])
     )
     kd_eff = min(kd, cand.shape[1])
     neg, sel = lax.top_k(-dists, kd_eff)
-    idx = jnp.take_along_axis(cand, sel, axis=1)
+    cand_b = jnp.broadcast_to(cand[None], (b,) + cand.shape)
+    idx = jnp.take_along_axis(cand_b, sel, axis=-1)
     dist = -neg
     if kd_eff < kd:
-        idx = jnp.pad(idx, ((0, 0), (0, kd - kd_eff)))
-        dist = jnp.pad(dist, ((0, 0), (0, kd - kd_eff)), constant_values=BIG)
+        idx = jnp.pad(idx, ((0, 0), (0, 0), (0, kd - kd_eff)))
+        dist = jnp.pad(dist, ((0, 0), (0, 0), (0, kd - kd_eff)),
+                       constant_values=BIG)
     idx = dilate(idx, dilation)
+    dist = dilate(dist, dilation)
+    if squeeze:
+        idx, dist = idx[0], dist[0]
     if return_dists:
-        return idx, dilate(dist, dilation)
+        return idx, dist
     return idx
 
 
@@ -170,8 +212,79 @@ def recall_vs_exact(x, y, idx_approx, k: int) -> float:
     from repro.core.digc import digc_reference
 
     exact = np.asarray(digc_reference(x, y, k=k))
-    approx = np.asarray(idx_approx)[:, :k]
+    approx = np.asarray(idx_approx)[..., :k]
+    exact = exact.reshape(-1, k)
+    approx = approx.reshape(-1, k)
     hits = 0
     for i in range(exact.shape[0]):
         hits += len(set(exact[i]) & set(approx[i]))
     return hits / exact.size
+
+
+# --------------------------------------------------------------------------
+# Registry entries (DESIGN.md §4).
+
+
+def _build_cluster(x, y, pos_bias, spec: DigcSpec):
+    del pos_bias  # validated unsupported upstream
+    return cluster_digc(
+        x, y, k=spec.k, dilation=spec.dilation,
+        n_clusters=spec.n_clusters, n_probe=spec.n_probe,
+        capacity_factor=(
+            spec.capacity_factor if spec.capacity_factor is not None else 2.0
+        ),
+        seed=spec.seed if spec.seed is not None else 0,
+        return_dists=True,
+    )
+
+
+def _build_axial(x, y, pos_bias, spec: DigcSpec):
+    del pos_bias
+    n = x.shape[1]
+    if y is not None:
+        # Axial candidates are x's own grid row/column — it is a
+        # self-graph construction (the y=None spelling) and cannot
+        # target explicit co-nodes: pooled model stages and any
+        # caller-supplied y fall back to the exact streaming tier, as
+        # the model used to special-case by hand.
+        return digc_blocked(
+            x, y, k=spec.k, dilation=spec.dilation, return_dists=True
+        )
+    gh, gw = spec.grid_h, spec.grid_w
+    if gh is None and gw is None:
+        side = int(round(n ** 0.5))
+        if side * side != n:
+            raise ValueError(
+                f"axial DIGC needs grid_h/grid_w for non-square N={n}"
+            )
+        gh = gw = side
+    elif gh is None:
+        gh = n // gw
+    elif gw is None:
+        gw = n // gh
+    if gh * gw != n:
+        raise ValueError(
+            f"axial grid {gh}x{gw} does not match N={n} nodes"
+        )
+    return axial_digc(
+        x, grid_h=gh, grid_w=gw, k=spec.k, dilation=spec.dilation,
+        return_dists=True,
+    )
+
+
+register(GraphBuilder(
+    name="cluster",
+    build=_build_cluster,
+    knobs=frozenset({"n_clusters", "n_probe", "capacity_factor", "seed"}),
+    exact=False,
+    doc="ClusterViG-family IVF two-stage search (approximate)",
+))
+
+register(GraphBuilder(
+    name="axial",
+    build=_build_axial,
+    knobs=frozenset({"grid_h", "grid_w"}),
+    exact=False,
+    doc="GreedyViG-family axial (row+column) construction; falls back "
+        "to blocked when co-nodes are pooled (M != N)",
+))

@@ -2,10 +2,12 @@
 
 TPU-native port of the paper's DCM + LSM + GMM pipeline (DESIGN.md §2):
 
-  * grid = (N/block_n, M/block_m); the co-node dimension streams
-    ("arbitrary"), node blocks are independent ("parallel"). The Pallas
-    grid pipeline overlaps the HBM->VMEM DMA of tile j+1 with the
-    compute of tile j — the TPU analogue of the FPGA's deep pipelining.
+  * grid = (B, N/block_n, M/block_m); batch is the leading grid
+    dimension (no model-level vmap over interpret-mode calls), node
+    blocks are independent ("parallel"), the co-node dimension streams
+    ("arbitrary"). The Pallas grid pipeline overlaps the HBM->VMEM DMA
+    of tile j+1 with the compute of tile j — the TPU analogue of the
+    FPGA's deep pipelining.
   * DCM: one MXU contraction per tile, `x_blk @ y_blk^T`, plus the
     rank-1 norm terms. fp32 accumulation.
   * LSM+GMM: a running sorted top-(k*d) (dist, idx) buffer lives in the
@@ -36,7 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import tpu_compiler_params
 
 BIG = float(1e30)  # plain float: jnp scalars would be captured as consts
 
@@ -162,8 +165,10 @@ def _digc_kernel(x_ref, y_ref, *rest, kd: int, m_total: int, block_m: int,
         (ok_ref,) = out_refs  # int32 packed (dist|idx) running buffer
     else:
         od_ref, oi_ref = out_refs
-    i = pl.program_id(0)
-    j = pl.program_id(1)
+    # grid = (B, N/bn, M/bm): program_id(0) is the batch index (its
+    # blocks are squeezed out of the refs by the None BlockSpec dims).
+    i = pl.program_id(1)
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
@@ -241,20 +246,31 @@ def digc_topk_pallas(
     mxu_bf16: bool = False,
     bucket_rounds: int = 0,
 ):
-    """Run the fused kernel. Inputs must be pre-padded: N % block_n == 0,
-    M % block_m == 0 (use ``ops.digc_topk`` for the padding wrapper).
-    Returns (dist, idx), each (N, kd), sorted ascending by distance.
-    ``m_valid`` is the true (unpadded) co-node count; columns >= m_valid
-    are masked to BIG inside the kernel.
+    """Run the fused kernel with batch as the leading grid dimension.
+
+    x (B, N, D) or (N, D) (promoted to B=1 and squeezed back), y
+    likewise, pos_bias (B, N, M) / (N, M). Inputs must be pre-padded:
+    N % block_n == 0, M % block_m == 0 (use ``ops.digc_topk`` for the
+    padding wrapper). Returns (dist, idx), each (B, N, kd) — (N, kd)
+    for unbatched input — sorted ascending by distance. ``m_valid`` is
+    the true (unpadded) co-node count; columns >= m_valid are masked to
+    BIG inside the kernel.
     """
-    n, feat = x.shape
-    m = y.shape[0]
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+        y = y[None]
+        if pos_bias is not None:
+            pos_bias = pos_bias[None]
+    b, n, feat = x.shape
+    m = y.shape[1]
+    assert y.shape[0] == b, (x.shape, y.shape)
     assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
     if packed and m > 65536:
         raise ValueError("packed keys hold u16 indices: require M <= 65536")
     m_real = m_valid if m_valid is not None else m
     idx_bits = max(int(m_real - 1).bit_length(), 1) if packed else 16
-    grid = (n // block_n, m // block_m)
+    grid = (b, n // block_n, m // block_m)
 
     kernel = functools.partial(
         _digc_kernel,
@@ -262,7 +278,7 @@ def digc_topk_pallas(
         m_total=m_valid if m_valid is not None else m,
         block_m=block_m,
         block_n=block_n,
-        nsteps_m=grid[1],
+        nsteps_m=grid[2],
         has_pos=pos_bias is not None,
         causal=causal,
         packed=packed,
@@ -270,27 +286,29 @@ def digc_topk_pallas(
         idx_bits=idx_bits,
         bucket_rounds=bucket_rounds,
     )
+    # Leading None squeezes the batch dim out of the refs: each program
+    # instance sees the same 2D tile shapes as the single-image kernel.
     in_specs = [
-        pl.BlockSpec((block_n, feat), lambda i, j: (i, 0)),
-        pl.BlockSpec((block_m, feat), lambda i, j: (j, 0)),
+        pl.BlockSpec((None, block_n, feat), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((None, block_m, feat), lambda b, i, j: (b, j, 0)),
     ]
     args = [x, y]
     if pos_bias is not None:
-        in_specs.append(pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)))
+        in_specs.append(
+            pl.BlockSpec((None, block_n, block_m), lambda b, i, j: (b, i, j))
+        )
         args.append(pos_bias)
 
+    run_spec = pl.BlockSpec((None, block_n, kd), lambda b, i, j: (b, i, 0))
     if packed:
-        out_shape = [jax.ShapeDtypeStruct((n, kd), jnp.int32)]
-        out_specs = [pl.BlockSpec((block_n, kd), lambda i, j: (i, 0))]
+        out_shape = [jax.ShapeDtypeStruct((b, n, kd), jnp.int32)]
+        out_specs = [run_spec]
     else:
         out_shape = [
-            jax.ShapeDtypeStruct((n, kd), jnp.float32),
-            jax.ShapeDtypeStruct((n, kd), jnp.int32),
+            jax.ShapeDtypeStruct((b, n, kd), jnp.float32),
+            jax.ShapeDtypeStruct((b, n, kd), jnp.int32),
         ]
-        out_specs = [
-            pl.BlockSpec((block_n, kd), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, kd), lambda i, j: (i, 0)),
-        ]
+        out_specs = [run_spec, run_spec]
     outs = pl.pallas_call(
         kernel,
         grid=grid,
@@ -298,11 +316,14 @@ def digc_topk_pallas(
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(*args)
     if packed:
         dist, idx = _unpack_keys(outs[0], idx_bits)
-        return dist, idx
-    return outs[0], outs[1]
+    else:
+        dist, idx = outs[0], outs[1]
+    if squeeze:
+        dist, idx = dist[0], idx[0]
+    return dist, idx

@@ -12,7 +12,8 @@ co-block) tile contributes its rows via a masked one-hot matmul and a
 running elementwise max, so neither the full one-hot matrix nor an
 (N, k, D) gathered tensor ever materializes.
 
-grid = (N/bn, M/bm); per-tile work: bn*k x bm one-hot + MXU contraction
+grid = (B, N/bn, M/bm) with batch as the leading ("parallel") grid
+dimension; per-tile work: bn*k x bm one-hot + MXU contraction
 (bn*k, bm) @ (bm, D). Validated in interpret mode vs ref.mr_aggregate.
 """
 
@@ -24,13 +25,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import tpu_compiler_params
 
 NEG = -1e30
 
 
 def _mrconv_kernel(x_ref, idx_ref, y_ref, o_ref, *, block_m: int, k: int):
-    j = pl.program_id(1)
+    # grid = (B, N/bn, M/bm); batch blocks are squeezed out of the refs.
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
@@ -63,27 +66,32 @@ def _mrconv_kernel(x_ref, idx_ref, y_ref, o_ref, *, block_m: int, k: int):
 def mrconv_pallas(x: jax.Array, y: jax.Array, idx: jax.Array, *,
                   block_n: int = 128, block_m: int = 512,
                   interpret: bool = True) -> jax.Array:
-    """x: (N, D) nodes, y: (M, D) co-nodes, idx: (N, k) neighbor ids
-    -> (N, D) max-relative aggregate. Requires N % block_n == 0 and
+    """x: (B, N, D) nodes, y: (B, M, D) co-nodes, idx: (B, N, k)
+    neighbor ids -> (B, N, D) max-relative aggregate; (N, D)-rank inputs
+    are promoted to B=1 and squeezed back. Requires N % block_n == 0 and
     M % block_m == 0 (see ops.mrconv for the padding wrapper)."""
-    n, d = x.shape
-    m = y.shape[0]
-    k = idx.shape[1]
+    squeeze = x.ndim == 2
+    if squeeze:
+        x, y, idx = x[None], y[None], idx[None]
+    b, n, d = x.shape
+    m = y.shape[1]
+    k = idx.shape[2]
     assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
-    grid = (n // block_n, m // block_m)
+    grid = (b, n // block_n, m // block_m)
     kernel = functools.partial(_mrconv_kernel, block_m=block_m, k=k)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((None, block_n, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_n, k), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_m, d), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        out_specs=pl.BlockSpec((None, block_n, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(x, idx.astype(jnp.int32), y)
+    return out[0] if squeeze else out

@@ -1,4 +1,10 @@
-"""jit'd public wrappers for the Pallas kernels (padding + NSM)."""
+"""jit'd public wrappers for the Pallas kernels (padding + NSM).
+
+Both wrappers are batched-first: (B, N, D) inputs map straight onto the
+kernels' leading batch grid dimension; (N, D) inputs are promoted to
+B=1 and squeezed back. This module also registers the ``pallas``
+GraphBuilder (DESIGN.md §4), including its fused MRConv aggregation.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.builder import DigcSpec, GraphBuilder, promote_batch, register
 from repro.kernels.digc_topk import digc_topk_pallas
 from repro.kernels.mrconv import mrconv_pallas
 
@@ -19,19 +26,29 @@ def mrconv(x: jax.Array, y: jax.Array, idx: jax.Array, *,
            block_n: int = 128, block_m: int = 512,
            interpret: bool = True) -> jax.Array:
     """Fused max-relative aggregation with automatic padding.
-    x: (N, D), y: (M, D), idx: (N, k) -> (N, D)."""
-    n, d = x.shape
-    m = y.shape[0]
+    x: (B, N, D) | (N, D), y: (B, M, D) | (M, D), idx: (B, N, k) | (N, k)
+    -> aggregate of x's rank."""
+    if not (x.ndim == y.ndim == idx.ndim) or x.ndim not in (2, 3):
+        raise ValueError(
+            "mrconv expects (N, D)/(M, D)/(N, k) or uniformly batched "
+            f"(B, ...) inputs; got {x.shape}, {y.shape}, {idx.shape}"
+        )
+    squeeze = x.ndim == 2
+    if squeeze:
+        x, y, idx = x[None], y[None], idx[None]
+    b, n, d = x.shape
+    m = y.shape[1]
     block_n = min(block_n, _ceil_to(n, 8))
     block_m = min(block_m, _ceil_to(m, 128))
     n_pad = _ceil_to(n, block_n)
     m_pad = _ceil_to(m, block_m)
-    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
-    y_p = jnp.pad(y, ((0, m_pad - m), (0, 0)))
-    idx_p = jnp.pad(idx, ((0, n_pad - n), (0, 0)))
+    x_p = jnp.pad(x, ((0, 0), (0, n_pad - n), (0, 0)))
+    y_p = jnp.pad(y, ((0, 0), (0, m_pad - m), (0, 0)))
+    idx_p = jnp.pad(idx, ((0, 0), (0, n_pad - n), (0, 0)))
     out = mrconv_pallas(x_p, y_p, idx_p, block_n=block_n, block_m=block_m,
                         interpret=interpret)
-    return out[:n].astype(x.dtype)
+    out = out[:, :n].astype(x.dtype)
+    return out[0] if squeeze else out
 
 
 def digc_topk(
@@ -52,11 +69,12 @@ def digc_topk(
 ):
     """Fused-kernel DIGC with automatic padding and dilated selection.
 
-    x: (N, D) nodes, y: (M, D) co-nodes, optional pos_bias (N, M).
-    Returns idx (N, k) [, dist (N, k)].
+    x: (B, N, D) | (N, D) nodes, y co-nodes, optional pos_bias
+    (B, N, M) | (N, M). Returns idx (B, N, k) [, dist] matching x's rank.
     """
-    n, feat = x.shape
-    m = y.shape[0]
+    x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
+    _, n, feat = x3.shape
+    m = y3.shape[1]
     kd = k * dilation
     if kd > m:
         raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
@@ -64,11 +82,11 @@ def digc_topk(
     block_m = min(block_m, _ceil_to(m, 128))
     n_pad = _ceil_to(n, block_n)
     m_pad = _ceil_to(m, block_m)
-    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
-    y_p = jnp.pad(y, ((0, m_pad - m), (0, 0)))
+    x_p = jnp.pad(x3, ((0, 0), (0, n_pad - n), (0, 0)))
+    y_p = jnp.pad(y3, ((0, 0), (0, m_pad - m), (0, 0)))
     p_p = None
-    if pos_bias is not None:
-        p_p = jnp.pad(pos_bias, ((0, n_pad - n), (0, m_pad - m)))
+    if p3 is not None:
+        p_p = jnp.pad(p3, ((0, 0), (0, n_pad - n), (0, m_pad - m)))
     dist, idx = digc_topk_pallas(
         x_p,
         y_p,
@@ -83,8 +101,43 @@ def digc_topk(
         mxu_bf16=mxu_bf16,
         bucket_rounds=bucket_rounds,
     )
-    dist = dist[:n, ::dilation]
-    idx = idx[:n, ::dilation]
+    dist = dist[:, :n, ::dilation]
+    idx = idx[:, :n, ::dilation]
+    if squeeze:
+        dist, idx = dist[0], idx[0]
     if return_dists:
         return idx, dist
     return idx
+
+
+# --------------------------------------------------------------------------
+# Registry entry (DESIGN.md §4).
+
+
+def _build_pallas(x, y, pos_bias, spec: DigcSpec):
+    return digc_topk(
+        x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
+        causal=spec.causal, return_dists=True,
+        block_n=spec.block_n if spec.block_n is not None else 128,
+        block_m=spec.block_m if spec.block_m is not None else 256,
+        interpret=spec.interpret if spec.interpret is not None else True,
+        packed=bool(spec.packed),
+        mxu_bf16=bool(spec.mxu_bf16),
+        bucket_rounds=spec.bucket_rounds if spec.bucket_rounds is not None else 0,
+    )
+
+
+register(GraphBuilder(
+    name="pallas",
+    build=_build_pallas,
+    knobs=frozenset({
+        "block_n", "block_m", "interpret", "packed", "mxu_bf16",
+        "bucket_rounds",
+    }),
+    exact=True,  # packed / bucket_rounds knobs opt into approximation
+    supports_pos_bias=True,
+    supports_causal=True,
+    aggregate=mrconv,  # fused gather-aggregate kernel
+    doc="fused Pallas kernel: distance + streaming top-kd in VMEM, "
+        "batch as leading grid dim",
+))

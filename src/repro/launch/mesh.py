@@ -7,7 +7,11 @@ the single real CPU device."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5; older versions have neither AxisType nor the kwarg
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,11 +32,11 @@ def make_mesh(shape, axes):
             f"mesh {shape} needs {n} devices, have {len(devices)} — the "
             "dry-run entrypoint sets xla_force_host_platform_device_count"
         )
+    kwargs = {}
+    if AxisType is not None:
+        kwargs["axis_types"] = (AxisType.Auto,) * len(axes)
     return jax.make_mesh(
-        tuple(shape),
-        tuple(axes),
-        devices=devices[:n],
-        axis_types=(AxisType.Auto,) * len(axes),
+        tuple(shape), tuple(axes), devices=devices[:n], **kwargs
     )
 
 

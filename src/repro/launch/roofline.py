@@ -103,6 +103,8 @@ class Roofline:
 
 def analyze(compiled, *, hlo_text=None) -> Roofline:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax < 0.5 returns [dict]
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -3,8 +3,12 @@
 Each Grapher block re-runs DIGC on the current features (the *dynamic*
 in DIGC) and aggregates neighbors with max-relative graph convolution,
 exactly the pipeline the paper accelerates. The DIGC implementation is
-a constructor choice (`digc_impl`: reference | blocked | pallas |
-ring), mirroring the paper's "modular similarity mechanism" claim.
+a constructor choice resolved through the GraphBuilder registry
+(`digc_impl` names any registered builder — reference | blocked |
+pallas | cluster | axial | ... — or pass a full DigcSpec), mirroring
+the paper's "modular similarity mechanism" claim. The model contains no
+strategy-specific code: DIGC runs batched over (B, N, D) directly and
+each builder brings its own fused aggregation if it has one.
 
 Pyramid variants pool co-nodes by the stage reduction ratio r before
 graph construction (paper §III-C: Y from spatial pooling, M = N / r^2).
@@ -16,11 +20,12 @@ jit-friendly); this changes training dynamics, not DIGC structure.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.builder import DigcSpec, get_builder
 from repro.core.digc import digc
 from repro.core.graph import mr_aggregate
 from repro.models.module import spec
@@ -136,10 +141,14 @@ def patchify(images: jax.Array, patch: int) -> jax.Array:
     return x.reshape(b, gh * gw, patch * patch * c)
 
 
-def _pool_conodes(x: jax.Array, grid: int, r: int) -> jax.Array:
-    """(B, N, D) on a grid -> average-pooled co-nodes (B, N/r^2, D)."""
+def _pool_conodes(x: jax.Array, grid: int, r: int) -> Optional[jax.Array]:
+    """(B, N, D) on a grid -> average-pooled co-nodes (B, N/r^2, D).
+
+    Returns None for r <= 1: co-nodes are the nodes themselves, and
+    None is the registry's explicit self-graph marker (DESIGN.md §4).
+    """
     if r <= 1:
-        return x
+        return None
     b, n, d = x.shape
     g2 = grid // r
     xg = x.reshape(b, g2, r, g2, r, d)
@@ -164,41 +173,44 @@ def _dilation_for(cfg: VigConfig, global_block: int, m: int) -> int:
     return d
 
 
+def resolve_digc_spec(cfg: VigConfig,
+                      digc_impl: Union[str, DigcSpec, None]) -> DigcSpec:
+    """Normalize the model's DIGC choice to a DigcSpec.
+
+    A spec that leaves ``k`` unset (the default) inherits cfg.k, so
+    passing ``DigcSpec(impl="pallas")`` only picks the implementation;
+    an explicit ``k`` in the spec wins over the config.
+    """
+    choice = digc_impl if digc_impl is not None else cfg.digc_impl
+    if isinstance(choice, DigcSpec):
+        return choice if choice.k is not None else choice.replace(k=cfg.k)
+    return DigcSpec(impl=choice, k=cfg.k)
+
+
 def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
-                  digc_impl: Optional[str] = None):
-    """x (B, N, D) -> (B, N, D); one Grapher + FFN residual pair."""
-    impl = digc_impl or cfg.digc_impl
+                  digc_spec: Optional[DigcSpec] = None):
+    """x (B, N, D) -> (B, N, D); one Grapher + FFN residual pair.
+
+    Graph construction runs batched through the registry — no per-sample
+    closure, no strategy branching; the builder supplies its fused
+    aggregation (e.g. the MRConv Pallas kernel) when it has one.
+    """
+    dspec = digc_spec if digc_spec is not None else resolve_digc_spec(cfg, None)
     h = _ln(x, bp["ln_g"]["scale"])
     h = h @ bp["fc_in"]
-    cond = _pool_conodes(h, grid, r)
-    m = cond.shape[1]
-    k_eff = min(cfg.k, m // max(dilation, 1)) or 1
+    cond = _pool_conodes(h, grid, r)  # None = self-graph
+    m = cond.shape[1] if cond is not None else h.shape[1]
+    k_eff = min(dspec.k, m // max(dilation, 1)) or 1
     if k_eff * dilation > m:
         dilation = 1
-
-    def one(hb, cb):
-        if impl == "cluster":  # ClusterViG-family two-stage construction
-            from repro.core.strategies import cluster_digc
-
-            idx = cluster_digc(hb, cb, k=k_eff, dilation=dilation,
-                               n_clusters=max(m // 28, 4), n_probe=8)
-        elif impl == "axial":  # GreedyViG-family axial construction
-            from repro.core.strategies import axial_digc
-
-            if r > 1:  # axial needs co-nodes == the node grid
-                idx = digc(hb, cb, k=k_eff, dilation=dilation, impl="blocked")
-            else:
-                idx = axial_digc(hb, grid_h=grid, grid_w=grid, k=k_eff,
-                                 dilation=dilation)
-        else:
-            idx = digc(hb, cb, k=k_eff, dilation=dilation, impl=impl)
-        if impl == "pallas":  # fused gather-aggregate kernel too
-            from repro.kernels.ops import mrconv
-
-            return mrconv(hb, cb, idx)
-        return mr_aggregate(hb, cb, idx)
-
-    agg = jax.vmap(one)(h, cond)
+    # k/dilation/grid geometry are stage-derived: override whatever the
+    # incoming spec carries (pyramid stages shrink the grid every
+    # downsample, so a fixed user grid would go stale).
+    dspec = dspec.replace(k=k_eff, dilation=dilation).with_grid(grid, grid)
+    builder = get_builder(dspec.impl)
+    idx = digc(h, cond, spec=dspec)  # (B, N, k)
+    aggregate = builder.aggregate if builder.aggregate is not None else mr_aggregate
+    agg = aggregate(h, cond if cond is not None else h, idx)
     h = jnp.concatenate([h, agg], axis=-1) @ bp["fc_graph"]
     h = jax.nn.gelu(h) @ bp["fc_out"]
     x = x + h
@@ -207,8 +219,13 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     return x + f
 
 
-def vig_forward(params, images, cfg: VigConfig, *, digc_impl: Optional[str] = None):
-    """images (B, H, W, C) -> class logits (B, num_classes)."""
+def vig_forward(params, images, cfg: VigConfig, *,
+                digc_impl: Union[str, DigcSpec, None] = None):
+    """images (B, H, W, C) -> class logits (B, num_classes).
+
+    ``digc_impl`` may be a registered builder name or a full DigcSpec.
+    """
+    spec = resolve_digc_spec(cfg, digc_impl)
     x = patchify(images, cfg.patch) @ params["stem"]
     x = x + params["pos"]
     grid = cfg.base_grid
@@ -220,7 +237,7 @@ def vig_forward(params, images, cfg: VigConfig, *, digc_impl: Optional[str] = No
             dil = _dilation_for(cfg, gb, m)
             x = grapher_block(
                 params[f"stage{si}"][f"block{bi}"], x, cfg, grid, r, dil,
-                digc_impl=digc_impl,
+                digc_spec=spec,
             )
             gb += 1
         if si + 1 < len(cfg.depths):

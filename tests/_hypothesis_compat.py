@@ -1,0 +1,22 @@
+"""Shared optional-hypothesis shim (requirements-dev.txt): property
+tests skip cleanly when hypothesis is absent; everything else runs.
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+
+    def given(**kwargs):
+        del kwargs
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(**kwargs):
+        del kwargs
+        return lambda fn: fn
+
+    class st:  # noqa: N801 - stand-in namespace
+        integers = staticmethod(lambda *a, **k: None)

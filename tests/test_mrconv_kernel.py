@@ -4,7 +4,8 @@ pure-jnp oracle (core.graph.mr_aggregate)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import mr_aggregate
 from repro.kernels import ops

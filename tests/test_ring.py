@@ -69,3 +69,25 @@ def test_ring_digc_self_graph():
         """
     )
     assert "RING_SELF_OK" in out
+
+
+@pytest.mark.slow
+def test_ring_digc_batched_registry():
+    """(B, N, D) through the registry == stacked per-image reference."""
+    out = _run(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import DigcSpec, digc
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.RandomState(4)
+        x = jnp.asarray(rng.randn(2, 64, 16), jnp.float32)
+        ir = digc(x, k=4, impl="reference")
+        spec = DigcSpec(impl="ring", k=4, mesh=mesh)
+        with mesh:
+            ig = digc(x, spec=spec)
+        assert ig.shape == (2, 64, 4), ig.shape
+        assert bool(jnp.all(ir == ig))
+        print("RING_BATCHED_OK")
+        """
+    )
+    assert "RING_BATCHED_OK" in out
