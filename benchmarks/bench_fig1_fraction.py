@@ -27,9 +27,9 @@ def _forward_fixed_graph(params, imgs, cfg, idx_cache):
             bp = params[f"stage{si}"][f"block{bi}"]
             h = vig._ln(x, bp["ln_g"]["scale"])
             h = h @ bp["fc_in"]
-            cond = vig._pool_conodes(h, grid, r)
+            cond = vig._pool_conodes(h, grid, r)  # None = self-graph
             idx = idx_cache[gb]
-            agg = jax.vmap(lambda hb, cb, ib: mr_aggregate(hb, cb, ib))(h, cond, idx)
+            agg = mr_aggregate(h, cond if cond is not None else h, idx)
             h = jnp.concatenate([h, agg], axis=-1) @ bp["fc_graph"]
             h = jax.nn.gelu(h) @ bp["fc_out"]
             x = x + h
@@ -58,7 +58,7 @@ def run(resolutions=(256, 512, 1024), depth=4):
         work = vig.count_digc_work(cfg)
         x0 = vig.patchify(imgs, cfg.patch) @ params["stem"] + params["pos"]
         idx_cache = [
-            jax.vmap(lambda a: digc_blocked(a, a, k=w["k"], dilation=w["dilation"]))(x0)
+            digc_blocked(x0, x0, k=w["k"], dilation=w["dilation"])
             for w in work
         ]
         fixed = jax.jit(lambda p, im: _forward_fixed_graph(p, im, cfg, idx_cache))

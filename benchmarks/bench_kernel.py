@@ -35,11 +35,11 @@ def _hillclimb():
              f"bound={e['bound']};speedup={base/e['latency_s']:.2f}x;mxu_frac={mxu:.3f}")
 
 
-def _bucketed_recall():
+def _bucketed_recall(n=2048):
     from repro.kernels import ref as kref
 
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal((2048, 192)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n, 192)), jnp.float32)
     _, i_ref = kref.digc_reference(x, x, kd=16)
     a = np.asarray(i_ref)
     for rounds in (1, 2, 3):
@@ -47,22 +47,36 @@ def _bucketed_recall():
                         packed=True, bucket_rounds=rounds)
         i_b = digc(x, spec=spec)
         b = np.asarray(i_b)
-        rec = np.mean([len(set(a[i]) & set(b[i])) / 16 for i in range(2048)])
+        rec = np.mean([len(set(a[i]) & set(b[i])) / 16 for i in range(n)])
         emit(f"kernel/bucketed_r{rounds}_recall", rec * 100,
-             "recall@16 percent, N=2048 self-graph (registry pallas spec)")
+             f"recall@16 percent, N={n} self-graph (registry pallas spec)")
 
 
-def run():
+def _merge_ablation(x, k, iters=2):
+    """Engine merge-strategy sweep at a fixed tile config: the LSM/GMM
+    realization is the lever the block_m sweep above cannot move."""
+    n, d = x.shape[-2], x.shape[-1]
+    for merge in ("topk", "select", "packed"):
+        spec = DigcSpec(impl="blocked", k=k, block_m=1024, merge=merge)
+        fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
+        t = timeit(fn, x, iters=iters)
+        emit(f"kernel/engine_merge_{merge}_us", t * 1e6,
+             f"N={n};D={d};block_m=1024")
+
+
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
-    n, d, k = 4096, 192, 9
+    n, d, k = (512, 192, 9) if smoke else (4096, 192, 9)
+    iters = 1 if smoke else 2
     x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
     for bm in (256, 512, 1024):
         spec = DigcSpec(impl="blocked", k=k, block_m=bm)
         fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
-        t = timeit(fn, x, iters=2)
+        t = timeit(fn, x, iters=iters)
         emit(f"kernel/blocked_bm{bm}_us", t * 1e6, f"N={n};D={d}")
+    _merge_ablation(x, k, iters=iters)
     _hillclimb()
-    _bucketed_recall()
+    _bucketed_recall(n=256 if smoke else 2048)
     return True
 
 

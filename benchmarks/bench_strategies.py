@@ -2,7 +2,14 @@
 "supports diverse graph construction strategies"). The impl list comes
 from the GraphBuilder registry — a newly registered strategy shows up
 here with zero benchmark edits. Runtime + recall vs Algorithm 1 on a
-ViG-style square grid, batched (B, N, D) as the serving path runs it."""
+ViG-style square grid, batched (B, N, D) as the serving path runs it.
+
+The blocked tier runs with the workload-autotuned engine schedule
+(core/tuner.py; the chosen tile config is recorded per row and
+persisted to TUNE_CACHE), every row carries speedup_vs_reference, and a
+high-resolution scenario (N=12544 — the paper's 95%-of-latency regime)
+exercises the two-level tiling where the single-level path would
+materialize 600+ MB distance rows."""
 
 import numpy as np
 import jax
@@ -10,12 +17,15 @@ import jax.numpy as jnp
 
 from repro.core import DigcSpec, digc, list_builders
 from repro.core.strategies import recall_vs_exact
+from repro.core.tuner import DigcTuner
 from benchmarks.common import emit, timeit
 
 # Per-impl workload scale: the interpret-mode Pallas kernel emulates the
 # TPU grid on CPU, so it benchmarks at a smaller grid than the XLA tiers.
 GRID_SIDE = {"default": 56, "pallas": 16}
+HIGH_RES_SIDE = 112  # N = 12544: ViG @ 1792^2 / patch 16
 BATCH = 2
+TUNE_CACHE = ".digc_tune.json"
 
 
 def _clustered(rng, b, n, d, c=16, spread=0.15):
@@ -34,6 +44,15 @@ def _spec_for(builder, h, w, k):
     if "grid_h" in builder.knobs:
         knobs = {"grid_h": h, "grid_w": w}
     return DigcSpec(impl=builder.name, k=k, **knobs)
+
+
+def _tuned_blocked_spec(tuner, x, k):
+    """Autotune the engine schedule for this workload; describe it."""
+    spec, result = tuner.tune(x, spec=DigcSpec(impl="blocked", k=k))
+    c = result.config
+    desc = (f"tile=bn{c.block_n or 'N'}xbm{c.block_m};merge={c.merge};"
+            f"fuse_norms={int(c.fuse_norms)};tune_source={result.source}")
+    return spec, desc
 
 
 def _cluster_probe_ablation(rng, d, k):
@@ -56,9 +75,56 @@ def _cluster_probe_ablation(rng, d, k):
              "are the IVF worst case)")
 
 
-def run():
+def _high_res_scenario(rng, tuner, d, k, iters=1):
+    """N=12544: the regime where the paper reports DIGC at 95% of ViG
+    latency. Exercises the engine's two-level tiling (a single-level
+    sweep would hold B*N*block_m distance rows; reference materializes
+    a 12544^2 matrix). Axial is excluded: its batched candidate gather
+    is O(N*(H+W)*D) live — ~2 GB here."""
+    h = HIGH_RES_SIDE
+    n = h * h
+    b = 1
+    x = _clustered(rng, b, n, d)
+    ref_spec = DigcSpec(impl="reference", k=k)
+    f_ref = jax.jit(lambda a: digc(a, spec=ref_spec))
+    t_ref = timeit(f_ref, x, iters=iters)
+    emit(f"strategies/highres_reference_us", t_ref * 1e6,
+         f"B={b};N={n};D={d};speedup_vs_reference=1.00x")
+    spec, tile_desc = _tuned_blocked_spec(tuner, x, k)
+    f_blk = jax.jit(lambda a, s=spec: digc(a, spec=s))
+    t_blk = timeit(f_blk, x, iters=iters)
+    rec = recall_vs_exact(x, x, f_blk(x), k)
+    emit(f"strategies/highres_blocked_us", t_blk * 1e6,
+         f"recall_vs_exact={rec:.3f};B={b};N={n};D={d};"
+         f"speedup_vs_reference={t_ref/t_blk:.2f}x;{tile_desc}")
+    cl_spec = DigcSpec(impl="cluster", k=k)
+    f_cl = jax.jit(lambda a, s=cl_spec: digc(a, spec=s))
+    t_cl = timeit(f_cl, x, iters=iters)
+    rec = recall_vs_exact(x, x, f_cl(x), k)
+    emit(f"strategies/highres_cluster_us", t_cl * 1e6,
+         f"recall_vs_exact={rec:.3f};B={b};N={n};D={d};"
+         f"speedup_vs_reference={t_ref/t_cl:.2f}x")
+
+
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     d, k = 96, 9
+    # Smoke runs tune toy workloads: keep them out of the committed
+    # tune cache (in-memory tuner; DigcTuner(None) never persists).
+    tuner = DigcTuner(None if smoke else TUNE_CACHE)
+    iters = 1 if smoke else 2
+    grid_default = 14 if smoke else GRID_SIDE["default"]
+
+    # Reference timings per workload scale, for speedup_vs_reference.
+    ref_t: dict[int, float] = {}
+
+    def reference_time(x):
+        n = x.shape[1]
+        if n not in ref_t:
+            f = jax.jit(lambda a: digc(a, k=k, impl="reference"))
+            ref_t[n] = timeit(f, x, iters=iters)
+        return ref_t[n]
+
     for builder in list_builders():
         if builder.distributed:
             # No fake 0-us row in the perf record: distributed builders
@@ -66,13 +132,21 @@ def run():
             print(f"# strategies/{builder.name}: skipped, needs a device mesh",
                   flush=True)
             continue
-        h = w = GRID_SIDE.get(builder.name, GRID_SIDE["default"])
+        h = w = (grid_default if smoke
+                 else GRID_SIDE.get(builder.name, GRID_SIDE["default"]))
         n = h * w
         x = (_clustered(rng, BATCH, n, d) if not builder.exact
              else jnp.asarray(rng.standard_normal((BATCH, n, d)), jnp.float32))
-        spec = _spec_for(builder, h, w, k)
+        tile_desc = ""
+        if builder.name == "blocked":
+            spec, tile_desc = _tuned_blocked_spec(tuner, x, k)
+            tile_desc = ";" + tile_desc
+        else:
+            spec = _spec_for(builder, h, w, k)
         fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
-        t = timeit(fn, x, iters=2)
+        # the reference row IS the speedup denominator: time it once
+        t = reference_time(x) if builder.name == "reference" else timeit(
+            fn, x, iters=iters)
         idx = fn(x)
         rec = recall_vs_exact(x, x, idx, k)
         work = 1.0
@@ -83,10 +157,14 @@ def run():
             work = npr / nc
         elif builder.name == "axial":
             work = (h + w) / n
+        speedup = reference_time(x) / t
         emit(f"strategies/{builder.name}_us", t * 1e6,
              f"recall_vs_exact={rec:.3f};distance_work={work:.2f}x;"
-             f"B={BATCH};N={n};D={d};exact={builder.exact}")
-    _cluster_probe_ablation(rng, d, k)
+             f"B={BATCH};N={n};D={d};exact={builder.exact};"
+             f"speedup_vs_reference={speedup:.2f}x{tile_desc}")
+    if not smoke:
+        _cluster_probe_ablation(rng, d, k)
+        _high_res_scenario(rng, tuner, d, k)
     return True
 
 

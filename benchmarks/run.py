@@ -24,18 +24,36 @@ SUITES = {
 }
 
 
+# Per-suite kwargs for the CI smoke mode: exercise every harness code
+# path (timing loops, tuner, JSON dump) at toy workloads in ~a minute.
+SMOKE_ARGS = {
+    "table3": dict(resolutions=(256,), iters=1),
+    "table4": dict(res=128, depth=1),
+    "fig1": dict(resolutions=(256,), depth=1),
+    "kernel": dict(smoke=True),
+    "strategies": dict(smoke=True),
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=list(SUITES))
     ap.add_argument("--fast", action="store_true",
                     help="smaller resolutions for quick runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy workloads, 1 iter: CI harness exercise "
+                         "(not a perf record)")
     ap.add_argument("--json", default="BENCH_digc.json",
                     help="output JSON path ('' disables)")
     args = ap.parse_args()
+    if args.smoke and args.json == "BENCH_digc.json":
+        args.json = ""  # never overwrite the perf record with smoke rows
     header()
     for name in args.only:
         fn = SUITES[name]
-        if args.fast and name == "table3":
+        if args.smoke:
+            fn(**SMOKE_ARGS.get(name, {}))
+        elif args.fast and name == "table3":
             fn(resolutions=(256, 512), iters=1)
         elif args.fast and name == "fig1":
             fn(resolutions=(256,))

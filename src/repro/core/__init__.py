@@ -23,6 +23,24 @@ from repro.core.digc import (
     merge_topk,
     pairwise_sq_dists,
 )
+from repro.core.engine import (
+    MERGE_STRATEGIES,
+    DigcCache,
+    select_topkd,
+    stream_topk,
+)
+from repro.core.packedkey import (
+    INT_BIG,
+    idx_bits_for,
+    pack_keys,
+    unpack_keys,
+)
+from repro.core.tuner import (
+    DigcTuner,
+    TileConfig,
+    autotune_spec,
+    workload_key,
+)
 from repro.core.graph import (
     AGGREGATORS,
     degree_histogram,

@@ -51,6 +51,9 @@ class DigcSpec:
     # --- blocked / pallas tiling
     block_n: Optional[int] = None
     block_m: Optional[int] = None
+    # --- streaming-engine merge strategy (core/engine.py)
+    merge: Optional[str] = None
+    fuse_norms: Optional[bool] = None
     # --- pallas kernel variants (§Perf iterations)
     interpret: Optional[bool] = None
     packed: Optional[bool] = None
@@ -122,6 +125,9 @@ class GraphBuilder:
     supports_pos_bias: bool = False
     supports_causal: bool = False
     distributed: bool = False
+    # Builders that can reuse DigcCache state (co-node norms, cluster
+    # centroids) accept build(..., cache=, cache_key=) keywords.
+    supports_cache: bool = False
     # Optional fused neighbor aggregation (x, y, idx) -> (B, N, D);
     # None means the consumer uses the generic mr_aggregate.
     aggregate: Optional[Callable] = None

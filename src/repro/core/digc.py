@@ -19,10 +19,10 @@ Implementation tiers (see DESIGN.md §3):
     B x N x M distance matrix (this is the paper's CPU/GPU baseline and
     the oracle for every test).
   * ``digc_blocked``     -- the paper's streaming insight at the XLA
-    level: co-nodes are processed in uniform blocks; a running, sorted
-    top-(k*d) candidate list is merged with each block (LSM+GMM as an
-    online reduction). Live memory is O(B * N * block_m), never
-    O(B * N * M).
+    level, routed through the unified engine (``repro.core.engine``,
+    DESIGN.md §5): a two-level (block_n x block_m) tile grid with a
+    pluggable LSM/GMM merge (exact grouped selection by default). Live
+    memory is O(B * block_n * block_m), never O(B * N * M).
   * ``digc_pallas``      -- the fused Pallas TPU kernel
     (``repro.kernels.digc_topk``): distance + selection in one pass with
     the running candidate buffer resident in VMEM and batch as the
@@ -146,77 +146,46 @@ def digc_blocked(
     dilation: int = 1,
     pos_bias: Optional[Array] = None,
     block_m: int = 256,
+    block_n: Optional[int] = None,
+    merge: Optional[str] = None,
+    fuse_norms: bool = False,
+    mxu_bf16: bool = False,
+    sq_y: Optional[Array] = None,
     return_dists: bool = False,
     causal: bool = False,
 ):
-    """Streaming DIGC: scan over co-node blocks with a running top-kd merge.
+    """Streaming DIGC through the unified engine (``core/engine.py``).
 
-    Paper-faithful dataflow (DCM block -> local candidates -> global
+    Paper-faithful dataflow (DCM tile -> local selection -> global
     merge -> dilated selection) expressed in pure XLA so it runs on any
-    backend; the Pallas kernel implements the same dataflow fused. The
-    whole batch advances through each co-node block together, so live
-    memory is O(B * N * block_m).
+    backend; the Pallas kernel implements the same dataflow fused.
+    Two-level tiling: the whole batch advances through each
+    (block_n x block_m) tile together, so live memory is
+    O(B * block_n * block_m) — never O(B * N * M). ``merge`` selects
+    the LSM/GMM realization ("select" exact grouped extraction,
+    "topk" concat+top_k, "packed" tie-tolerant packed keys);
+    ``fuse_norms`` folds the norm terms into the distance matmul
+    (tie-tolerant), ``mxu_bf16`` runs the contraction in bf16.
     """
+    from repro.core.engine import stream_topk
+
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
-    x3 = x3.astype(jnp.float32)
-    y3 = y3.astype(jnp.float32)
-    b, n, feat = x3.shape
-    m = y3.shape[1]
     kd = k * dilation
-    if kd > m:
-        raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
-    block_m = min(block_m, m)
-    m_pad = _ceil_to(m, block_m)
-    nb = m_pad // block_m
-
-    y_p = jnp.pad(y3, ((0, 0), (0, m_pad - m), (0, 0)))
-    sq_y = jnp.sum(y_p * y_p, axis=-1)  # (B, m_pad)
-    # Mask padded co-nodes out via their squared norm term.
-    sq_y = jnp.where(jnp.arange(m_pad)[None, :] < m, sq_y, BIG)
-    y_blocks = y_p.reshape(b, nb, block_m, feat).transpose(1, 0, 2, 3)
-    sqy_blocks = sq_y.reshape(b, nb, block_m).transpose(1, 0, 2)
-    offsets = jnp.arange(nb, dtype=jnp.int32) * block_m
-
-    if p3 is not None:
-        p_pad = jnp.pad(p3.astype(jnp.float32), ((0, 0), (0, 0), (0, m_pad - m)))
-        p_blocks = p_pad.reshape(b, n, nb, block_m).transpose(2, 0, 1, 3)
-    else:
-        p_blocks = None
-
-    sq_x = jnp.sum(x3 * x3, axis=-1)[..., None]  # (B, N, 1)
-
-    def step(carry, blk):
-        run_d, run_i = carry
-        if p_blocks is None:
-            y_blk, sqy_blk, off = blk
-            p_blk = None
-        else:
-            y_blk, sqy_blk, off, p_blk = blk
-        d_blk = (
-            sq_x
-            - 2.0 * jnp.einsum("bnd,bmd->bnm", x3, y_blk)
-            + sqy_blk[:, None, :]
-        )
-        if p_blk is not None:
-            d_blk = d_blk + p_blk
-        blk_i = off + lax.broadcasted_iota(jnp.int32, d_blk.shape, 2)
-        if causal:
-            rows = lax.broadcasted_iota(jnp.int32, d_blk.shape, 1)
-            d_blk = jnp.where(blk_i <= rows, d_blk, BIG)
-        run_d, run_i = merge_topk(run_d, run_i, d_blk, blk_i, kd)
-        return (run_d, run_i), None
-
-    init = (
-        jnp.full((b, n, kd), BIG, jnp.float32),
-        jnp.zeros((b, n, kd), jnp.int32),
+    dist, idx = stream_topk(
+        x3,
+        None if y is None else y3,
+        p3,
+        kd=kd,
+        block_m=block_m,
+        block_n=block_n,
+        merge=merge,
+        fuse_norms=fuse_norms,
+        mxu_bf16=mxu_bf16,
+        causal=causal,
+        sq_y=sq_y,
     )
-    xs = (y_blocks, sqy_blocks, offsets)
-    if p_blocks is not None:
-        xs = xs + (p_blocks,)
-    (run_d, run_i), _ = lax.scan(step, init, xs)
-
-    idx = dilate(run_i, dilation)
-    dist = dilate(run_d, dilation)
+    idx = dilate(idx, dilation)
+    dist = dilate(dist, dilation)
     if squeeze:
         idx, dist = idx[0], dist[0]
     if return_dists:
@@ -235,6 +204,8 @@ def digc(
     pos_bias: Optional[Array] = None,
     return_dists: bool = False,
     causal: Optional[bool] = None,
+    cache=None,
+    cache_key=None,
     **knobs,
 ):
     """Public DIGC API: a thin GraphBuilder-registry lookup.
@@ -246,6 +217,12 @@ def digc(
     ``y=None`` is the self-graph spelling — builders that distinguish it
     (axial) see None; passing x explicitly as y counts as external
     co-nodes (so eager and jitted calls agree).
+
+    ``cache``/``cache_key`` (a ``repro.core.engine.DigcCache`` plus a
+    caller-chosen identity for the reusable state, e.g. a model layer
+    name or a gallery version) let cache-aware builders skip
+    recomputing co-node norms and cluster assignments across layers
+    and serving requests; builders without cache support ignore them.
     """
     spec = resolve_spec(
         spec, impl=impl, k=k, dilation=dilation, causal=causal, **knobs
@@ -253,16 +230,18 @@ def digc(
     builder = get_builder(spec.impl)
     builder.validate(spec, has_pos_bias=pos_bias is not None)
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
-    idx, dist = builder.build(x3, None if y is None else y3, p3, spec)
+    if cache is not None and builder.supports_cache:
+        idx, dist = builder.build(
+            x3, None if y is None else y3, p3, spec,
+            cache=cache, cache_key=cache_key,
+        )
+    else:
+        idx, dist = builder.build(x3, None if y is None else y3, p3, spec)
     if squeeze:
         idx, dist = idx[0], dist[0]
     if return_dists:
         return idx, dist
     return idx
-
-
-def _ceil_to(v: int, mult: int) -> int:
-    return ((v + mult - 1) // mult) * mult
 
 
 @functools.partial(jax.jit, static_argnames=("k", "dilation"))
@@ -283,10 +262,21 @@ def _build_reference(x, y, pos_bias, spec: DigcSpec):
 
 
 def _build_blocked(x, y, pos_bias, spec: DigcSpec):
+    # Exact tier: no implicit cache reads. Per-call norm reuse
+    # (self-graph ||x||^2 == ||y||^2) happens inside the engine; a
+    # caller serving a *fixed* co-node gallery passes precomputed norms
+    # explicitly via digc_blocked(sq_y=cache.norms(gallery_key, y)) —
+    # an implicit cache keyed by call-site would silently serve stale
+    # norms once the co-node contents change (e.g. per-layer pooled
+    # features), corrupting an exact tier.
     return digc_blocked(
         x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
         causal=spec.causal, return_dists=True,
         block_m=spec.block_m if spec.block_m is not None else 256,
+        block_n=spec.block_n,
+        merge=spec.merge,
+        fuse_norms=bool(spec.fuse_norms),
+        mxu_bf16=bool(spec.mxu_bf16),
     )
 
 
@@ -303,9 +293,10 @@ register(GraphBuilder(
 register(GraphBuilder(
     name="blocked",
     build=_build_blocked,
-    knobs=frozenset({"block_m"}),
-    exact=True,
+    knobs=frozenset({"block_n", "block_m", "merge", "fuse_norms", "mxu_bf16"}),
+    exact=True,  # merge="packed" / fuse_norms / mxu_bf16 opt into tie-tolerance
     supports_pos_bias=True,
     supports_causal=True,
-    doc="streaming XLA tier: co-node blocks + running top-kd merge",
+    doc="streaming XLA engine: two-level (block_n x block_m) tiling + "
+        "pluggable LSM/GMM merge (select | topk | packed)",
 ))

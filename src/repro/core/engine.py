@@ -1,0 +1,435 @@
+"""Unified streaming DIGC engine: two-level tiling + pluggable merges.
+
+Every exact XLA tier routes through ``stream_topk``, the engine's one
+entry point. It reproduces the paper's module split at the XLA level —
+DCM (a distance tile per grid step), LSM (``select_topkd``, a grouped
+local selection), GMM (a global merge of per-tile survivors) — with
+two structural upgrades over the PR-1 ``digc_blocked``:
+
+* **Two-level tiling.** The query dimension N tiles as well as the
+  co-node dimension M (``block_n`` x ``block_m`` grid, outer scan over
+  query blocks, inner scan over co-node blocks), so live memory is
+  O(B * block_n * block_m) instead of O(B * N * block_m). High
+  resolution ViG stages (N = 12544+) stream through a cache-sized
+  working set instead of materializing 100+ MB of distance rows.
+* **Merge strategies.** The LSM/GMM realization is a knob
+  (``DigcSpec.merge``), because the best selection algorithm is
+  backend-dependent (measured, see ``core/tuner.py``):
+
+    - ``"select"`` (default) — grouped two-level extraction: each
+      distance tile is reshaped to (groups, width<=32) lanes, a
+      per-group running min is maintained, and each of the kd rounds
+      touches only the winning group (one gather + O(G + w) lane ops)
+      instead of the full tile. Exact, ties to the lowest index —
+      bit-identical indices to ``lax.top_k``. This replaces the
+      concat + ``lax.top_k`` merge whose cost is a scalar selection
+      sweep over every candidate (~kd * M per query row, independent
+      of block size — why PR-1's block_m sweep was flat).
+    - ``"topk"`` — the PR-1 merge (concatenate + ``lax.top_k``), kept
+      as the oracle merge and for backends where fused top_k wins.
+    - ``"packed"`` — single-int32 packed-key min/mask merge
+      (``core/packedkey.py``), the XLA mirror of the Pallas kernel's
+      packed path. Tie-tolerant (truncated distances), halves merge
+      operand traffic.
+
+* **Norm reuse.** ``||y||^2`` is computed once per call, shared with
+  the self-graph ``||x||^2`` when y is None, accepted precomputed via
+  ``sq_y=`` (the ``DigcCache`` serving hook), and optionally folded
+  into the distance matmul itself (``fuse_norms``: operands augmented
+  to [-2x, 1, ||x||^2] / [y, ||y||^2, 1] so the whole distance tile is
+  one contraction — no separate broadcast-add passes over the tile).
+  ``fuse_norms`` changes fp32 summation order, so it is tie-tolerant
+  rather than bit-exact; it is off unless the tuner measures it a win.
+
+``DigcCache`` carries reusable graph-construction state across layers
+and requests (co-node norms, cluster centroids/assignments). It is a
+host-side cache: it only engages on concrete arrays (never under
+tracing, where a cached value would be baked in as a stale constant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.packedkey import (
+    INT_BIG,
+    idx_bits_for,
+    pack_keys,
+    unpack_keys,
+)
+
+BIG = float(1e30)
+
+MERGE_STRATEGIES = ("select", "topk", "packed")
+
+# Group width for the two-level selection: capped at 32 so the
+# per-group extracted-lane set fits one int32 bitmask.
+_SELECT_GROUP_W = 32
+
+
+def _ceil_to(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# LSM: grouped two-level selection
+
+
+def select_topkd(d_blk: jax.Array, kd: int, group_w: int = _SELECT_GROUP_W):
+    """Exact top-kd of each row of ``d_blk`` (..., N, W), ascending.
+
+    Two-level extraction: columns fold into G = ceil(W / w) groups of
+    w <= 32 lanes; a per-group running min (and an int32 bitmask of
+    already-extracted lanes) is maintained, so each of the kd rounds
+    reduces over G group-mins plus the single winning group — O(G + w)
+    lane ops — instead of sweeping all W candidates. Total cost is one
+    full pass (the group-min build) plus kd tiny rounds, vs the
+    kd-passes-over-W of ``lax.top_k``-style selection.
+
+    Ties resolve to the lowest column (group-major order), matching
+    ``lax.top_k``. Returns (dist (..., N, kd), col (..., N, kd)) where
+    ``col`` indexes into W; rows with fewer than kd finite candidates
+    pad with BIG-distance lanes (indices unspecified, mask on dist).
+    """
+    *lead, n, W = d_blk.shape
+    w = max(1, min(group_w, _SELECT_GROUP_W, W))
+    G = -(-W // w)
+    pad = G * w - W
+    if pad:
+        d_blk = jnp.pad(
+            d_blk,
+            [(0, 0)] * len(lead) + [(0, 0), (0, pad)],
+            constant_values=BIG,
+        )
+    resh = d_blk.reshape(*lead, n, G, w)
+    gmin = jnp.min(resh, axis=-1)  # (..., N, G)
+    bits = jnp.zeros(gmin.shape, jnp.int32)
+    gcol = lax.broadcasted_iota(jnp.int32, gmin.shape, gmin.ndim - 1)
+    wcol = jnp.arange(w, dtype=jnp.int32)
+    out_shape = (*lead, n, kd)
+    out_col = lax.broadcasted_iota(jnp.int32, out_shape, len(out_shape) - 1)
+
+    def body(t, state):
+        gmin, bits, od, oi = state
+        gstar = jnp.argmin(gmin, axis=-1)  # (..., N)
+        grp = jnp.take_along_axis(resh, gstar[..., None, None], axis=-2)
+        grp = jnp.squeeze(grp, -2)  # (..., N, w)
+        mask = jnp.take_along_axis(bits, gstar[..., None], axis=-1)
+        live = jnp.bitwise_and(jnp.right_shift(mask, wcol), 1) == 0
+        grp_m = jnp.where(live, grp, BIG)
+        pos = jnp.argmin(grp_m, axis=-1)  # (..., N)
+        val = jnp.min(grp_m, axis=-1)
+        col = gstar.astype(jnp.int32) * w + pos.astype(jnp.int32)
+        od = jnp.where(out_col == t, val[..., None], od)
+        oi = jnp.where(out_col == t, col[..., None], oi)
+        newbits = mask | jnp.left_shift(jnp.int32(1), pos[..., None])
+        hitg = gcol == gstar[..., None]
+        bits = jnp.where(hitg, newbits, bits)
+        newmin = jnp.min(jnp.where(wcol == pos[..., None], BIG, grp_m), -1)
+        gmin = jnp.where(hitg, newmin[..., None], gmin)
+        return gmin, bits, od, oi
+
+    init = (
+        gmin,
+        bits,
+        jnp.full(out_shape, BIG, jnp.float32),
+        jnp.zeros(out_shape, jnp.int32),
+    )
+    _, _, od, oi = lax.fori_loop(0, kd, body, init)
+    return od, oi
+
+
+# ---------------------------------------------------------------------------
+# GMM merge bodies
+
+
+def merge_topk_xla(run_d, run_i, blk_d, blk_i, kd: int):
+    """Concat + ``lax.top_k`` merge (the PR-1 GMM analogue)."""
+    cand_d = jnp.concatenate([run_d, blk_d], axis=-1)
+    cand_i = jnp.concatenate([run_i, blk_i], axis=-1)
+    neg_top, sel = lax.top_k(-cand_d, kd)
+    return -neg_top, jnp.take_along_axis(cand_i, sel, axis=-1)
+
+
+def merge_packed_xla(run_k, blk_k, kd: int):
+    """Packed-key min/mask merge: kd rounds over one int32 candidate
+    array — the XLA mirror of the Pallas kernel's packed GMM. Keys are
+    unique (index bits), so each masked update hits exactly one lane."""
+    cand = jnp.concatenate([run_k, blk_k], axis=-1)
+    out_shape = run_k.shape[:-1] + (kd,)
+    out_col = lax.broadcasted_iota(jnp.int32, out_shape, len(out_shape) - 1)
+
+    def body(t, state):
+        cand, out = state
+        mn = jnp.min(cand, axis=-1)
+        out = jnp.where(out_col == t, mn[..., None], out)
+        cand = jnp.where(cand == mn[..., None], INT_BIG, cand)
+        return cand, out
+
+    _, out = lax.fori_loop(
+        0, kd, body, (cand, jnp.full(out_shape, INT_BIG, jnp.int32))
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The engine
+
+
+def stream_topk(
+    x3: jax.Array,
+    y3: Optional[jax.Array] = None,
+    pos_bias: Optional[jax.Array] = None,
+    *,
+    kd: int,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    merge: Optional[str] = None,
+    fuse_norms: bool = False,
+    mxu_bf16: bool = False,
+    causal: bool = False,
+    sq_y: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming top-kd over a (block_n x block_m) tile grid.
+
+    x3 (B, N, D); y3 (B, M, D) or None for a self-graph (co-nodes = x,
+    norms shared); pos_bias (B, N, M) or None. Returns (dist, idx),
+    each (B, N, kd), distances ascending, BIG-sentinel invalid lanes.
+
+    ``block_m=None`` streams the whole co-node set in one tile;
+    ``block_n=None`` disables query tiling (PR-1 behavior). ``sq_y``
+    accepts precomputed co-node squared norms (B, M) — the
+    ``DigcCache`` hook for serving a fixed co-node gallery.
+    """
+    if merge is None:
+        merge = "select"
+    if merge not in MERGE_STRATEGIES:
+        raise ValueError(
+            f"unknown merge strategy {merge!r}; one of {MERGE_STRATEGIES}"
+        )
+    self_graph = y3 is None
+    y3 = x3 if self_graph else y3
+    b, n, feat = x3.shape
+    m = y3.shape[1]
+    if kd > m:
+        raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
+
+    x3 = x3.astype(jnp.float32)
+    y3 = x3 if self_graph else y3.astype(jnp.float32)
+    sq_x = jnp.sum(x3 * x3, axis=-1)  # (B, N)
+    if sq_y is None:
+        sq_y = sq_x if self_graph else jnp.sum(y3 * y3, axis=-1)
+    else:
+        sq_y = sq_y.astype(jnp.float32)
+
+    block_m = m if block_m is None else max(1, min(block_m, m))
+    m_pad = _ceil_to(m, block_m)
+    nb_m = m_pad // block_m
+    y_p = jnp.pad(y3, ((0, 0), (0, m_pad - m), (0, 0)))
+    # Padded co-nodes are masked through their norm term.
+    sq_y_p = jnp.pad(sq_y, ((0, 0), (0, m_pad - m)))
+    sq_y_p = jnp.where(jnp.arange(m_pad)[None, :] < m, sq_y_p, BIG)
+
+    if mxu_bf16:
+        fuse_norms = False  # norm terms must stay fp32
+    if fuse_norms:
+        ones_x = jnp.ones((b, n, 1), jnp.float32)
+        ones_y = jnp.ones((b, m_pad, 1), jnp.float32)
+        x_op = jnp.concatenate([-2.0 * x3, ones_x, sq_x[..., None]], axis=-1)
+        y_op = jnp.concatenate([y_p, sq_y_p[..., None], ones_y], axis=-1)
+    elif mxu_bf16:
+        x_op = x3.astype(jnp.bfloat16)
+        y_op = y_p.astype(jnp.bfloat16)
+    else:
+        x_op = x3
+        y_op = y_p
+
+    y_blocks = y_op.reshape(b, nb_m, block_m, y_op.shape[-1]).transpose(1, 0, 2, 3)
+    sqy_blocks = sq_y_p.reshape(b, nb_m, block_m).transpose(1, 0, 2)
+    offsets = jnp.arange(nb_m, dtype=jnp.int32) * block_m
+
+    idx_bits = idx_bits_for(m_pad) if merge == "packed" else 0
+
+    if pos_bias is not None:
+        pos_bias = jnp.pad(
+            pos_bias.astype(jnp.float32), ((0, 0), (0, 0), (0, m_pad - m))
+        )
+
+    def run_queries(xq_op, sqx_q, p_q, row_off):
+        """Top-kd for one query block (B, bn, ...) at global row offset."""
+        bn = xq_op.shape[1]
+
+        def tile_dists(y_blk, sqy_blk, off, p_blk):
+            d_blk = lax.dot_general(
+                xq_op, y_blk, (((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )
+            if not fuse_norms:
+                d_blk = sqx_q[..., None] - 2.0 * d_blk + sqy_blk[:, None, :]
+            if p_blk is not None:
+                d_blk = d_blk + p_blk
+            cols = off + lax.broadcasted_iota(jnp.int32, d_blk.shape, 2)
+            if causal:
+                rows = row_off + lax.broadcasted_iota(
+                    jnp.int32, d_blk.shape, 1
+                )
+                d_blk = jnp.where(cols <= rows, d_blk, BIG)
+            return d_blk, cols
+
+        def p_blk_for(step):
+            if p_q is None:
+                return None
+            return lax.dynamic_slice_in_dim(p_q, step * block_m, block_m, 2)
+
+        if merge == "select":
+            def step(carry, sm):
+                y_blk, sqy_blk, off, step_i = sm
+                d_blk, _ = tile_dists(y_blk, sqy_blk, off, p_blk_for(step_i))
+                vals, col = select_topkd(d_blk, kd)
+                return carry, (vals, off + col)
+
+            _, (vals, idxs) = lax.scan(
+                step, None,
+                (y_blocks, sqy_blocks, offsets,
+                 jnp.arange(nb_m, dtype=jnp.int32)),
+            )
+            if nb_m == 1:
+                return vals[0], idxs[0]
+            cd = vals.transpose(1, 2, 0, 3).reshape(b, bn, nb_m * kd)
+            ci = idxs.transpose(1, 2, 0, 3).reshape(b, bn, nb_m * kd)
+            neg, sel = lax.top_k(-cd, kd)
+            return -neg, jnp.take_along_axis(ci, sel, axis=-1)
+
+        if merge == "packed":
+            def step(run_k, sm):
+                y_blk, sqy_blk, off, step_i = sm
+                d_blk, cols = tile_dists(y_blk, sqy_blk, off, p_blk_for(step_i))
+                blk_k = pack_keys(d_blk, cols, idx_bits)
+                return merge_packed_xla(run_k, blk_k, kd), None
+
+            init = jnp.full((b, bn, kd), INT_BIG, jnp.int32)
+            run_k, _ = lax.scan(
+                step, init,
+                (y_blocks, sqy_blocks, offsets,
+                 jnp.arange(nb_m, dtype=jnp.int32)),
+            )
+            return unpack_keys(run_k, idx_bits)
+
+        def step(carry, sm):  # merge == "topk"
+            run_d, run_i = carry
+            y_blk, sqy_blk, off, step_i = sm
+            d_blk, cols = tile_dists(y_blk, sqy_blk, off, p_blk_for(step_i))
+            run_d, run_i = merge_topk_xla(run_d, run_i, d_blk, cols, kd)
+            return (run_d, run_i), None
+
+        init = (
+            jnp.full((b, bn, kd), BIG, jnp.float32),
+            jnp.zeros((b, bn, kd), jnp.int32),
+        )
+        (run_d, run_i), _ = lax.scan(
+            step, init,
+            (y_blocks, sqy_blocks, offsets, jnp.arange(nb_m, dtype=jnp.int32)),
+        )
+        return run_d, run_i
+
+    if block_n is None or block_n >= n:
+        return run_queries(x_op, sq_x, pos_bias, jnp.int32(0))
+
+    block_n = max(1, block_n)
+    n_pad = _ceil_to(n, block_n)
+    nb_n = n_pad // block_n
+    x_op_p = jnp.pad(x_op, ((0, 0), (0, n_pad - n), (0, 0)))
+    sq_x_p = jnp.pad(sq_x, ((0, 0), (0, n_pad - n)))
+    p_p = None
+    if pos_bias is not None:
+        p_p = jnp.pad(pos_bias, ((0, 0), (0, n_pad - n), (0, 0)))
+
+    def q_step(carry, qi):
+        row_off = qi * block_n
+        xq = lax.dynamic_slice_in_dim(x_op_p, row_off, block_n, 1)
+        sqx_q = lax.dynamic_slice_in_dim(sq_x_p, row_off, block_n, 1)
+        p_q = (
+            None if p_p is None
+            else lax.dynamic_slice_in_dim(p_p, row_off, block_n, 1)
+        )
+        return carry, run_queries(xq, sqx_q, p_q, row_off)
+
+    _, (dist_q, idx_q) = lax.scan(
+        q_step, None, jnp.arange(nb_n, dtype=jnp.int32)
+    )
+    dist = dist_q.transpose(1, 0, 2, 3).reshape(b, n_pad, kd)[:, :n]
+    idx = idx_q.transpose(1, 0, 2, 3).reshape(b, n_pad, kd)[:, :n]
+    return dist, idx
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer / cross-request cache
+
+
+@dataclasses.dataclass
+class DigcCache:
+    """Host-side cache for reusable graph-construction state.
+
+    Holds co-node squared norms (serving a fixed gallery), cluster
+    centroids (layer-to-layer / request-to-request k-means warm
+    starts) and any other builder state, keyed by (kind, caller key).
+    Strictly eager: entries are only read or written for concrete
+    arrays — under ``jit`` tracing the cache is bypassed entirely,
+    because a cached value captured by a trace would be baked into the
+    compiled program as a stale constant.
+    """
+
+    max_entries: int = 256
+    _store: dict = dataclasses.field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    @staticmethod
+    def usable(*arrays) -> bool:
+        """Cache only engages outside tracing (concrete values)."""
+        return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+    def get(self, kind: str, key: Any):
+        entry = self._store.get((kind, key))
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, kind: str, key: Any, value) -> None:
+        if not self.usable(*jax.tree_util.tree_leaves(value)):
+            return
+        if len(self._store) >= self.max_entries:
+            self._store.pop(next(iter(self._store)))
+        self._store[(kind, key)] = value
+
+    def norms(self, key: Any, y: jax.Array) -> jax.Array:
+        """||y||^2 for a co-node set identified by ``key``.
+
+        The key must identify the co-node *contents* (e.g. a gallery
+        version tag) — shapes alone are not enough.
+        """
+        if not self.usable(y):
+            return jnp.sum(y.astype(jnp.float32) ** 2, axis=-1)
+        cached = self.get("sq_y", key)
+        if cached is not None and cached.shape == y.shape[:-1]:
+            return cached
+        sq = jnp.sum(y.astype(jnp.float32) ** 2, axis=-1)
+        self.put("sq_y", key, sq)
+        return sq
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._store),
+            "hits": self.hits,
+            "misses": self.misses,
+        }
+
+    def clear(self) -> None:
+        self._store.clear()

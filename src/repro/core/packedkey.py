@@ -1,0 +1,74 @@
+"""Order-preserving packed (distance, index) keys — shared by the XLA
+engine and the Pallas kernel.
+
+The paper's GMM stage moves (distance, index) pairs through the merge
+network as one word (u16 index + truncated distance). The TPU/XLA
+analogue packs both into a single int32 whose *integer* order equals
+the lexicographic (distance, index) order:
+
+  * the fp32 distance is made order-monotonic with the standard IEEE
+    total-order flip (non-negative floats keep their bit pattern;
+    negative floats are inverted), then truncated to the top
+    ``32 - idx_bits`` bits;
+  * the low ``idx_bits = ceil(log2 M)`` bits hold the co-node index.
+
+One array instead of two halves merge traffic, ``min()`` extracts the
+(dist, idx) winner in a single op, and ties created by the truncation
+resolve to the *lowest index* — the same tie rule as ``lax.top_k``.
+Precision is adaptive: M=196 keeps 16 mantissa bits (near-exact);
+M=16384 (ViG @ 2048^2) keeps 9. Packed selection is therefore
+tie-tolerant rather than bit-exact: indices may differ from the fp32
+path only where two distances agree in their truncated high bits
+(within ~2^-(23-idx_bits) relative). Exact consumers use the unpacked
+paths; ``kernels/digc_topk.py`` and ``core/engine.py`` expose packing
+as an opt-in knob (``DigcSpec.packed`` / ``merge="packed"``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Packed-key sentinel (a very large distance with index bits zeroed).
+# A python int so it inlines as a weak-typed literal in kernels instead
+# of being captured as a constant.
+INT_BIG = 0x7F7F0000
+
+# Beyond 20 index bits fewer than 3 mantissa bits survive — selection
+# degenerates to exponent-only comparison. Refuse rather than degrade.
+MAX_IDX_BITS = 20
+
+
+def idx_bits_for(m: int) -> int:
+    """Index bits needed to address co-nodes [0, m); at least 1."""
+    if m > (1 << MAX_IDX_BITS):
+        raise ValueError(
+            f"packed keys support at most {1 << MAX_IDX_BITS} co-nodes "
+            f"({MAX_IDX_BITS} index bits); got M={m}. Use an unpacked "
+            "merge for larger co-node sets."
+        )
+    return max(int(m - 1).bit_length(), 1)
+
+
+def pack_keys(d: jax.Array, idx: jax.Array, idx_bits: int) -> jax.Array:
+    """Order-preserving (distance, index) -> single int32 key."""
+    INT_MIN = jnp.int32(-(2**31))
+    bits = jax.lax.bitcast_convert_type(d.astype(jnp.float32), jnp.int32)
+    key = jnp.where(bits >= 0, bits, jnp.invert(bits) ^ INT_MIN)
+    hi = jnp.right_shift(key, idx_bits)  # arithmetic shift: order-preserving
+    mask = jnp.int32((1 << idx_bits) - 1)
+    return jnp.left_shift(hi, idx_bits) | (idx & mask)
+
+
+def unpack_keys(keys: jax.Array, idx_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Inverse of ``pack_keys``: int32 keys -> (fp32 distance, int32 idx).
+
+    The recovered distance carries the truncation (low ``idx_bits``
+    mantissa bits zeroed) — within 2^-(23-idx_bits) relative of the
+    original, and still far above ``BIG/2`` for sentinel lanes.
+    """
+    INT_MIN = jnp.int32(-(2**31))
+    idx = keys & jnp.int32((1 << idx_bits) - 1)
+    bits = jnp.left_shift(jnp.right_shift(keys, idx_bits), idx_bits)
+    bits = jnp.where(bits >= 0, bits, jnp.invert(bits ^ INT_MIN))
+    return jax.lax.bitcast_convert_type(bits, jnp.float32), idx

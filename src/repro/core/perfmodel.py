@@ -151,3 +151,121 @@ def vig_resolution_to_nodes(resolution: int, patch: int = 16, reduction: int = 1
     side = resolution // patch
     n = side * side
     return n // (reduction * reduction)
+
+
+def kernel_tile_defaults(
+    n: int, m: int, d: int, kd: int,
+    vmem_bytes: int = TPUConfig().vmem_bytes,
+) -> tuple[int, int]:
+    """Workload-adaptive default (block_n, block_m) for the Pallas kernel.
+
+    Replaces the old hard-coded 128x256: pick the largest MXU-aligned
+    tile whose per-instance working set (block_n*D + block_m*D +
+    block_n*block_m + 2*block_n*kd floats) fits a double-buffered VMEM
+    budget, preferring wider co-node tiles (fewer streaming steps, the
+    merge runs once per tile) then taller query tiles.
+    """
+    budget = vmem_bytes // 8  # double-buffered pipeline, headroom
+    best = (128, 256)
+    best_score = -1.0
+    for bn in (128, 256, 512):
+        if bn > max(ceil_div(n, 8) * 8, 8):
+            continue
+        for bm in (256, 512, 1024, 2048):
+            if bm > ceil_div(m, 128) * 128:
+                continue
+            work = (bn * d + bm * d + bn * bm + 2 * bn * kd) * 4
+            if work > budget:
+                continue
+            score = bm * 2 + bn  # wider co-node tiles first
+            if score > best_score:
+                best, best_score = (bn, bm), score
+    return best
+
+
+# ---------------------------------------------------------------------------
+# XLA streaming-engine cost model (tuner priors)
+
+# Per-backend throughput constants (seconds per unit). These are only
+# used to *rank* tile configurations before measurement refines them
+# (core/tuner.py), so rough magnitudes suffice; they were fitted to the
+# measured CPU decomposition (gemm ~40 GFLOP/s, lax.top_k ~9 ns per
+# candidate row-element, fused elementwise lane ~1 ns, tile
+# materialization ~0.15 ns/byte).
+_ENGINE_CONSTANTS = {
+    "cpu": dict(gemm=1 / 40e9, topk=9e-9, lane=1e-9, byte=1.5e-10),
+    # TPU: MXU gemm, VPU lanes; top_k lowers to sort — heavily penalized.
+    "tpu": dict(gemm=1 / 49e12, topk=2e-9, lane=1e-12, byte=1.2e-12),
+}
+
+
+def engine_cost_estimate(
+    n: int,
+    m: int,
+    d: int,
+    kd: int,
+    *,
+    b: int = 1,
+    block_n: int | None = None,
+    block_m: int | None = None,
+    merge: str = "select",
+    fuse_norms: bool = False,
+    mxu_bf16: bool = False,
+    backend: str = "cpu",
+    select_group_w: int = 32,
+) -> dict:
+    """Analytical cost of one ``stream_topk`` call (seconds, by term).
+
+    Mirrors the engine's actual dataflow: a (block_n x block_m) tile
+    grid, a DCM contraction + tile assembly per tile, and the selected
+    LSM/GMM merge. ``select`` costs one build pass over each tile plus
+    kd O(G + w) rounds; ``topk`` costs a kd-deep selection sweep over
+    every candidate (the term that made PR-1's block_m sweep flat);
+    ``packed`` costs a pack pass plus kd min/mask passes.
+    """
+    c = _ENGINE_CONSTANTS.get(backend, _ENGINE_CONSTANTS["cpu"])
+    bn = n if block_n is None else min(block_n, n)
+    bm = m if block_m is None else min(block_m, m)
+    nb_n = ceil_div(n, bn)
+    nb_m = ceil_div(m, bm)
+    rows = b * nb_n * bn  # padded query rows
+    tile_elems = rows * nb_m * bm
+
+    d_eff = d + 2 if fuse_norms else d
+    gemm_rate = c["gemm"] / 2 if (mxu_bf16 and backend == "tpu") else c["gemm"]
+    gemm_s = 2.0 * tile_elems * d_eff * gemm_rate
+    # Tile assembly (norm adds + masks) reads/writes the tile unless the
+    # norms were folded into the contraction.
+    assembly_s = tile_elems * 4 * c["byte"] * (1 if fuse_norms else 3)
+
+    if merge == "select":
+        w = min(select_group_w, bm)
+        groups = ceil_div(bm, w)
+        build = tile_elems * c["lane"]
+        rounds = rows * nb_m * kd * (groups + 2 * w) * c["lane"]
+        final = 0.0 if nb_m == 1 else rows * nb_m * kd * c["topk"]
+        merge_s = build + rounds + final
+    elif merge == "packed":
+        pack = tile_elems * 2 * c["lane"]
+        passes = rows * nb_m * kd * (kd + bm) * 2 * c["lane"]
+        merge_s = pack + passes
+    else:  # "topk"
+        merge_s = rows * nb_m * (kd + bm) * c["topk"]
+
+    # Per-tile dispatch overhead (scan step launch, slices, transposes).
+    overhead_s = nb_n * nb_m * 50e-6 if backend == "cpu" else 0.0
+    # Live-tile footprint: tiles that overflow the cache budget (CPU
+    # LLC / TPU VMEM headroom) pay re-read traffic on every merge pass.
+    live_tile_bytes = b * bn * bm * 4
+    budget = 24e6 if backend == "cpu" else 64e6
+    spill_s = max(0.0, live_tile_bytes - budget) * nb_n * nb_m * 4 * c["byte"]
+    total = gemm_s + assembly_s + merge_s + overhead_s + spill_s
+    return {
+        "gemm_s": gemm_s,
+        "assembly_s": assembly_s,
+        "merge_s": merge_s,
+        "overhead_s": overhead_s,
+        "spill_s": spill_s,
+        "total_s": total,
+        "live_tile_bytes": live_tile_bytes,
+    }

@@ -27,15 +27,24 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.builder import DigcSpec, GraphBuilder, promote_batch, register
-from repro.core.digc import BIG, digc_blocked, dilate, merge_topk, pairwise_sq_dists
+from repro.core.digc import BIG, digc_blocked, dilate, pairwise_sq_dists
+from repro.core.engine import select_topkd
 
 
 def kmeans(y: jax.Array, n_clusters: int, iters: int = 5,
-           seed: int = 0) -> jax.Array:
-    """Lightweight Lloyd's iterations. y (M, D) -> centroids (C, D)."""
+           seed: int = 0, init: Optional[jax.Array] = None) -> jax.Array:
+    """Lightweight Lloyd's iterations. y (M, D) -> centroids (C, D).
+
+    ``init`` warm-starts from previous centroids (a DigcCache carry:
+    consecutive ViG layers / serving requests drift slowly, so a warm
+    start converges in 1-2 iterations instead of 5 from random init).
+    """
     m = y.shape[0]
-    idx = jax.random.permutation(jax.random.PRNGKey(seed), m)[:n_clusters]
-    cents = y[idx]
+    if init is None:
+        idx = jax.random.permutation(jax.random.PRNGKey(seed), m)[:n_clusters]
+        cents = y[idx]
+    else:
+        cents = init.astype(y.dtype)
 
     def step(cents, _):
         d = pairwise_sq_dists(y, cents)  # (M, C)
@@ -62,39 +71,129 @@ def default_cluster_params(m: int, n_clusters: Optional[int],
     return n_clusters, min(n_probe, n_clusters)
 
 
-def _cluster_single(x, y, *, k, dilation, n_clusters, n_probe, cap, seed):
-    """Single-image IVF search core; vmapped over the batch axis."""
-    n, d = x.shape
-    m = y.shape[0]
-    kd = k * dilation
+def _segment_ranks(labels: jax.Array) -> jax.Array:
+    """Rank of each element within its label group, in original order.
 
-    cents = kmeans(y, n_clusters, seed=seed)
+    Sort-based: a stable argsort groups equal labels, the rank within a
+    group is the position minus the group start (a running max over
+    change points), scattered back through the sort order. O(L log L)
+    on L elements — replaces the (L, C) one-hot + column cumsum whose
+    materialized L*C intermediate dominated the dispatch cost.
+    """
+    L = labels.shape[0]
+    order = jnp.argsort(labels)  # lax.sort: stable
+    sorted_l = labels[order]
+    pos = jnp.arange(L, dtype=jnp.int32)
+    change = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_l[1:] != sorted_l[:-1]]
+    )
+    seg_start = lax.cummax(jnp.where(change, pos, 0))
+    rank_sorted = pos - seg_start
+    return jnp.zeros((L,), jnp.int32).at[order].set(rank_sorted)
+
+
+def _cluster_index(y, *, n_clusters, cap, seed, iters=5, init_centroids=None):
+    """Build the IVF index for one co-node set: y (M, D) ->
+    (centroids (C, D), members (C, cap) with pad id M).
+
+    Hoisted out of the per-image search so it runs once when co-nodes
+    are shared across the batch, and so DigcCache can warm-start the
+    k-means from a previous layer's / request's centroids.
+    """
+    m = y.shape[0]
+    cents = kmeans(y, n_clusters, iters=iters, seed=seed, init=init_centroids)
     d_yc = pairwise_sq_dists(y, cents)  # (M, C)
     assign = jnp.argmin(d_yc, axis=1)  # (M,)
     # fixed-capacity member lists via rank-in-cluster scatter
-    onehot = jax.nn.one_hot(assign, n_clusters, dtype=jnp.int32)
-    rank = jnp.cumsum(onehot, axis=0) - onehot  # (M, C)
-    pos = jnp.sum(rank * onehot, axis=1)  # (M,)
+    pos = _segment_ranks(assign)  # (M,)
     keep = pos < cap
     slot = jnp.where(keep, assign * cap + pos, n_clusters * cap)
     members = jnp.full((n_clusters * cap + 1,), m, jnp.int32)  # m = pad id
     members = members.at[slot].set(jnp.arange(m, dtype=jnp.int32))
     members = members[:-1].reshape(n_clusters, cap)
+    return cents, members
+
+
+def _cluster_search(x, y, cents, members, *, kd, n_probe, block_t=128):
+    """Dispatch-form two-stage search for one image.
+
+    Stage 2 is organized cluster-major (the MoE group-GEMM pattern, as
+    in ClusterViG's balanced partitions): each (query, probe-slot) pair
+    is assigned a dispatch slot in its target cluster's *block-aligned*
+    segment — every cluster's pair list is padded only up to the next
+    ``block_t`` boundary, so the static dispatch size is
+    N*n_probe + C*block_t and **no query is ever dropped**. Each
+    block_t-row block belongs to exactly one cluster and runs one dense
+    (block_t x D) @ (D x cap) contraction against that cluster's member
+    features; per-query candidate rows are combined back by slot.
+
+    This replaces the per-query candidate-feature gather of the old
+    path — (N, P, D) rows pulled through XLA's scalar row-gather, ~60x
+    the traffic of the cluster-major form — with matmul-form distances
+    (``pairwise_sq_dists`` algebra: ||y||^2 - 2xy; the query norm is
+    added back at the end, rank-invariant since it is constant per
+    row).
+    """
+    n, d = x.shape
+    m = y.shape[0]
+    n_clusters, cap = members.shape
+    y_pad = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    sq_y = jnp.concatenate(
+        [jnp.sum(y.astype(jnp.float32) ** 2, axis=-1), jnp.full((1,), BIG)], 0
+    )
+    cluster_feats = y_pad[members]  # (C, cap, D) — cluster-major gather
+    sq_members = sq_y[members]  # (C, cap); BIG on member pads
 
     # stage 1: nearest centroids per query
     d_xc = pairwise_sq_dists(x, cents)  # (N, C)
     _, probe = lax.top_k(-d_xc, n_probe)  # (N, n_probe)
 
-    # stage 2: exact top-kd over probed members (padded with id m)
-    cand = members[probe].reshape(n, n_probe * cap)  # (N, P)
-    y_pad = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
-    cand_feats = y_pad[cand]  # (N, P, D)
-    dists = jnp.sum((cand_feats - x[:, None, :]) ** 2, axis=-1)
-    dists = jnp.where(cand < m, dists, BIG)
-    kd_eff = min(kd, cand.shape[1])
-    neg, sel = lax.top_k(-dists, kd_eff)
-    idx = jnp.take_along_axis(cand, sel, axis=1)
-    dist = -neg
+    # dispatch: each (query, probe-slot) pair gets a slot in its target
+    # cluster's block-aligned segment
+    flat_c = probe.reshape(-1)  # (N * n_probe,)
+    q_of = jnp.repeat(jnp.arange(n, dtype=jnp.int32), n_probe)
+    rank = _segment_ranks(flat_c)  # (N * n_probe,)
+    counts = jnp.zeros((n_clusters,), jnp.int32).at[flat_c].add(1)
+    seg_len = ((counts + block_t - 1) // block_t) * block_t
+    ends = jnp.cumsum(seg_len)
+    starts = ends - seg_len
+    slot = starts[flat_c] + rank  # (N * n_probe,) — never dropped
+    # static bound on sum(seg_len), rounded to whole blocks
+    nblocks = -(-(n * n_probe) // block_t) + n_clusters
+    total = nblocks * block_t
+    qmap = jnp.full((total,), n, jnp.int32).at[slot].set(q_of)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    x_disp = x_pad[qmap].reshape(nblocks, block_t, d)
+    # block -> owning cluster (blocks past the used prefix hit the BIG
+    # pad cluster)
+    block_c = jnp.searchsorted(
+        ends, jnp.arange(nblocks, dtype=jnp.int32) * block_t, side="right"
+    )
+    feats_pad = jnp.concatenate(
+        [cluster_feats, jnp.zeros((1, cap, d), y.dtype)], axis=0)
+    sqm_pad = jnp.concatenate(
+        [sq_members, jnp.full((1, cap), BIG, jnp.float32)], axis=0)
+    feats_blk = feats_pad[jnp.minimum(block_c, n_clusters)]  # (nb, cap, D)
+    sqm_blk = sqm_pad[jnp.minimum(block_c, n_clusters)]  # (nb, cap)
+
+    # per-block dense contraction: -2 X_blk Y_c^T + ||y||^2
+    xy = lax.dot_general(
+        x_disp, feats_blk, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (nb, block_t, cap)
+    d_c = sqm_blk[:, None, :] - 2.0 * xy
+
+    # combine: each (query, slot) reads its cap-row back
+    d_flat = d_c.reshape(total, cap)
+    cand_d = d_flat[slot].reshape(n, n_probe * cap)  # (N, P)
+    cand_i = members[probe].reshape(n, n_probe * cap)
+
+    kd_eff = min(kd, cand_d.shape[1])
+    vals, cols = select_topkd(cand_d, kd_eff)
+    idx = jnp.take_along_axis(cand_i, cols, axis=-1)
+    # add the per-query norm back (rank-invariant; BIG lanes stay BIG)
+    dist = vals + jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[:, None]
+    dist = jnp.where(vals >= BIG / 2, vals, dist)
     if kd_eff < kd:  # pad to kd for API uniformity
         idx = jnp.pad(idx, ((0, 0), (0, kd - kd_eff)))
         dist = jnp.pad(dist, ((0, 0), (0, kd - kd_eff)), constant_values=BIG)
@@ -111,40 +210,80 @@ def cluster_digc(
     n_probe: Optional[int] = None,
     capacity_factor: float = 2.0,
     seed: int = 0,
+    kmeans_iters: int = 5,
+    init_centroids: Optional[jax.Array] = None,
     return_dists: bool = False,
+    return_state: bool = False,
 ):
     """Two-stage ANN graph construction (ClusterViG family).
 
-    1. cluster co-nodes (k-means, static iters);
-    2. bucket members into fixed-capacity cluster lists (overflow drops,
-       like the MoE dispatch);
-    3. per query: top-n_probe centroids, then exact top-k·d over the
-       probed clusters' members only.
+    1. cluster co-nodes (k-means, static iters; ``init_centroids``
+       warm-starts from a previous layer/request via ``DigcCache``);
+    2. bucket members into fixed-capacity cluster lists (overflow
+       drops, like the MoE dispatch);
+    3. per query: top-n_probe centroids, then top-k·d over the probed
+       clusters' members in dispatch form (one dense contraction per
+       cluster; see ``_cluster_search``).
 
     Accepts (N, D) or (B, N, D); the whole batch shares static cluster
-    shapes, each image clusters its own co-nodes. ``n_clusters`` /
-    ``n_probe`` default to a workload-adaptive heuristic
-    (``default_cluster_params``).
+    shapes. Index construction is hoisted out of the per-image search:
+    a shared co-node set — explicit (M, D) co-nodes next to batched
+    (B, N, D) queries — is indexed **once** and broadcast, instead of
+    being re-clustered per image. ``n_clusters`` / ``n_probe`` default
+    to a workload-adaptive heuristic (``default_cluster_params``).
+    ``return_state=True`` additionally returns {"centroids": (B, C, D)}
+    for cache warm-starting.
     """
+    # Shared external co-nodes: index once, before batch promotion.
+    shared_y = y is not None and y.ndim == 2 and x.ndim == 3
+    if shared_y:
+        b = x.shape[0]
+        y = jnp.broadcast_to(y[None], (b,) + y.shape)
     x3, y3, _, squeeze = promote_batch(x, y)
+    b = x3.shape[0]
     m = y3.shape[1]
     kd = k * dilation
     n_clusters, n_probe = default_cluster_params(m, n_clusters, n_probe)
     cap = max(int(m / n_clusters * capacity_factor), kd)
 
-    idx, dist = jax.vmap(
-        lambda xb, yb: _cluster_single(
-            xb, yb, k=k, dilation=dilation, n_clusters=n_clusters,
-            n_probe=n_probe, cap=cap, seed=seed,
+    init3 = init_centroids
+    if init3 is not None and init3.ndim == 2:
+        init3 = jnp.broadcast_to(init3[None], (b,) + init3.shape)
+    if init3 is not None and init3.shape[1] != n_clusters:
+        init3 = None  # stale cache shape (workload changed): cold start
+
+    def index_one(yb, init_b):
+        return _cluster_index(
+            yb, n_clusters=n_clusters, cap=cap, seed=seed,
+            iters=kmeans_iters, init_centroids=init_b,
         )
-    )(x3, y3)
+
+    if shared_y:
+        cents1, members1 = index_one(
+            y3[0], None if init3 is None else init3[0]
+        )
+        cents = jnp.broadcast_to(cents1[None], (b,) + cents1.shape)
+        members = jnp.broadcast_to(members1[None], (b,) + members1.shape)
+    else:
+        cents, members = (
+            jax.vmap(index_one)(y3, init3) if init3 is not None
+            else jax.vmap(lambda yb: index_one(yb, None))(y3)
+        )
+
+    idx, dist = jax.vmap(
+        lambda xb, yb, cb, mb: _cluster_search(
+            xb, yb, cb, mb, kd=kd, n_probe=n_probe,
+        )
+    )(x3, y3, cents, members)
     idx = dilate(idx, dilation)
     dist = dilate(dist, dilation)
     if squeeze:
         idx, dist = idx[0], dist[0]
-    if return_dists:
-        return idx, dist
-    return idx
+    out = (idx, dist) if return_dists else idx
+    if return_state:
+        state = {"centroids": cents}
+        return (*out, state) if return_dists else (out, state)
+    return out
 
 
 def axial_digc(
@@ -225,17 +364,41 @@ def recall_vs_exact(x, y, idx_approx, k: int) -> float:
 # Registry entries (DESIGN.md §4).
 
 
-def _build_cluster(x, y, pos_bias, spec: DigcSpec):
+def _build_cluster(x, y, pos_bias, spec: DigcSpec, cache=None, cache_key=None):
     del pos_bias  # validated unsupported upstream
-    return cluster_digc(
+    init = None
+    ckey = None
+    if cache is not None and cache_key is not None:
+        # An explicit key is required: two unrelated callers sharing a
+        # cache with matching shapes must not warm-start from each
+        # other's centroids.
+        from repro.core.engine import DigcCache
+
+        concrete = DigcCache.usable(x) and (y is None or DigcCache.usable(y))
+        if concrete:
+            m = y.shape[1] if y is not None else x.shape[1]
+            ckey = (cache_key, x.shape[0], m, x.shape[-1])
+            init = cache.get("cluster_centroids", ckey)
+    warm = init is not None
+    out = cluster_digc(
         x, y, k=spec.k, dilation=spec.dilation,
         n_clusters=spec.n_clusters, n_probe=spec.n_probe,
         capacity_factor=(
             spec.capacity_factor if spec.capacity_factor is not None else 2.0
         ),
         seed=spec.seed if spec.seed is not None else 0,
+        # warm starts converge in 2 Lloyd iterations (features drift
+        # slowly layer-to-layer / request-to-request)
+        kmeans_iters=2 if warm else 5,
+        init_centroids=init,
         return_dists=True,
+        return_state=ckey is not None,
     )
+    if ckey is not None:
+        idx, dist, state = out
+        cache.put("cluster_centroids", ckey, state["centroids"])
+        return idx, dist
+    return out
 
 
 def _build_axial(x, y, pos_bias, spec: DigcSpec):
@@ -277,7 +440,9 @@ register(GraphBuilder(
     build=_build_cluster,
     knobs=frozenset({"n_clusters", "n_probe", "capacity_factor", "seed"}),
     exact=False,
-    doc="ClusterViG-family IVF two-stage search (approximate)",
+    supports_cache=True,
+    doc="ClusterViG-family IVF search: k-means index (shared co-nodes "
+        "indexed once, DigcCache warm starts) + dispatch-form probe",
 ))
 
 register(GraphBuilder(

@@ -1,0 +1,260 @@
+"""Workload autotuner for the streaming DIGC engine.
+
+GraphLeap's lesson (PAPERS.md, arXiv 2604.21290) is that a decoupled
+construction dataflow leaves most of its headroom on the table until
+the tile/merge configuration is *tuned per workload*. This module
+picks ``(block_n, block_m, merge, fuse_norms)`` per
+``(backend, B, N, M, D, kd, causal, pos_bias)`` workload:
+
+  1. rank the candidate grid with the analytical engine cost model
+     (``perfmodel.engine_cost_estimate``) — priors;
+  2. measure the top-ranked candidates on the live workload arrays
+     (median wall time over a few jitted calls) — refinement;
+  3. verify each measured candidate's indices against an
+     exact-by-construction oracle config on the same probe input, so a
+     tie-tolerant variant (``fuse_norms``) is only ever chosen when it
+     matched exactly on the workload it will serve;
+  4. persist the winner to a JSON cache keyed by the workload so later
+     runs (and serving engines) skip the measurement entirely.
+
+The tuner never changes *what* is computed — only the engine schedule.
+Approximate merges (``packed``) are excluded unless ``allow_approx``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.builder import DigcSpec
+from repro.core.perfmodel import engine_cost_estimate
+
+# Knobs the tuner owns on a DigcSpec.
+TUNED_KNOBS = ("block_n", "block_m", "merge", "fuse_norms")
+
+_BLOCK_N_CANDIDATES = (None, 256, 512, 1024)
+_BLOCK_M_CANDIDATES = (256, 512, 1024, 2048, 4096)
+_EXACT_MERGES = ("select", "topk")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One engine schedule: the tuner's unit of search."""
+
+    block_n: Optional[int]
+    block_m: int
+    merge: str
+    fuse_norms: bool = False
+
+    def apply(self, spec: DigcSpec) -> DigcSpec:
+        return spec.replace(
+            block_n=self.block_n,
+            block_m=self.block_m,
+            merge=self.merge,
+            fuse_norms=self.fuse_norms or None,
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    config: TileConfig
+    us_per_call: float
+    exact_match: bool
+    source: str  # "measured" | "cached" | "prior"
+
+    def as_dict(self) -> dict:
+        return {
+            **self.config.as_dict(),
+            "us_per_call": self.us_per_call,
+            "exact_match": self.exact_match,
+            "source": self.source,
+        }
+
+
+def workload_key(
+    backend: str, b: int, n: int, m: int, d: int, kd: int,
+    causal: bool = False, has_pos: bool = False,
+) -> str:
+    key = f"{backend}:b{b}:n{n}:m{m}:d{d}:kd{kd}"
+    if causal:
+        key += ":causal"
+    if has_pos:
+        key += ":pos"
+    return key
+
+
+class DigcTuner:
+    """Prior-ranked, measurement-refined, JSON-persisted tile tuner."""
+
+    def __init__(
+        self,
+        path: Optional[str | Path] = None,
+        *,
+        backend: Optional[str] = None,
+        measure_iters: int = 2,
+        max_measure: int = 6,
+    ):
+        import jax
+
+        self.path = Path(path) if path is not None else None
+        self.backend = backend if backend is not None else jax.default_backend()
+        self.measure_iters = measure_iters
+        self.max_measure = max_measure
+        self.entries: dict[str, dict] = {}
+        if self.path is not None and self.path.exists():
+            data = json.loads(self.path.read_text())
+            self.entries = dict(data.get("entries", {}))
+
+    # -- candidate generation -------------------------------------------
+
+    def candidates(
+        self, n: int, m: int, *, allow_approx: bool = False
+    ) -> list[TileConfig]:
+        block_ns = {bn if (bn is None or bn < n) else None
+                    for bn in _BLOCK_N_CANDIDATES}
+        block_ms = {min(bm, m) for bm in _BLOCK_M_CANDIDATES}
+        block_ms.add(m)
+        merges = list(_EXACT_MERGES) + (["packed"] if allow_approx else [])
+        out = []
+        for bn in sorted(block_ns, key=lambda v: -1 if v is None else v):
+            for bm in sorted(block_ms):
+                for merge in merges:
+                    for fuse in (False, True):
+                        out.append(TileConfig(bn, bm, merge, fuse))
+        return out
+
+    def rank(
+        self, cands: list[TileConfig], *, b, n, m, d, kd
+    ) -> list[TileConfig]:
+        def prior(cfg: TileConfig) -> float:
+            return engine_cost_estimate(
+                n, m, d, kd, b=b, block_n=cfg.block_n, block_m=cfg.block_m,
+                merge=cfg.merge, fuse_norms=cfg.fuse_norms,
+                backend=self.backend,
+            )["total_s"]
+
+        return sorted(cands, key=prior)
+
+    # -- persistence ----------------------------------------------------
+
+    def lookup(self, key: str) -> Optional[TuneResult]:
+        e = self.entries.get(key)
+        if e is None:
+            return None
+        return TuneResult(
+            TileConfig(e["block_n"], e["block_m"], e["merge"],
+                       e.get("fuse_norms", False)),
+            e.get("us_per_call", float("nan")),
+            e.get("exact_match", True),
+            "cached",
+        )
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        self.path.write_text(json.dumps(
+            {"schema": 1, "backend": self.backend, "entries": self.entries},
+            indent=2, sort_keys=True,
+        ) + "\n")
+
+    # -- tuning ---------------------------------------------------------
+
+    def tune(
+        self,
+        x,
+        y=None,
+        *,
+        spec: DigcSpec,
+        pos_bias=None,
+        force: bool = False,
+        allow_approx: bool = False,
+    ) -> tuple[DigcSpec, TuneResult]:
+        """Fill the engine-schedule knobs of ``spec`` for this workload.
+
+        Measures on the live arrays (so the cache records what this
+        host actually does), verifies candidates against an exact
+        oracle config on the same probe input, persists the winner.
+        Returns (tuned spec, result). Only the ``blocked`` engine tier
+        is tunable; other impls pass through unchanged.
+        """
+        import jax
+
+        from repro.core.digc import digc
+
+        if spec.impl != "blocked":
+            return spec, TuneResult(
+                TileConfig(spec.block_n, spec.block_m or 0,
+                           spec.merge or "n/a"),
+                float("nan"), True, "prior",
+            )
+        x3 = x if x.ndim == 3 else x[None]
+        b, n, d = x3.shape
+        m = n if y is None else (y.shape[-2])
+        kd = spec.k * spec.dilation
+        key = workload_key(self.backend, b, n, m, d, kd, spec.causal,
+                           pos_bias is not None)
+        if not force:
+            cached = self.lookup(key)
+            if cached is not None:
+                return cached.config.apply(spec), cached
+
+        cands = self.rank(
+            self.candidates(n, m, allow_approx=allow_approx),
+            b=b, n=n, m=m, d=d, kd=kd,
+        )[: self.max_measure]
+
+        def run(cfg: TileConfig):
+            s = cfg.apply(spec)
+            fn = jax.jit(lambda a, by: digc(
+                a, by, spec=s, pos_bias=pos_bias, return_dists=True,
+            ))
+            out = jax.block_until_ready(fn(x, y))
+            times = []
+            for _ in range(self.measure_iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(x, y))
+                times.append(time.perf_counter() - t0)
+            return out, float(np.median(times))
+
+        oracle_cfg = TileConfig(None, m, "select", False)
+        oracle_out, oracle_t = run(oracle_cfg)
+        oracle_idx = np.asarray(oracle_out[0])
+        results = [TuneResult(oracle_cfg, oracle_t * 1e6, True, "measured")]
+        for cfg in cands:
+            if cfg == oracle_cfg:
+                continue
+            out, t = run(cfg)
+            match = bool(np.array_equal(np.asarray(out[0]), oracle_idx))
+            results.append(TuneResult(cfg, t * 1e6, match, "measured"))
+
+        eligible = [
+            r for r in results
+            if r.exact_match or (allow_approx and r.config.merge == "packed")
+        ]
+        best = min(eligible, key=lambda r: r.us_per_call)
+        self.entries[key] = best.as_dict()
+        self.save()
+        return best.config.apply(spec), best
+
+
+def autotune_spec(
+    x,
+    y=None,
+    *,
+    spec: DigcSpec,
+    pos_bias=None,
+    path: Optional[str | Path] = None,
+    tuner: Optional[DigcTuner] = None,
+    **kw,
+) -> tuple[DigcSpec, TuneResult]:
+    """One-shot convenience: tune ``spec``'s engine schedule for x/y."""
+    tuner = tuner if tuner is not None else DigcTuner(path)
+    return tuner.tune(x, y, spec=spec, pos_bias=pos_bias, **kw)

@@ -41,38 +41,13 @@ from jax.experimental import pallas as pl
 
 from repro.core.compat import tpu_compiler_params
 
+# Packed (dist|idx) int32 keys are shared with the XLA engine's packed
+# merge (core/engine.py) — one format across tiers (DESIGN.md §5).
+from repro.core.packedkey import INT_BIG, idx_bits_for
+from repro.core.packedkey import pack_keys as _pack_keys
+from repro.core.packedkey import unpack_keys as _unpack_keys
+
 BIG = float(1e30)  # plain float: jnp scalars would be captured as consts
-
-
-INT_BIG = 0x7F7F0000  # packed-key sentinel (very large dist); python int
-# so it is inlined as a weak-typed literal, not captured as a constant
-
-
-def _pack_keys(d: jax.Array, idx: jax.Array, idx_bits: int) -> jax.Array:
-    """Order-preserving (distance, index) -> single int32 key.
-
-    Low ``idx_bits`` = ceil(log2 M) bits hold the co-node index (the
-    paper stores u16 indices for the same reason); the top 32-idx_bits
-    bits hold the fp32 distance truncated to that width, made monotonic
-    over negatives with the standard IEEE total-order flip. One array
-    instead of two halves the merge's VPU traffic and makes min()
-    extract (dist, idx) at once. Precision is adaptive: M=196 keeps 16
-    mantissa bits (near-exact); M=16384 (ViG @ 2048^2) keeps 9.
-    """
-    INT_MIN = jnp.int32(-(2**31))
-    bits = jax.lax.bitcast_convert_type(d.astype(jnp.float32), jnp.int32)
-    key = jnp.where(bits >= 0, bits, jnp.invert(bits) ^ INT_MIN)
-    hi = jnp.right_shift(key, idx_bits)  # arithmetic shift: order-preserving
-    mask = jnp.int32((1 << idx_bits) - 1)
-    return jnp.left_shift(hi, idx_bits) | (idx & mask)
-
-
-def _unpack_keys(keys: jax.Array, idx_bits: int) -> tuple[jax.Array, jax.Array]:
-    INT_MIN = jnp.int32(-(2**31))
-    idx = keys & jnp.int32((1 << idx_bits) - 1)
-    bits = jnp.left_shift(jnp.right_shift(keys, idx_bits), idx_bits)
-    bits = jnp.where(bits >= 0, bits, jnp.invert(bits ^ INT_MIN))
-    return jax.lax.bitcast_convert_type(bits, jnp.float32), idx
 
 
 def _bucket_reduce(blk_k, kd: int, rounds: int):
@@ -269,7 +244,7 @@ def digc_topk_pallas(
     if packed and m > 65536:
         raise ValueError("packed keys hold u16 indices: require M <= 65536")
     m_real = m_valid if m_valid is not None else m
-    idx_bits = max(int(m_real - 1).bit_length(), 1) if packed else 16
+    idx_bits = idx_bits_for(m_real) if packed else 16
     grid = (b, n // block_n, m // block_m)
 
     kernel = functools.partial(

@@ -58,8 +58,8 @@ def digc_topk(
     k: int,
     dilation: int = 1,
     pos_bias: Optional[jax.Array] = None,
-    block_n: int = 128,
-    block_m: int = 256,
+    block_n: Optional[int] = None,
+    block_m: Optional[int] = None,
     interpret: bool = True,
     return_dists: bool = False,
     causal: bool = False,
@@ -71,6 +71,8 @@ def digc_topk(
 
     x: (B, N, D) | (N, D) nodes, y co-nodes, optional pos_bias
     (B, N, M) | (N, M). Returns idx (B, N, k) [, dist] matching x's rank.
+    Tile sizes default to the workload-adaptive VMEM-budgeted choice
+    (``perfmodel.kernel_tile_defaults``) instead of one fixed shape.
     """
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
     _, n, feat = x3.shape
@@ -78,6 +80,12 @@ def digc_topk(
     kd = k * dilation
     if kd > m:
         raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
+    if block_n is None or block_m is None:
+        from repro.core.perfmodel import kernel_tile_defaults
+
+        bn_auto, bm_auto = kernel_tile_defaults(n, m, feat, kd)
+        block_n = bn_auto if block_n is None else block_n
+        block_m = bm_auto if block_m is None else block_m
     block_n = min(block_n, _ceil_to(n, 8))
     block_m = min(block_m, _ceil_to(m, 128))
     n_pad = _ceil_to(n, block_n)
@@ -118,8 +126,8 @@ def _build_pallas(x, y, pos_bias, spec: DigcSpec):
     return digc_topk(
         x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
         causal=spec.causal, return_dists=True,
-        block_n=spec.block_n if spec.block_n is not None else 128,
-        block_m=spec.block_m if spec.block_m is not None else 256,
+        block_n=spec.block_n,  # None = workload-adaptive VMEM-budgeted tiles
+        block_m=spec.block_m,
         interpret=spec.interpret if spec.interpret is not None else True,
         packed=bool(spec.packed),
         mxu_bf16=bool(spec.mxu_bf16),

@@ -188,12 +188,18 @@ def resolve_digc_spec(cfg: VigConfig,
 
 
 def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
-                  digc_spec: Optional[DigcSpec] = None):
+                  digc_spec: Optional[DigcSpec] = None,
+                  cache=None, layer_key: Optional[str] = None):
     """x (B, N, D) -> (B, N, D); one Grapher + FFN residual pair.
 
     Graph construction runs batched through the registry — no per-sample
     closure, no strategy branching; the builder supplies its fused
     aggregation (e.g. the MRConv Pallas kernel) when it has one.
+    ``cache`` (a ``DigcCache``) + ``layer_key`` let cache-aware builders
+    carry construction state across layers and serving requests — e.g.
+    the cluster tier warm-starts its k-means from the previous layer's
+    centroids. Cache reuse is host-side and only engages in eager
+    execution; under jit the builders bypass it.
     """
     dspec = digc_spec if digc_spec is not None else resolve_digc_spec(cfg, None)
     h = _ln(x, bp["ln_g"]["scale"])
@@ -208,7 +214,11 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     # downsample, so a fixed user grid would go stale).
     dspec = dspec.replace(k=k_eff, dilation=dilation).with_grid(grid, grid)
     builder = get_builder(dspec.impl)
-    idx = digc(h, cond, spec=dspec)  # (B, N, k)
+    # Centroid warm starts are shared per stage (same co-node geometry):
+    # layer l+1 starts from layer l's centroids, the next request from
+    # this one's — features drift slowly, so 2 Lloyd iterations suffice.
+    idx = digc(h, cond, spec=dspec, cache=cache,
+               cache_key=layer_key)  # (B, N, k)
     aggregate = builder.aggregate if builder.aggregate is not None else mr_aggregate
     agg = aggregate(h, cond if cond is not None else h, idx)
     h = jnp.concatenate([h, agg], axis=-1) @ bp["fc_graph"]
@@ -220,10 +230,17 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
 
 
 def vig_forward(params, images, cfg: VigConfig, *,
-                digc_impl: Union[str, DigcSpec, None] = None):
+                digc_impl: Union[str, DigcSpec, None] = None,
+                cache=None):
     """images (B, H, W, C) -> class logits (B, num_classes).
 
     ``digc_impl`` may be a registered builder name or a full DigcSpec.
+    ``cache`` is an optional ``repro.core.engine.DigcCache``: blocks in
+    the same stage share a cache key, so per-layer self-graphs reuse
+    construction state (cluster centroids warm-start from the previous
+    block / the previous serving request) instead of rebuilding from
+    scratch. Only effective in eager execution (the serving path);
+    under jit it is bypassed.
     """
     spec = resolve_digc_spec(cfg, digc_impl)
     x = patchify(images, cfg.patch) @ params["stem"]
@@ -237,7 +254,7 @@ def vig_forward(params, images, cfg: VigConfig, *,
             dil = _dilation_for(cfg, gb, m)
             x = grapher_block(
                 params[f"stage{si}"][f"block{bi}"], x, cfg, grid, r, dil,
-                digc_spec=spec,
+                digc_spec=spec, cache=cache, layer_key=f"stage{si}",
             )
             gb += 1
         if si + 1 < len(cfg.depths):

@@ -1,1 +1,3 @@
-# Serving substrate: KV caches, slot-based continuous batching.
+# Serving substrate: KV caches, slot-based continuous batching for the
+# LM path, and the ViG image engine with cross-request DIGC state
+# (DigcCache + autotuned construction schedule).

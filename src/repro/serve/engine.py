@@ -1,16 +1,22 @@
-"""Batched serving engine: prefill + decode with a slot-based batch
-(continuous-batching-lite).
+"""Batched serving engines.
 
-Requests occupy fixed batch slots; finished slots are refilled from the
-queue without stalling in-flight decodes. Per-slot lengths are tracked
-host-side; the decode step itself is a single jit'd call over the full
-slot batch (static shapes — production TPU serving style).
+* ``ServeEngine`` — LM prefill + decode with a slot-based batch
+  (continuous-batching-lite). Requests occupy fixed batch slots;
+  finished slots are refilled from the queue without stalling in-flight
+  decodes. Per-slot lengths are tracked host-side; the decode step
+  itself is a single jit'd call over the full slot batch (static
+  shapes — production TPU serving style).
+* ``VigServeEngine`` — batched ViG image inference with cross-request
+  DIGC state: a ``DigcCache`` persists cluster centroids (k-means warm
+  starts) and co-node norms across requests, and the streaming-engine
+  tile schedule is autotuned once per workload (``core/tuner.py``) and
+  served from the tuner's JSON cache afterwards.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -111,3 +117,110 @@ class ServeEngine:
                     finished.append(r)
                     self.slot_req[s] = None
         return finished
+
+
+# ---------------------------------------------------------------------------
+# ViG image serving
+
+
+class VigServeEngine:
+    """Batched ViG inference with cross-request DIGC state.
+
+    Each ``infer`` call runs one batched forward. Two pieces of
+    graph-construction state persist across requests:
+
+    * a ``DigcCache`` — cache-aware builders reuse it through
+      ``vig_forward``: the cluster tier warm-starts its per-stage
+      k-means from the previous request's centroids (2 Lloyd
+      iterations instead of 5 from random init). Only cache-aware
+      impls run eagerly (the host-side cache is bypassed under jit by
+      design); impls with no reusable state — the exact tiers — serve
+      through a jitted forward instead of paying eager dispatch for
+      nothing.
+    * an autotuned engine schedule — ``warmup()`` tunes the blocked
+      tier's (block_n, block_m, merge, fuse_norms) on the model's
+      stage-0 DIGC workload via ``core.tuner.DigcTuner`` and bakes the
+      winning knobs into the serving spec; later engine instances with
+      the same tuner path skip the measurement (JSON cache).
+    """
+
+    def __init__(self, cfg, params, *, digc_impl=None, batch: int = 8,
+                 autotune: bool = True, tuner_path=None):
+        from repro.core.engine import DigcCache
+        from repro.models.vig import resolve_digc_spec
+
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.spec = resolve_digc_spec(cfg, digc_impl)
+        self.cache = DigcCache()
+        self.autotune = autotune
+        self.tuner_path = tuner_path
+        self.tuned = None  # TuneResult once warmed up
+        self.requests_served = 0
+        self._jit_fwd = None  # (spec, jitted forward) for cache-less impls
+
+    def warmup(self, rng_seed: int = 0):
+        """Autotune the engine schedule on the stage-0 DIGC workload."""
+        if not self.autotune or self.spec.impl != "blocked":
+            return None
+        from repro.core.tuner import DigcTuner
+        from repro.models.vig import count_digc_work
+
+        work = count_digc_work(self.cfg)[0]  # stage 0 dominates
+        rng = np.random.default_rng(rng_seed)
+        probe = jnp.asarray(
+            rng.standard_normal((self.batch, work["N"], work["D"])),
+            jnp.float32,
+        )
+        # Pyramid stages pool co-nodes (M = N / r^2): tune the real
+        # (N, M) workload, not a self-graph stand-in.
+        y_probe = None
+        if work["M"] != work["N"]:
+            y_probe = jnp.asarray(
+                rng.standard_normal((self.batch, work["M"], work["D"])),
+                jnp.float32,
+            )
+        spec = self.spec.replace(
+            k=work["k"], dilation=work["dilation"],
+            block_n=None, block_m=None, merge=None, fuse_norms=None,
+        )
+        tuner = DigcTuner(self.tuner_path)
+        tuned, result = tuner.tune(probe, y_probe, spec=spec)
+        self.spec = self.spec.replace(
+            block_n=tuned.block_n, block_m=tuned.block_m,
+            merge=tuned.merge, fuse_norms=tuned.fuse_norms,
+        )
+        self.tuned = result
+        return result
+
+    def infer(self, images) -> jax.Array:
+        """images (B, H, W, C) -> logits (B, num_classes)."""
+        from repro.core.builder import get_builder
+        from repro.models.vig import vig_forward
+
+        if self.autotune and self.tuned is None and self.spec.impl == "blocked":
+            self.warmup()
+        if get_builder(self.spec.impl).supports_cache:
+            # Eager so the host-side DigcCache engages across requests.
+            logits = vig_forward(
+                self.params, images, self.cfg,
+                digc_impl=self.spec, cache=self.cache,
+            )
+        else:
+            # No reusable construction state: serve jitted.
+            if self._jit_fwd is None or self._jit_fwd[0] != self.spec:
+                spec = self.spec
+                self._jit_fwd = (spec, jax.jit(
+                    lambda p, im: vig_forward(p, im, self.cfg, digc_impl=spec)
+                ))
+            logits = self._jit_fwd[1](self.params, images)
+        self.requests_served += int(images.shape[0])
+        return logits
+
+    def stats(self) -> dict:
+        out = {"requests_served": self.requests_served,
+               "digc_cache": self.cache.stats()}
+        if self.tuned is not None:
+            out["tuned"] = self.tuned.as_dict()
+        return out

@@ -1,0 +1,389 @@
+"""Streaming-engine correctness: merge strategies, two-level tiling,
+packed keys, and the DigcCache.
+
+The exact merges ("select", "topk") must match the reference oracle
+bit-for-bit on indices; the packed merge is tie-tolerant (distances
+truncated by ``idx_bits`` mantissa bits) and is validated semantically:
+the distances *implied by its chosen indices* must match the oracle's
+distances within the truncation tolerance. Property tests run under the
+shared hypothesis shim (skip cleanly when hypothesis is absent)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import BIG, DigcSpec, digc, digc_reference, pairwise_sq_dists
+from repro.core.digc import merge_topk
+from repro.core.engine import (
+    DigcCache,
+    merge_packed_xla,
+    select_topkd,
+    stream_topk,
+)
+from repro.core.packedkey import idx_bits_for, pack_keys, unpack_keys
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def assert_same_valid(i_a, d_a, i_b, d_b, rtol=1e-5, atol=1e-4):
+    va = np.asarray(d_a) < BIG / 2
+    vb = np.asarray(d_b) < BIG / 2
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(
+        np.where(va, np.asarray(i_a), -1), np.where(vb, np.asarray(i_b), -1)
+    )
+    np.testing.assert_allclose(
+        np.where(va, np.asarray(d_a), 0.0), np.where(vb, np.asarray(d_b), 0.0),
+        rtol=rtol, atol=atol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# select_topkd: the grouped LSM
+
+
+@pytest.mark.parametrize("w,kd", [(64, 4), (200, 9), (1000, 16), (7, 7)])
+def test_select_topkd_matches_lax_topk(w, kd):
+    rng = np.random.default_rng(w * 31 + kd)
+    d = _rand(rng, 2, 37, w) * 10
+    vals, cols = select_topkd(d, kd)
+    neg, ref_cols = jax.lax.top_k(-d, kd)
+    np.testing.assert_array_equal(np.asarray(cols), np.asarray(ref_cols))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(-neg))
+
+
+def test_select_topkd_ties_lowest_column():
+    d = jnp.asarray([[3.0, 1.0, 1.0, 2.0, 1.0]])
+    vals, cols = select_topkd(d, 4)
+    np.testing.assert_array_equal(np.asarray(cols[0]), [1, 2, 4, 3])
+
+
+def test_select_topkd_short_rows_pad_big():
+    """Rows with fewer candidates than kd pad with BIG lanes."""
+    d = jnp.asarray([[5.0, 4.0]])
+    vals, _ = select_topkd(d, 4)
+    v = np.asarray(vals[0])
+    assert list(v[:2]) == [4.0, 5.0]
+    assert np.all(v[2:] >= BIG / 2)
+
+
+# ---------------------------------------------------------------------------
+# Packed keys: pack/unpack + XLA packed merge vs merge_topk
+
+
+@pytest.mark.parametrize("m", [8, 196, 3136, 1 << 20])
+def test_pack_unpack_roundtrip_order(m):
+    rng = np.random.default_rng(m % 97)
+    bits = idx_bits_for(m)
+    d = jnp.asarray(rng.standard_normal(256).astype(np.float32)) * 50
+    idx = jnp.asarray(rng.integers(0, m, 256), jnp.int32)
+    keys = pack_keys(d, idx, bits)
+    d2, i2 = unpack_keys(keys, bits)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(idx))
+    # truncation error bounded by 2^-(23 - idx_bits) relative
+    np.testing.assert_allclose(
+        np.asarray(d2), np.asarray(d), rtol=2.0 ** -(23 - bits) * 1.01,
+        atol=1e-30,
+    )
+    # packed integer order == distance order where distances differ
+    order_keys = np.argsort(np.asarray(keys), kind="stable")
+    d_sorted = np.asarray(d)[order_keys]
+    assert np.all(np.diff(d_sorted) >= -np.abs(d_sorted[1:]) * 2.0 ** -(23 - bits) * 2)
+
+
+def test_idx_bits_cap():
+    with pytest.raises(ValueError, match="at most"):
+        idx_bits_for((1 << 20) + 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    kd=st.integers(1, 8),
+    bw=st.integers(1, 40),
+    m=st.integers(41, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_packed_merge_matches_merge_topk(kd, bw, m, seed):
+    """Packed-key merge == merge_topk bit-for-bit on idx (and within fp
+    tolerance on dist) whenever distances survive truncation exactly —
+    here: distinct small integers, exactly representable in the top
+    23 - idx_bits mantissa bits."""
+    rng = np.random.default_rng(seed)
+    bits = idx_bits_for(m)
+    n = 5
+    width = kd + bw
+    # distinct integer distances < 2^10: exact under <= 13 dropped bits
+    vals = rng.permutation(1 << 10)[: n * width].astype(np.float32)
+    cand_d = jnp.asarray(vals.reshape(n, width))
+    cand_i = jnp.asarray(rng.integers(0, m, (n, width)), jnp.int32)
+    run_d, blk_d = cand_d[:, :kd], cand_d[:, kd:]
+    run_i, blk_i = cand_i[:, :kd], cand_i[:, kd:]
+    # merge_topk expects a sorted running list (engine invariant)
+    order = jnp.argsort(run_d, axis=1)
+    run_d = jnp.take_along_axis(run_d, order, axis=1)
+    run_i = jnp.take_along_axis(run_i, order, axis=1)
+
+    ref_d, ref_i = merge_topk(run_d, run_i, blk_d, blk_i, kd)
+    keys = merge_packed_xla(
+        pack_keys(run_d, run_i, bits), pack_keys(blk_d, blk_i, bits), kd
+    )
+    got_d, got_i = unpack_keys(keys, bits)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.asarray(ref_d), rtol=2.0 ** -(23 - bits) * 1.01
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    m=st.integers(4, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_select_merge_equals_reference(n, m, seed):
+    """Engine select merge == reference, bit-for-bit idx, random floats."""
+    rng = np.random.default_rng(seed)
+    k = min(4, m)
+    x, y = _rand(rng, n, 7), _rand(rng, m, 7)
+    i_r, d_r = digc_reference(x, y, k=k, return_dists=True)
+    i_s, d_s = digc(x, y, k=k, impl="blocked", merge="select", block_m=16,
+                    return_dists=True)
+    assert_same_valid(i_r, d_r, i_s, d_s)
+
+
+# ---------------------------------------------------------------------------
+# Full engine paths: merge strategies x tiling, ragged edges
+
+
+@pytest.mark.parametrize("merge", ["select", "topk"])
+@pytest.mark.parametrize("block_n,block_m", [(None, 16), (16, 32), (13, 17)])
+def test_engine_exact_merges_match_reference(merge, block_n, block_m):
+    rng = np.random.default_rng(hash((merge, block_n, block_m)) % 2**31)
+    x, y = _rand(rng, 2, 50, 12), _rand(rng, 2, 70, 12)
+    i_r, d_r = digc(x, y, k=5, impl="reference", return_dists=True)
+    i_e, d_e = digc(x, y, k=5, impl="blocked", merge=merge,
+                    block_n=block_n, block_m=block_m, return_dists=True)
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_e))
+    np.testing.assert_allclose(np.asarray(d_r), np.asarray(d_e),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("merge", ["select", "topk", "packed"])
+def test_engine_query_tiled_causal_ragged(merge):
+    """causal masking with N % block_n != 0: global row offsets must
+    stay correct across query tiles."""
+    rng = np.random.default_rng(21)
+    x = _rand(rng, 2, 37, 8)  # 37 % 16 != 0
+    i_r, d_r = digc(x, k=4, causal=True, impl="reference", return_dists=True)
+    i_e, d_e = digc(x, k=4, causal=True, impl="blocked", merge=merge,
+                    block_n=16, block_m=16, return_dists=True)
+    va = np.asarray(d_r) < BIG / 2
+    vb = np.asarray(d_e) < BIG / 2
+    np.testing.assert_array_equal(va, vb)
+    if merge == "packed":  # tie-tolerant: check implied distances
+        np.testing.assert_allclose(
+            np.where(vb, np.asarray(d_e), 0.0), np.where(va, np.asarray(d_r), 0.0),
+            rtol=1e-3, atol=1e-3,
+        )
+    else:
+        np.testing.assert_array_equal(
+            np.where(va, np.asarray(i_r), -1), np.where(vb, np.asarray(i_e), -1)
+        )
+
+
+@pytest.mark.parametrize("merge", ["select", "topk"])
+def test_engine_query_tiled_pos_bias_ragged(merge):
+    rng = np.random.default_rng(22)
+    x, y = _rand(rng, 2, 37, 8), _rand(rng, 2, 53, 8)
+    p = _rand(rng, 2, 37, 53) * 0.3
+    i_r = digc(x, y, k=4, impl="reference", pos_bias=p)
+    i_e = digc(x, y, k=4, impl="blocked", merge=merge, pos_bias=p,
+               block_n=16, block_m=16)
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_e))
+
+
+def test_engine_packed_full_path_tie_tolerant():
+    """blocked merge="packed" vs reference: the distances implied by the
+    chosen indices must match the oracle's within truncation tolerance
+    (indices may differ only across truncation-ties)."""
+    rng = np.random.default_rng(23)
+    x, y = _rand(rng, 2, 40, 8), _rand(rng, 2, 70, 8)
+    i_p, d_p = digc(x, y, k=5, impl="blocked", merge="packed", block_m=32,
+                    return_dists=True)
+    i_r, d_r = digc(x, y, k=5, impl="reference", return_dists=True)
+    d_full = np.asarray(pairwise_sq_dists(x, y))
+    implied = np.take_along_axis(d_full, np.asarray(i_p), axis=-1)
+    bits = idx_bits_for(96)  # padded co-node count
+    np.testing.assert_allclose(
+        implied, np.asarray(d_r), rtol=2.0 ** -(23 - bits) * 4, atol=1e-3
+    )
+
+
+def test_engine_fuse_norms_and_bf16_tie_tolerant():
+    rng = np.random.default_rng(24)
+    x, y = _rand(rng, 2, 40, 16), _rand(rng, 2, 64, 16)
+    i_r, d_r = digc(x, y, k=5, impl="reference", return_dists=True)
+    d_full = np.asarray(pairwise_sq_dists(x, y))
+    i_f, d_f = digc(x, y, k=5, impl="blocked", fuse_norms=True, block_m=32,
+                    return_dists=True)
+    implied = np.take_along_axis(d_full, np.asarray(i_f), axis=-1)
+    np.testing.assert_allclose(implied, np.asarray(d_r), rtol=1e-5, atol=1e-4)
+    i_b, _ = digc(x, y, k=5, impl="blocked", mxu_bf16=True, block_m=32,
+                  return_dists=True)
+    implied = np.take_along_axis(d_full, np.asarray(i_b), axis=-1)
+    # bf16 contraction: ~8-bit mantissa on the cross term
+    np.testing.assert_allclose(implied, np.asarray(d_r), rtol=0.1, atol=0.3)
+
+
+def test_engine_dilation_through_spec():
+    rng = np.random.default_rng(25)
+    x = _rand(rng, 30, 8)
+    spec = DigcSpec(impl="blocked", k=3, dilation=2, merge="select",
+                    block_n=8, block_m=8)
+    i_e = digc(x, spec=spec)
+    i_r = digc(x, k=3, dilation=2, impl="reference")
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_e))
+
+
+def test_stream_topk_self_graph_shares_norms():
+    """y=None (self-graph) must equal passing x explicitly as y."""
+    rng = np.random.default_rng(26)
+    x = _rand(rng, 2, 33, 8)
+    d_a, i_a = stream_topk(x, None, kd=4, block_m=16)
+    d_b, i_b = stream_topk(x, x, kd=4, block_m=16)
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b))
+
+
+def test_engine_unknown_merge_raises():
+    rng = np.random.default_rng(27)
+    x = _rand(rng, 10, 4)
+    with pytest.raises(ValueError, match="unknown merge"):
+        digc(x, k=3, impl="blocked", merge="bogus")
+
+
+# ---------------------------------------------------------------------------
+# DigcCache
+
+
+def test_cache_norms_roundtrip_and_stats():
+    rng = np.random.default_rng(28)
+    y = _rand(rng, 2, 20, 6)
+    cache = DigcCache()
+    sq1 = cache.norms("gallery-v1", y)
+    sq2 = cache.norms("gallery-v1", y)
+    assert cache.stats()["hits"] == 1
+    np.testing.assert_array_equal(np.asarray(sq1), np.asarray(sq2))
+    np.testing.assert_allclose(
+        np.asarray(sq1), np.asarray(jnp.sum(y * y, -1)), rtol=1e-6
+    )
+
+
+def test_cache_bypassed_under_jit():
+    """Tracing must never read or write the cache (stale constants)."""
+    cache = DigcCache()
+
+    @jax.jit
+    def f(y):
+        return cache.norms("k", y)
+
+    rng = np.random.default_rng(29)
+    y1, y2 = _rand(rng, 4, 3), _rand(rng, 4, 3)
+    np.testing.assert_allclose(
+        np.asarray(f(y1)), np.asarray(jnp.sum(y1 * y1, -1)), rtol=1e-6
+    )
+    # second call with different data: a cached constant would be wrong
+    np.testing.assert_allclose(
+        np.asarray(f(y2)), np.asarray(jnp.sum(y2 * y2, -1)), rtol=1e-6
+    )
+    assert cache.stats()["entries"] == 0
+
+
+def test_cache_cluster_warm_start_recall():
+    """Warm-started cluster construction stays at cold-start recall."""
+    from repro.core.strategies import recall_vs_exact
+
+    rng = np.random.default_rng(30)
+    x = _rand(rng, 2, 128, 16)
+    cache = DigcCache()
+    spec = DigcSpec(impl="cluster", k=4, n_clusters=8, n_probe=8,
+                    capacity_factor=8.0)
+    i_cold = digc(x, spec=spec, cache=cache, cache_key="layer0")
+    assert cache.stats()["entries"] == 1
+    i_warm = digc(x, spec=spec, cache=cache, cache_key="layer0")
+    assert cache.stats()["hits"] >= 1
+    # full probe + ample capacity: both must be exact
+    assert recall_vs_exact(x, x, i_cold, 4) == 1.0
+    assert recall_vs_exact(x, x, i_warm, 4) == 1.0
+
+
+def test_cache_eviction_bounded():
+    cache = DigcCache(max_entries=4)
+    for i in range(10):
+        cache.put("sq_y", f"k{i}", jnp.zeros((3,)))
+    assert cache.stats()["entries"] <= 4
+
+
+def test_vig_serve_engine_persists_state():
+    """VigServeEngine: cache state survives requests; autotune fills
+    the engine schedule and results stay finite."""
+    from repro.models import vig
+    from repro.models.module import init_params
+    from repro.serve.engine import VigServeEngine
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(2,), num_classes=3, k=3,
+        digc_impl="cluster",
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    eng = VigServeEngine(cfg, params, autotune=False)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    out = eng.infer(imgs)
+    assert out.shape == (2, 3) and bool(jnp.all(jnp.isfinite(out)))
+    eng.infer(imgs)
+    s = eng.stats()
+    assert s["requests_served"] == 4
+    # layer 2 warm-starts from layer 1, request 2 from request 1
+    assert s["digc_cache"]["hits"] >= 3
+
+
+def test_vig_serve_engine_autotunes_blocked(tmp_path):
+    from repro.models import vig
+    from repro.models.module import init_params
+    from repro.serve.engine import VigServeEngine
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(1,), num_classes=3, k=3,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    eng = VigServeEngine(cfg, params, batch=2,
+                         tuner_path=tmp_path / "tune.json")
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    out = eng.infer(imgs)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    st = eng.stats()
+    assert st["tuned"]["source"] == "measured"
+    assert eng.spec.merge in ("select", "topk")
+
+
+def test_vig_forward_with_cache_matches_without():
+    """The cache must not change blocked-tier results (exact path)."""
+    from repro.models import vig
+    from repro.models.module import init_params
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(2,), num_classes=3, k=3
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    cache = DigcCache()
+    out_nc = vig.vig_forward(params, imgs, cfg)
+    out_c = vig.vig_forward(params, imgs, cfg, cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(out_nc), np.asarray(out_c), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,100 @@
+"""Workload autotuner: priors, measurement, persistence, spec filling."""
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DigcSpec, digc
+from repro.core.perfmodel import engine_cost_estimate, kernel_tile_defaults
+from repro.core.tuner import DigcTuner, TileConfig, autotune_spec, workload_key
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def test_workload_key_distinguishes_workloads():
+    a = workload_key("cpu", 2, 196, 196, 192, 18)
+    b = workload_key("cpu", 2, 196, 196, 192, 9)
+    c = workload_key("cpu", 2, 196, 196, 192, 18, causal=True)
+    assert len({a, b, c}) == 3
+
+
+def test_candidates_exact_only_by_default():
+    t = DigcTuner(backend="cpu")
+    cands = t.candidates(1024, 1024)
+    assert cands and all(c.merge in ("select", "topk") for c in cands)
+    approx = t.candidates(1024, 1024, allow_approx=True)
+    assert any(c.merge == "packed" for c in approx)
+
+
+def test_prior_ranks_select_over_topk_at_scale():
+    """The cost model must encode the measured finding: top_k-merge
+    selection cost dominates at ViG scale."""
+    sel = engine_cost_estimate(3136, 3136, 96, 9, b=2, block_m=512,
+                               merge="select", backend="cpu")
+    tk = engine_cost_estimate(3136, 3136, 96, 9, b=2, block_m=512,
+                              merge="topk", backend="cpu")
+    assert sel["merge_s"] < tk["merge_s"]
+
+
+def test_prior_penalizes_oversized_tiles():
+    small = engine_cost_estimate(12544, 12544, 96, 9, b=2, block_n=512,
+                                 block_m=1024, merge="select", backend="cpu")
+    huge = engine_cost_estimate(12544, 12544, 96, 9, b=2, block_n=None,
+                                block_m=12544, merge="select", backend="cpu")
+    assert huge["spill_s"] > 0.0
+    assert small["live_tile_bytes"] < huge["live_tile_bytes"]
+
+
+def test_tile_config_apply_fills_spec():
+    spec = DigcSpec(impl="blocked", k=5)
+    cfg = TileConfig(block_n=128, block_m=256, merge="select", fuse_norms=True)
+    s = cfg.apply(spec)
+    assert (s.block_n, s.block_m, s.merge, s.fuse_norms) == (
+        128, 256, "select", True)
+    assert s.k == 5 and s.impl == "blocked"
+
+
+def test_tune_measures_persists_and_caches(tmp_path):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 2, 96, 8)
+    path = tmp_path / "tune.json"
+    spec = DigcSpec(impl="blocked", k=4)
+    tuner = DigcTuner(path, measure_iters=1, max_measure=2)
+    tuned, res = tuner.tune(x, spec=spec)
+    assert res.source == "measured"
+    assert res.exact_match  # exact merges only by default
+    assert tuned.block_m is not None and tuned.merge in ("select", "topk")
+    # tuned spec must produce reference-identical output
+    i_r = digc(x, k=4, impl="reference")
+    i_t = digc(x, spec=tuned)
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_t))
+    # persisted ...
+    data = json.loads(path.read_text())
+    assert data["schema"] == 1 and len(data["entries"]) == 1
+    # ... and served from cache by a fresh tuner (no re-measurement)
+    tuner2 = DigcTuner(path)
+    tuned2, res2 = tuner2.tune(x, spec=spec)
+    assert res2.source == "cached"
+    assert (tuned2.block_n, tuned2.block_m, tuned2.merge) == (
+        tuned.block_n, tuned.block_m, tuned.merge)
+
+
+def test_tune_non_blocked_impl_passthrough():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 40, 6)
+    spec = DigcSpec(impl="reference", k=3)
+    tuned, res = autotune_spec(x, spec=spec)
+    assert tuned is spec and res.source == "prior"
+
+
+def test_kernel_tile_defaults_respect_vmem():
+    for (n, m, d, kd) in [(196, 196, 192, 16), (12544, 12544, 96, 9),
+                          (4096, 1024, 768, 32)]:
+        bn, bm = kernel_tile_defaults(n, m, d, kd)
+        work = (bn * d + bm * d + bn * bm + 2 * bn * kd) * 4
+        assert work <= 128 * 1024 * 1024 // 8
+        assert bn >= 8 and bm >= 128
