@@ -64,6 +64,27 @@ def _merge_ablation(x, k, iters=2):
              f"N={n};D={d};block_m=1024")
 
 
+def _group_w_ablation(x, k, iters=2):
+    """select-merge group width at large block_m (ROADMAP: does a
+    two-word 64-lane mask beat the one-word 32-lane default when each
+    tile holds thousands of candidates?). Wider groups halve the
+    per-round group-min reduction but double the winning-group gather
+    and pay a second mask word."""
+    n, d = x.shape[-2], x.shape[-1]
+    bm = min(4096, n)
+    base = None
+    for w in (32, 64):
+        spec = DigcSpec(impl="blocked", k=k, block_m=bm, merge="select",
+                        group_w=w)
+        fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
+        # The w32/w64 gap is ~25% on CPU: needs more samples than the
+        # block-size sweep to stay out of the noise floor.
+        t = timeit(fn, x, warmup=2, iters=max(3, iters))
+        base = base or t
+        emit(f"kernel/select_groupw{w}_us", t * 1e6,
+             f"N={n};D={d};block_m={bm};speedup_vs_w32={base/t:.2f}x")
+
+
 def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     n, d, k = (512, 192, 9) if smoke else (4096, 192, 9)
@@ -75,6 +96,7 @@ def run(smoke: bool = False):
         t = timeit(fn, x, iters=iters)
         emit(f"kernel/blocked_bm{bm}_us", t * 1e6, f"N={n};D={d}")
     _merge_ablation(x, k, iters=iters)
+    _group_w_ablation(x, k, iters=iters)
     _hillclimb()
     _bucketed_recall(n=256 if smoke else 2048)
     return True

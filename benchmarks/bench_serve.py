@@ -1,0 +1,74 @@
+"""Serving-path benchmark: the jitted functional-state ``VigServeEngine``
+vs the legacy eager ``DigcCache`` shim, per request.
+
+The acceptance workload is the ViG N=3136 regime (224^2 / patch 4 —
+the grid where PR-2 measured the eager cache-aware cluster tier): the
+jitted path must serve the cluster tier with **no eager fallback** at
+per-request latency <= the eager shim's. Rows record both modes plus
+the speedup, per tier, so the jit-vs-eager gap is part of the perf
+trajectory.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+
+TUNE_CACHE = ".digc_tune.json"
+
+
+def _engine(cfg, params, impl, mode, batch, smoke):
+    from repro.serve.engine import VigServeEngine
+
+    return VigServeEngine(
+        cfg, params, digc_impl=impl, batch=batch, mode=mode,
+        # blocked autotunes through the committed host-keyed cache;
+        # smoke keeps its toy workloads out of it (in-memory tuner).
+        autotune=(impl == "blocked"),
+        tuner_path=None if smoke else TUNE_CACHE,
+    )
+
+
+def run(smoke: bool = False, res: int = 224, batch: int = 2, iters: int = 3):
+    from repro.models import vig
+    from repro.models.module import init_params
+
+    if smoke:
+        res, iters = 32, 1
+    # res=224 / patch 4 -> grid 56 -> N=3136 (the PR-2 cluster-tier
+    # measurement workload), one isotropic stage of two blocks.
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=res, patch=4, embed_dims=(96,), depths=(2,),
+        num_classes=10, k=9,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(
+        rng.standard_normal((batch, res, res, 3)), jnp.float32
+    )
+    n = cfg.base_grid ** 2
+    for impl in ("cluster", "blocked"):
+        per_mode = {}
+        for mode in ("jit", "eager"):
+            eng = _engine(cfg, params, impl, mode, batch, smoke)
+            # Two warmup calls: compile + engage the warm start, so the
+            # measured steady state is what a serving replica sees.
+            t = timeit(lambda: eng.infer(imgs), warmup=2, iters=iters)
+            per_mode[mode] = t
+            emit(
+                f"serve/{impl}_{mode}_us", t * 1e6,
+                f"B={batch};N={n};per-request forward;mode={mode};"
+                f"requests_served={eng.requests_served}",
+            )
+        emit(
+            f"serve/{impl}_jit_speedup", per_mode["eager"] / per_mode["jit"],
+            f"B={batch};N={n};eager_us={per_mode['eager'] * 1e6:.0f};"
+            f"jit_us={per_mode['jit'] * 1e6:.0f};x_eager_over_jit "
+            "(>=1 means the jitted functional-state path wins)",
+        )
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -36,18 +36,36 @@ def header():
 
 def dump_json(path: str | Path, *, suites=None) -> Path:
     """Write every emitted row to ``path`` so the perf trajectory is
-    recorded run over run (BENCH_digc.json)."""
+    recorded run over run (BENCH_digc.json).
+
+    A partial run (``--only kernel serve``) merges: rows from suites
+    *not* re-run (identified by their ``suite/`` name prefix) are
+    preserved from the existing file, so the perf record never loses
+    suites just because one was refreshed."""
+    path = Path(path)
+    new_rows = [
+        {"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS
+    ]
+    ran = {r["name"].split("/")[0] for r in new_rows} | set(suites or ())
+    kept = []
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            prev = {}
+        kept = [
+            r for r in prev.get("rows", [])
+            if r["name"].split("/")[0] not in ran
+        ]
+    rows = kept + new_rows
     out = {
         "bench": "digc",
         "schema": 1,
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "platform": platform.platform(),
-        "suites": list(suites) if suites is not None else None,
-        "rows": [
-            {"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS
-        ],
+        "suites": sorted({r["name"].split("/")[0] for r in rows} | ran),
+        "rows": rows,
     }
-    path = Path(path)
     path.write_text(json.dumps(out, indent=2) + "\n")
     return path

@@ -10,6 +10,7 @@ from benchmarks import (
     bench_table4_e2e,
     bench_fig1_fraction,
     bench_kernel,
+    bench_serve,
     bench_strategies,
 )
 
@@ -20,6 +21,7 @@ SUITES = {
     "table4": bench_table4_e2e.run,
     "fig1": bench_fig1_fraction.run,
     "kernel": bench_kernel.run,
+    "serve": bench_serve.run,
     "strategies": bench_strategies.run,
 }
 
@@ -31,6 +33,7 @@ SMOKE_ARGS = {
     "table4": dict(res=128, depth=1),
     "fig1": dict(resolutions=(256,), depth=1),
     "kernel": dict(smoke=True),
+    "serve": dict(smoke=True),
     "strategies": dict(smoke=True),
 }
 

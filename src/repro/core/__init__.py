@@ -35,10 +35,17 @@ from repro.core.packedkey import (
     pack_keys,
     unpack_keys,
 )
+from repro.core.state import (
+    DigcState,
+    DigcStateEntry,
+    state_entry,
+)
 from repro.core.tuner import (
     DigcTuner,
     TileConfig,
+    VigSchedule,
     autotune_spec,
+    host_key,
     workload_key,
 )
 from repro.core.graph import (

@@ -54,6 +54,9 @@ class DigcSpec:
     # --- streaming-engine merge strategy (core/engine.py)
     merge: Optional[str] = None
     fuse_norms: Optional[bool] = None
+    # selection group width for merge="select": 32 (one int32 lane
+    # mask word, the default) or up to 64 (two mask words)
+    group_w: Optional[int] = None
     # --- pallas kernel variants (§Perf iterations)
     interpret: Optional[bool] = None
     packed: Optional[bool] = None
@@ -128,6 +131,10 @@ class GraphBuilder:
     # Builders that can reuse DigcCache state (co-node norms, cluster
     # centroids) accept build(..., cache=, cache_key=) keywords.
     supports_cache: bool = False
+    # Builders that thread functional DigcState (core/state.py) accept
+    # build(..., state_entry=) and return (idx, dist, new_entry); for
+    # everyone else digc() passes the state through unchanged.
+    supports_state: bool = False
     # Optional fused neighbor aggregation (x, y, idx) -> (B, N, D);
     # None means the consumer uses the generic mr_aggregate.
     aggregate: Optional[Callable] = None

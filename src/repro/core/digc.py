@@ -153,6 +153,7 @@ def digc_blocked(
     sq_y: Optional[Array] = None,
     return_dists: bool = False,
     causal: bool = False,
+    group_w: Optional[int] = None,
 ):
     """Streaming DIGC through the unified engine (``core/engine.py``).
 
@@ -183,6 +184,7 @@ def digc_blocked(
         mxu_bf16=mxu_bf16,
         causal=causal,
         sq_y=sq_y,
+        group_w=group_w,
     )
     idx = dilate(idx, dilation)
     dist = dilate(dist, dilation)
@@ -206,6 +208,8 @@ def digc(
     causal: Optional[bool] = None,
     cache=None,
     cache_key=None,
+    state=None,
+    state_key=None,
     **knobs,
 ):
     """Public DIGC API: a thin GraphBuilder-registry lookup.
@@ -218,11 +222,19 @@ def digc(
     (axial) see None; passing x explicitly as y counts as external
     co-nodes (so eager and jitted calls agree).
 
+    ``state``/``state_key`` (a functional ``repro.core.state.DigcState``
+    pytree plus the key naming this call's entry) select the
+    **functional form**: the call returns ``(idx[, dist], new_state)``
+    and works *under jit* — stateful builders (cluster centroids,
+    frozen-gallery norms) read their entry's buffers gated on its step
+    counter and return an updated entry; builders without state (or a
+    state with no entry for the key) pass the state through unchanged.
+
     ``cache``/``cache_key`` (a ``repro.core.engine.DigcCache`` plus a
     caller-chosen identity for the reusable state, e.g. a model layer
-    name or a gallery version) let cache-aware builders skip
-    recomputing co-node norms and cluster assignments across layers
-    and serving requests; builders without cache support ignore them.
+    name or a gallery version) are the legacy **eager shim** for the
+    same reuse: host-side, bypassed entirely under tracing. Mutually
+    exclusive with ``state``.
     """
     spec = resolve_spec(
         spec, impl=impl, k=k, dilation=dilation, causal=causal, **knobs
@@ -230,13 +242,32 @@ def digc(
     builder = get_builder(spec.impl)
     builder.validate(spec, has_pos_bias=pos_bias is not None)
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
+    y_arg = None if y is None else y3
+    if state is not None:
+        if cache is not None:
+            raise ValueError(
+                "digc() takes either functional state= or the legacy "
+                "eager cache=, not both"
+            )
+        entry = state.get(state_key)
+        if builder.supports_state and entry is not None:
+            idx, dist, new_entry = builder.build(
+                x3, y_arg, p3, spec, state_entry=entry
+            )
+            state = state.set(state_key, new_entry)
+        else:
+            idx, dist = builder.build(x3, y_arg, p3, spec)
+        if squeeze:
+            idx, dist = idx[0], dist[0]
+        if return_dists:
+            return idx, dist, state
+        return idx, state
     if cache is not None and builder.supports_cache:
         idx, dist = builder.build(
-            x3, None if y is None else y3, p3, spec,
-            cache=cache, cache_key=cache_key,
+            x3, y_arg, p3, spec, cache=cache, cache_key=cache_key,
         )
     else:
-        idx, dist = builder.build(x3, None if y is None else y3, p3, spec)
+        idx, dist = builder.build(x3, y_arg, p3, spec)
     if squeeze:
         idx, dist = idx[0], dist[0]
     if return_dists:
@@ -261,15 +292,35 @@ def _build_reference(x, y, pos_bias, spec: DigcSpec):
     )
 
 
-def _build_blocked(x, y, pos_bias, spec: DigcSpec):
+def _build_blocked(x, y, pos_bias, spec: DigcSpec, state_entry=None):
     # Exact tier: no implicit cache reads. Per-call norm reuse
     # (self-graph ||x||^2 == ||y||^2) happens inside the engine; a
     # caller serving a *fixed* co-node gallery passes precomputed norms
-    # explicitly via digc_blocked(sq_y=cache.norms(gallery_key, y)) —
-    # an implicit cache keyed by call-site would silently serve stale
-    # norms once the co-node contents change (e.g. per-layer pooled
-    # features), corrupting an exact tier.
-    return digc_blocked(
+    # explicitly via digc_blocked(sq_y=cache.norms(gallery_key, y)) or
+    # through a functional state entry carrying sq_y — an implicit
+    # cache keyed by call-site would silently serve stale norms once
+    # the co-node contents change (e.g. per-layer pooled features),
+    # corrupting an exact tier.
+    sq_y = None
+    new_entry = None
+    if state_entry is not None:
+        new_entry = state_entry.bump()
+        if (
+            y is not None
+            and state_entry.sq_y is not None
+            and state_entry.sq_y.shape == y.shape[:-1]
+        ):
+            # The entry asserts this gallery is frozen (state.py
+            # invalidation rules): compute the norms on the cold call
+            # only, then carry them — jit-compatible because the cold
+            # branch is a lax.cond on the runtime step counter.
+            sq_y = lax.cond(
+                state_entry.warm,
+                lambda: state_entry.sq_y,
+                lambda: jnp.sum(y.astype(jnp.float32) ** 2, axis=-1),
+            )
+            new_entry = state_entry.bump(sq_y=sq_y)
+    out = digc_blocked(
         x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
         causal=spec.causal, return_dists=True,
         block_m=spec.block_m if spec.block_m is not None else 256,
@@ -277,7 +328,12 @@ def _build_blocked(x, y, pos_bias, spec: DigcSpec):
         merge=spec.merge,
         fuse_norms=bool(spec.fuse_norms),
         mxu_bf16=bool(spec.mxu_bf16),
+        sq_y=sq_y,
+        group_w=spec.group_w,
     )
+    if state_entry is not None:
+        return (*out, new_entry)
+    return out
 
 
 register(GraphBuilder(
@@ -293,10 +349,13 @@ register(GraphBuilder(
 register(GraphBuilder(
     name="blocked",
     build=_build_blocked,
-    knobs=frozenset({"block_n", "block_m", "merge", "fuse_norms", "mxu_bf16"}),
+    knobs=frozenset({
+        "block_n", "block_m", "merge", "fuse_norms", "mxu_bf16", "group_w",
+    }),
     exact=True,  # merge="packed" / fuse_norms / mxu_bf16 opt into tie-tolerance
     supports_pos_bias=True,
     supports_causal=True,
+    supports_state=True,  # frozen-gallery norms via DigcState entries
     doc="streaming XLA engine: two-level (block_n x block_m) tiling + "
         "pluggable LSM/GMM merge (select | topk | packed)",
 ))

@@ -67,9 +67,14 @@ BIG = float(1e30)
 
 MERGE_STRATEGIES = ("select", "topk", "packed")
 
-# Group width for the two-level selection: capped at 32 so the
-# per-group extracted-lane set fits one int32 bitmask.
+# Default group width for the two-level selection: 32 keeps the
+# per-group extracted-lane set in one int32 bitmask word. Widths up to
+# 64 are supported with a two-word mask (``DigcSpec.group_w``): fewer
+# groups to reduce over per round, at the price of a second mask word
+# and a wider per-round gather — whether that wins is workload- and
+# backend-dependent (measured in benchmarks/bench_kernel.py).
 _SELECT_GROUP_W = 32
+_SELECT_GROUP_W_MAX = 64
 
 
 def _ceil_to(v: int, mult: int) -> int:
@@ -84,12 +89,13 @@ def select_topkd(d_blk: jax.Array, kd: int, group_w: int = _SELECT_GROUP_W):
     """Exact top-kd of each row of ``d_blk`` (..., N, W), ascending.
 
     Two-level extraction: columns fold into G = ceil(W / w) groups of
-    w <= 32 lanes; a per-group running min (and an int32 bitmask of
-    already-extracted lanes) is maintained, so each of the kd rounds
-    reduces over G group-mins plus the single winning group — O(G + w)
-    lane ops — instead of sweeping all W candidates. Total cost is one
-    full pass (the group-min build) plus kd tiny rounds, vs the
-    kd-passes-over-W of ``lax.top_k``-style selection.
+    w <= 64 lanes; a per-group running min (and a bitmask of
+    already-extracted lanes, one int32 word per 32 lanes) is
+    maintained, so each of the kd rounds reduces over G group-mins plus
+    the single winning group — O(G + w) lane ops — instead of sweeping
+    all W candidates. Total cost is one full pass (the group-min build)
+    plus kd tiny rounds, vs the kd-passes-over-W of ``lax.top_k``-style
+    selection.
 
     Ties resolve to the lowest column (group-major order), matching
     ``lax.top_k``. Returns (dist (..., N, kd), col (..., N, kd)) where
@@ -97,7 +103,7 @@ def select_topkd(d_blk: jax.Array, kd: int, group_w: int = _SELECT_GROUP_W):
     pad with BIG-distance lanes (indices unspecified, mask on dist).
     """
     *lead, n, W = d_blk.shape
-    w = max(1, min(group_w, _SELECT_GROUP_W, W))
+    w = max(1, min(group_w, _SELECT_GROUP_W_MAX, W))
     G = -(-W // w)
     pad = G * w - W
     if pad:
@@ -108,9 +114,13 @@ def select_topkd(d_blk: jax.Array, kd: int, group_w: int = _SELECT_GROUP_W):
         )
     resh = d_blk.reshape(*lead, n, G, w)
     gmin = jnp.min(resh, axis=-1)  # (..., N, G)
-    bits = jnp.zeros(gmin.shape, jnp.int32)
+    nw = -(-w // 32)  # mask words per group (1 for w<=32, 2 for w<=64)
+    bits = jnp.zeros((*gmin.shape, nw), jnp.int32)
     gcol = lax.broadcasted_iota(jnp.int32, gmin.shape, gmin.ndim - 1)
     wcol = jnp.arange(w, dtype=jnp.int32)
+    wword = wcol // 32  # static lane -> mask-word map
+    wbit = wcol % 32
+    word_iota = jnp.arange(nw, dtype=jnp.int32)
     out_shape = (*lead, n, kd)
     out_col = lax.broadcasted_iota(jnp.int32, out_shape, len(out_shape) - 1)
 
@@ -119,17 +129,25 @@ def select_topkd(d_blk: jax.Array, kd: int, group_w: int = _SELECT_GROUP_W):
         gstar = jnp.argmin(gmin, axis=-1)  # (..., N)
         grp = jnp.take_along_axis(resh, gstar[..., None, None], axis=-2)
         grp = jnp.squeeze(grp, -2)  # (..., N, w)
-        mask = jnp.take_along_axis(bits, gstar[..., None], axis=-1)
-        live = jnp.bitwise_and(jnp.right_shift(mask, wcol), 1) == 0
+        mask = jnp.take_along_axis(bits, gstar[..., None, None], axis=-2)
+        mask = jnp.squeeze(mask, -2)  # (..., N, nw)
+        live = jnp.bitwise_and(
+            jnp.right_shift(mask[..., wword], wbit), 1
+        ) == 0  # (..., N, w)
         grp_m = jnp.where(live, grp, BIG)
         pos = jnp.argmin(grp_m, axis=-1)  # (..., N)
         val = jnp.min(grp_m, axis=-1)
         col = gstar.astype(jnp.int32) * w + pos.astype(jnp.int32)
         od = jnp.where(out_col == t, val[..., None], od)
         oi = jnp.where(out_col == t, col[..., None], oi)
-        newbits = mask | jnp.left_shift(jnp.int32(1), pos[..., None])
+        setbit = jnp.where(
+            word_iota == (pos[..., None] // 32),
+            jnp.left_shift(jnp.int32(1), pos[..., None] % 32),
+            0,
+        )  # (..., N, nw)
+        newbits = mask | setbit
         hitg = gcol == gstar[..., None]
-        bits = jnp.where(hitg, newbits, bits)
+        bits = jnp.where(hitg[..., None], newbits[..., None, :], bits)
         newmin = jnp.min(jnp.where(wcol == pos[..., None], BIG, grp_m), -1)
         gmin = jnp.where(hitg, newmin[..., None], gmin)
         return gmin, bits, od, oi
@@ -194,6 +212,7 @@ def stream_topk(
     mxu_bf16: bool = False,
     causal: bool = False,
     sq_y: Optional[jax.Array] = None,
+    group_w: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming top-kd over a (block_n x block_m) tile grid.
 
@@ -211,6 +230,12 @@ def stream_topk(
     if merge not in MERGE_STRATEGIES:
         raise ValueError(
             f"unknown merge strategy {merge!r}; one of {MERGE_STRATEGIES}"
+        )
+    if group_w is None:
+        group_w = _SELECT_GROUP_W
+    if not 1 <= group_w <= _SELECT_GROUP_W_MAX:
+        raise ValueError(
+            f"group_w={group_w} out of range [1, {_SELECT_GROUP_W_MAX}]"
         )
     self_graph = y3 is None
     y3 = x3 if self_graph else y3
@@ -290,7 +315,7 @@ def stream_topk(
             def step(carry, sm):
                 y_blk, sqy_blk, off, step_i = sm
                 d_blk, _ = tile_dists(y_blk, sqy_blk, off, p_blk_for(step_i))
-                vals, col = select_topkd(d_blk, kd)
+                vals, col = select_topkd(d_blk, kd, group_w=group_w)
                 return carry, (vals, off + col)
 
             _, (vals, idxs) = lax.scan(
@@ -373,7 +398,10 @@ def stream_topk(
 
 @dataclasses.dataclass
 class DigcCache:
-    """Host-side cache for reusable graph-construction state.
+    """Host-side cache for reusable graph-construction state — the
+    **legacy eager shim**; new code should thread the functional
+    ``repro.core.state.DigcState`` pytree instead, which carries the
+    same state *through* ``jit`` (DESIGN.md §7).
 
     Holds co-node squared norms (serving a fixed gallery), cluster
     centroids (layer-to-layer / request-to-request k-means warm

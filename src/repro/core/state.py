@@ -1,0 +1,127 @@
+"""Functional DIGC state (DESIGN.md §7): the jit-native successor to
+the host-side ``DigcCache``.
+
+The paper's FPGA accelerator keeps its construction state (stream
+buffers, heap contents) resident on-chip across layers. Our analogue —
+cluster centroids for k-means warm starts, co-node norms for a frozen
+gallery — used to live in a mutable host-side ``DigcCache``, which by
+design never engages under tracing; serving the cache-aware tiers
+therefore meant running them *eager*. ``DigcState`` makes that state an
+explicit pytree value instead: it is threaded in-and-out of ``digc()``
+(``digc(..., state=, state_key=) -> (idx, new_state)``), through
+``vig_forward``, and through a single donated ``jax.jit`` in
+``serve.VigServeEngine`` — warm starts now work *inside* compiled
+serving, and the buffers are donated so the state updates in place.
+
+Layout: ``DigcState.entries`` maps a caller-chosen key (e.g. the model
+stage name) to a ``DigcStateEntry``:
+
+  * ``step``      — () int32 call counter. 0 means cold: builders gate
+    their warm-start paths on ``step > 0`` via ``lax.cond``, so the
+    pytree structure is identical on every call (a jit requirement) and
+    validity is a *runtime* value, not a trace-time one.
+  * ``centroids`` — (B, C, D) k-means centroids (the cluster tier's
+    warm start), or None for builders without them.
+  * ``sq_y``      — (B, M) co-node squared norms (the blocked tier's
+    frozen-gallery hook), or None.
+
+Invalidation rules (who may reuse what):
+
+  * The pytree *structure* is fixed at init time (``DigcState.init`` /
+    ``models.vig.init_vig_state``); entries are never created on the
+    fly — a builder given no entry for its key computes statelessly and
+    the state passes through unchanged.
+  * Entry shapes are part of the compiled program: a workload change
+    (batch, cluster count, co-node count) requires re-init. Builders
+    check shapes *statically* and fall back to a cold build on
+    mismatch rather than reading stale-shaped state.
+  * ``centroids`` are drift-tolerant (an approximate tier's init):
+    reuse across layers of a stage and across requests is safe.
+    ``sq_y`` must match the co-node *contents* exactly: an entry with
+    ``sq_y`` asserts the gallery identified by its key is frozen — the
+    caller must re-init the state when the gallery version changes.
+
+Why donation matters: serving threads the same state pytree through
+every request (`state -> forward -> new state -> forward -> ...`).
+Donating the argument lets XLA write the new centroids into the old
+buffers, so steady-state serving allocates nothing for DIGC state and
+the update is a true in-place carry — the compiled analogue of the
+paper's on-chip residency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DigcStateEntry:
+    """Per-key functional construction state (see module docstring)."""
+
+    step: jax.Array  # () int32; 0 = cold
+    centroids: Optional[jax.Array] = None  # (B, C, D) | None
+    sq_y: Optional[jax.Array] = None  # (B, M) | None
+
+    @property
+    def warm(self) -> jax.Array:
+        """Traced bool: has this entry been written at least once?"""
+        return self.step > 0
+
+    def bump(self, **updates) -> "DigcStateEntry":
+        """Functional update: advance the call counter, replace fields."""
+        return dataclasses.replace(self, step=self.step + 1, **updates)
+
+
+def state_entry(
+    *,
+    centroids_shape: Optional[tuple[int, ...]] = None,
+    sq_y_shape: Optional[tuple[int, ...]] = None,
+    dtype=jnp.float32,
+) -> DigcStateEntry:
+    """A cold entry with zero-initialized buffers of the given shapes.
+
+    The zeros are never *read* as values — ``step == 0`` routes every
+    builder to its cold path — they only fix the pytree leaves so the
+    first and the thousandth call share one compiled program.
+    """
+    return DigcStateEntry(
+        step=jnp.zeros((), jnp.int32),
+        centroids=(
+            None if centroids_shape is None
+            else jnp.zeros(centroids_shape, dtype)
+        ),
+        sq_y=None if sq_y_shape is None else jnp.zeros(sq_y_shape, jnp.float32),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DigcState:
+    """Keyed collection of ``DigcStateEntry`` — the value threaded
+    through ``digc()`` / ``vig_forward`` / ``VigServeEngine``."""
+
+    entries: dict[str, DigcStateEntry]
+
+    @classmethod
+    def init(cls, entries: Optional[dict[str, DigcStateEntry]] = None):
+        return cls(entries=dict(entries or {}))
+
+    def get(self, key: Optional[str]) -> Optional[DigcStateEntry]:
+        if key is None:
+            return None
+        return self.entries.get(key)
+
+    def set(self, key: str, entry: DigcStateEntry) -> "DigcState":
+        return DigcState(entries={**self.entries, key: entry})
+
+    def steps(self) -> dict[str, int]:
+        """Host-side view of the per-key call counters (concrete only)."""
+        return {k: int(e.step) for k, e in self.entries.items()}
+
+    def __len__(self) -> int:
+        return len(self.entries)

@@ -212,13 +212,16 @@ def cluster_digc(
     seed: int = 0,
     kmeans_iters: int = 5,
     init_centroids: Optional[jax.Array] = None,
+    init_valid: Optional[jax.Array] = None,
+    warm_iters: int = 2,
     return_dists: bool = False,
     return_state: bool = False,
 ):
     """Two-stage ANN graph construction (ClusterViG family).
 
     1. cluster co-nodes (k-means, static iters; ``init_centroids``
-       warm-starts from a previous layer/request via ``DigcCache``);
+       warm-starts from a previous layer/request via ``DigcCache`` or a
+       functional ``DigcState`` entry);
     2. bucket members into fixed-capacity cluster lists (overflow
        drops, like the MoE dispatch);
     3. per query: top-n_probe centroids, then top-k·d over the probed
@@ -231,8 +234,18 @@ def cluster_digc(
     (B, N, D) queries — is indexed **once** and broadcast, instead of
     being re-clustered per image. ``n_clusters`` / ``n_probe`` default
     to a workload-adaptive heuristic (``default_cluster_params``).
+
+    ``init_valid`` selects the **functional warm start**: a traced ()
+    bool (a ``DigcStateEntry`` step counter test). Both branches are
+    staged — ``lax.cond`` runs the warm index build (``warm_iters``
+    Lloyd iterations from ``init_centroids``) when true and the cold
+    build (``kmeans_iters`` from random init) when false — so the same
+    compiled program serves the first and every later request. With
+    ``init_valid=None`` (the legacy eager path), warm/cold is a
+    trace-time choice: ``init_centroids`` present means warm.
+
     ``return_state=True`` additionally returns {"centroids": (B, C, D)}
-    for cache warm-starting.
+    for warm-starting the next call.
     """
     # Shared external co-nodes: index once, before batch promotion.
     shared_y = y is not None and y.ndim == 2 and x.ndim == 3
@@ -252,22 +265,34 @@ def cluster_digc(
     if init3 is not None and init3.shape[1] != n_clusters:
         init3 = None  # stale cache shape (workload changed): cold start
 
-    def index_one(yb, init_b):
-        return _cluster_index(
-            yb, n_clusters=n_clusters, cap=cap, seed=seed,
-            iters=kmeans_iters, init_centroids=init_b,
-        )
+    def build_index(iters: int, init_b3):
+        def index_one(yb, init_b=None):
+            return _cluster_index(
+                yb, n_clusters=n_clusters, cap=cap, seed=seed,
+                iters=iters, init_centroids=init_b,
+            )
 
-    if shared_y:
-        cents1, members1 = index_one(
-            y3[0], None if init3 is None else init3[0]
-        )
-        cents = jnp.broadcast_to(cents1[None], (b,) + cents1.shape)
-        members = jnp.broadcast_to(members1[None], (b,) + members1.shape)
+        if shared_y:
+            cents1, members1 = index_one(
+                y3[0], None if init_b3 is None else init_b3[0]
+            )
+            return (
+                jnp.broadcast_to(cents1[None], (b,) + cents1.shape),
+                jnp.broadcast_to(members1[None], (b,) + members1.shape),
+            )
+        if init_b3 is None:
+            return jax.vmap(lambda yb: index_one(yb))(y3)
+        return jax.vmap(index_one)(y3, init_b3)
+
+    if init3 is None:
+        cents, members = build_index(kmeans_iters, None)
+    elif init_valid is None:
+        cents, members = build_index(kmeans_iters, init3)
     else:
-        cents, members = (
-            jax.vmap(index_one)(y3, init3) if init3 is not None
-            else jax.vmap(lambda yb: index_one(yb, None))(y3)
+        cents, members = lax.cond(
+            init_valid,
+            lambda: build_index(warm_iters, init3),
+            lambda: build_index(kmeans_iters, None),
         )
 
     idx, dist = jax.vmap(
@@ -364,8 +389,11 @@ def recall_vs_exact(x, y, idx_approx, k: int) -> float:
 # Registry entries (DESIGN.md §4).
 
 
-def _build_cluster(x, y, pos_bias, spec: DigcSpec, cache=None, cache_key=None):
+def _build_cluster(x, y, pos_bias, spec: DigcSpec, cache=None, cache_key=None,
+                   state_entry=None):
     del pos_bias  # validated unsupported upstream
+    if state_entry is not None:
+        return _build_cluster_stateful(x, y, spec, state_entry)
     init = None
     ckey = None
     if cache is not None and cache_key is not None:
@@ -399,6 +427,39 @@ def _build_cluster(x, y, pos_bias, spec: DigcSpec, cache=None, cache_key=None):
         cache.put("cluster_centroids", ckey, state["centroids"])
         return idx, dist
     return out
+
+
+def _build_cluster_stateful(x, y, spec: DigcSpec, entry):
+    """Functional form: (x, y, spec, DigcStateEntry) ->
+    (idx, dist, new entry). Jit-native — warm/cold is a runtime
+    ``lax.cond`` on the entry's step counter, and the new centroids are
+    returned in the entry (donation-stable shapes/dtypes)."""
+    m = y.shape[1] if y is not None else x.shape[1]
+    n_clusters, _ = default_cluster_params(m, spec.n_clusters, spec.n_probe)
+    expected = (x.shape[0], n_clusters, x.shape[-1])
+    init = entry.centroids
+    common = dict(
+        k=spec.k, dilation=spec.dilation,
+        n_clusters=spec.n_clusters, n_probe=spec.n_probe,
+        capacity_factor=(
+            spec.capacity_factor if spec.capacity_factor is not None else 2.0
+        ),
+        seed=spec.seed if spec.seed is not None else 0,
+        return_dists=True, return_state=True,
+    )
+    if init is None or init.shape != expected:
+        # No centroid buffer for this workload (shape is static): cold
+        # build, advance the counter only — never write mismatched
+        # shapes into the state (the pytree structure is the compiled
+        # program's contract).
+        idx, dist, st = cluster_digc(x, y, **common)
+        return idx, dist, entry.bump()
+    idx, dist, st = cluster_digc(
+        x, y, init_centroids=init, init_valid=entry.warm, **common
+    )
+    return idx, dist, entry.bump(
+        centroids=st["centroids"].astype(init.dtype)
+    )
 
 
 def _build_axial(x, y, pos_bias, spec: DigcSpec):
@@ -441,8 +502,10 @@ register(GraphBuilder(
     knobs=frozenset({"n_clusters", "n_probe", "capacity_factor", "seed"}),
     exact=False,
     supports_cache=True,
+    supports_state=True,  # jit-native centroid warm starts via DigcState
     doc="ClusterViG-family IVF search: k-means index (shared co-nodes "
-        "indexed once, DigcCache warm starts) + dispatch-form probe",
+        "indexed once, DigcState/DigcCache warm starts) + dispatch-form "
+        "probe",
 ))
 
 register(GraphBuilder(

@@ -19,15 +19,29 @@ picks ``(block_n, block_m, merge, fuse_norms)`` per
 
 The tuner never changes *what* is computed — only the engine schedule.
 Approximate merges (``packed``) are excluded unless ``allow_approx``.
+
+The JSON cache is **host-keyed** (schema 2): entries nest under
+``host_key()`` = backend + platform + jax version, so a schedule tuned
+on one machine is never silently reused on another — a laptop's
+block_n=512 is not a v5e's. Schema-1 files (flat, backend-only keys)
+are not migrated automatically: their entries cannot be attributed to
+a host, so they are dropped on load and re-measured.
+
+``VigSchedule`` maps pyramid stages to tuned specs:
+``DigcTuner.tune_schedule`` tunes each stage's (N, M, D, kd) workload
+separately — the PR-2 engine applied the stage-0 schedule everywhere,
+but a pooled stage (M = N/r²) or a downsampled one (N/4) wants
+different tiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+import platform
 import time
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import numpy as np
 
@@ -79,11 +93,28 @@ class TuneResult:
         }
 
 
+def host_key(backend: Optional[str] = None) -> str:
+    """Identity of the measuring host: backend + platform + jax version.
+
+    A tuned schedule is a *measurement* of this machine; entries under a
+    different host key are never read (and a jax upgrade re-measures —
+    compiler changes move the optimum).
+    """
+    import jax
+
+    backend = backend if backend is not None else jax.default_backend()
+    return (
+        f"{backend}|{platform.system().lower()}-{platform.machine()}"
+        f"|jax-{jax.__version__}"
+    )
+
+
 def workload_key(
-    backend: str, b: int, n: int, m: int, d: int, kd: int,
+    b: int, n: int, m: int, d: int, kd: int,
     causal: bool = False, has_pos: bool = False,
 ) -> str:
-    key = f"{backend}:b{b}:n{n}:m{m}:d{d}:kd{kd}"
+    """Workload identity within one host (see ``host_key``)."""
+    key = f"b{b}:n{n}:m{m}:d{d}:kd{kd}"
     if causal:
         key += ":causal"
     if has_pos:
@@ -106,12 +137,21 @@ class DigcTuner:
 
         self.path = Path(path) if path is not None else None
         self.backend = backend if backend is not None else jax.default_backend()
+        self.host = host_key(self.backend)
         self.measure_iters = measure_iters
         self.max_measure = max_measure
-        self.entries: dict[str, dict] = {}
+        # Full file contents (all hosts) are preserved on save; only
+        # this host's entries are ever *read*.
+        self._hosts: dict[str, dict] = {}
         if self.path is not None and self.path.exists():
             data = json.loads(self.path.read_text())
-            self.entries = dict(data.get("entries", {}))
+            if data.get("schema") == 2:
+                self._hosts = {
+                    h: dict(e) for h, e in data.get("hosts", {}).items()
+                }
+            # schema 1: flat backend-keyed entries with no platform/jax
+            # identity — unattributable, so dropped (re-measured here).
+        self.entries: dict[str, dict] = self._hosts.setdefault(self.host, {})
 
     # -- candidate generation -------------------------------------------
 
@@ -161,7 +201,7 @@ class DigcTuner:
         if self.path is None:
             return
         self.path.write_text(json.dumps(
-            {"schema": 1, "backend": self.backend, "entries": self.entries},
+            {"schema": 2, "hosts": self._hosts},
             indent=2, sort_keys=True,
         ) + "\n")
 
@@ -199,7 +239,7 @@ class DigcTuner:
         b, n, d = x3.shape
         m = n if y is None else (y.shape[-2])
         kd = spec.k * spec.dilation
-        key = workload_key(self.backend, b, n, m, d, kd, spec.causal,
+        key = workload_key(b, n, m, d, kd, spec.causal,
                            pos_bias is not None)
         if not force:
             cached = self.lookup(key)
@@ -243,6 +283,85 @@ class DigcTuner:
         self.entries[key] = best.as_dict()
         self.save()
         return best.config.apply(spec), best
+
+    # -- per-stage schedules --------------------------------------------
+
+    def tune_schedule(
+        self,
+        workloads: Sequence[dict],
+        *,
+        spec: DigcSpec,
+        batch: int = 1,
+        rng_seed: int = 0,
+        force: bool = False,
+    ) -> tuple["VigSchedule", list[TuneResult]]:
+        """Tune one engine schedule per model stage.
+
+        ``workloads`` is one dict per stage — ``{"N", "M", "D", "k",
+        "dilation"}``, e.g. the first row of each stage from
+        ``models.vig.count_digc_work`` — measured on synthetic probe
+        arrays of the stage's true shape (pooled stages tune the real
+        (N, M) workload, not a self-graph stand-in). Returns the
+        ``VigSchedule`` plus the per-stage results; cached entries are
+        served without re-measurement.
+        """
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(rng_seed)
+        stages: list[DigcSpec] = []
+        results: list[TuneResult] = []
+        for work in workloads:
+            probe = jnp.asarray(
+                rng.standard_normal((batch, work["N"], work["D"])),
+                jnp.float32,
+            )
+            y_probe = None
+            if work["M"] != work["N"]:
+                y_probe = jnp.asarray(
+                    rng.standard_normal((batch, work["M"], work["D"])),
+                    jnp.float32,
+                )
+            stage_spec = spec.replace(
+                k=work["k"], dilation=work["dilation"],
+                block_n=None, block_m=None, merge=None, fuse_norms=None,
+            )
+            tuned, result = self.tune(probe, y_probe, spec=stage_spec,
+                                      force=force)
+            stages.append(tuned)
+            results.append(result)
+        return VigSchedule(stages=tuple(stages)), results
+
+
+@dataclasses.dataclass(frozen=True)
+class VigSchedule:
+    """Stage -> tuned ``DigcSpec`` map for a pyramid/isotropic model.
+
+    The PR-2 engine tuned the stage-0 workload and applied those knobs
+    to every stage; a schedule gives each stage its own measured entry
+    (later pyramid stages run at N/4, N/16, ... and pooled co-nodes —
+    different optimal tiles). Stages beyond the tuple reuse the last
+    entry, so an isotropic model's schedule is one spec.
+    """
+
+    stages: tuple[DigcSpec, ...]
+
+    def spec_for(self, si: int) -> DigcSpec:
+        if not self.stages:
+            raise ValueError("empty VigSchedule")
+        return self.stages[min(si, len(self.stages) - 1)]
+
+    def describe(self) -> list[dict]:
+        return [
+            {
+                "stage": si,
+                "impl": s.impl,
+                "block_n": s.block_n,
+                "block_m": s.block_m,
+                "merge": s.merge,
+                "fuse_norms": bool(s.fuse_norms),
+            }
+            for si, s in enumerate(self.stages)
+        ]
 
 
 def autotune_spec(

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from repro.core.builder import DigcSpec, get_builder
 from repro.core.digc import digc
 from repro.core.graph import mr_aggregate
+from repro.core.state import DigcState, state_entry
+from repro.core.tuner import VigSchedule
 from repro.models.module import spec
 
 
@@ -174,14 +176,19 @@ def _dilation_for(cfg: VigConfig, global_block: int, m: int) -> int:
 
 
 def resolve_digc_spec(cfg: VigConfig,
-                      digc_impl: Union[str, DigcSpec, None]) -> DigcSpec:
+                      digc_impl: Union[str, DigcSpec, None],
+                      stage: int = 0) -> DigcSpec:
     """Normalize the model's DIGC choice to a DigcSpec.
 
     A spec that leaves ``k`` unset (the default) inherits cfg.k, so
     passing ``DigcSpec(impl="pallas")`` only picks the implementation;
-    an explicit ``k`` in the spec wins over the config.
+    an explicit ``k`` in the spec wins over the config. A
+    ``VigSchedule`` resolves to its entry for ``stage`` (per-stage
+    tuned engine schedules, ``core.tuner.tune_schedule``).
     """
     choice = digc_impl if digc_impl is not None else cfg.digc_impl
+    if isinstance(choice, VigSchedule):
+        choice = choice.spec_for(stage)
     if isinstance(choice, DigcSpec):
         return choice if choice.k is not None else choice.replace(k=cfg.k)
     return DigcSpec(impl=choice, k=cfg.k)
@@ -189,17 +196,23 @@ def resolve_digc_spec(cfg: VigConfig,
 
 def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
                   digc_spec: Optional[DigcSpec] = None,
-                  cache=None, layer_key: Optional[str] = None):
-    """x (B, N, D) -> (B, N, D); one Grapher + FFN residual pair.
+                  cache=None, layer_key: Optional[str] = None,
+                  state: Optional[DigcState] = None):
+    """x (B, N, D) -> ((B, N, D), state); one Grapher + FFN residual
+    pair. The second return is the (possibly updated) ``DigcState`` —
+    ``None`` when no state was passed.
 
     Graph construction runs batched through the registry — no per-sample
     closure, no strategy branching; the builder supplies its fused
-    aggregation (e.g. the MRConv Pallas kernel) when it has one.
-    ``cache`` (a ``DigcCache``) + ``layer_key`` let cache-aware builders
-    carry construction state across layers and serving requests — e.g.
-    the cluster tier warm-starts its k-means from the previous layer's
-    centroids. Cache reuse is host-side and only engages in eager
-    execution; under jit the builders bypass it.
+    aggregation (e.g. the MRConv Pallas kernel) when it has one. Two
+    ways to carry construction state across layers and requests:
+
+    * ``state`` (a functional ``DigcState`` pytree, keyed by
+      ``layer_key``) — the jit-native path: stateful builders read and
+      return their entry *through* the trace, so warm starts work in
+      compiled serving.
+    * ``cache`` (a ``DigcCache``) — the legacy eager shim: host-side,
+      bypassed under jit.
     """
     dspec = digc_spec if digc_spec is not None else resolve_digc_spec(cfg, None)
     h = _ln(x, bp["ln_g"]["scale"])
@@ -217,8 +230,12 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     # Centroid warm starts are shared per stage (same co-node geometry):
     # layer l+1 starts from layer l's centroids, the next request from
     # this one's — features drift slowly, so 2 Lloyd iterations suffice.
-    idx = digc(h, cond, spec=dspec, cache=cache,
-               cache_key=layer_key)  # (B, N, k)
+    if state is not None:
+        idx, state = digc(h, cond, spec=dspec, state=state,
+                          state_key=layer_key)  # (B, N, k)
+    else:
+        idx = digc(h, cond, spec=dspec, cache=cache,
+                   cache_key=layer_key)  # (B, N, k)
     aggregate = builder.aggregate if builder.aggregate is not None else mr_aggregate
     agg = aggregate(h, cond if cond is not None else h, idx)
     h = jnp.concatenate([h, agg], axis=-1) @ bp["fc_graph"]
@@ -226,42 +243,86 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     x = x + h
     f = _ln(x, bp["ln_f"]["scale"])
     f = jax.nn.gelu(f @ bp["fc1"]) @ bp["fc2"]
-    return x + f
+    return x + f, state
 
 
 def vig_forward(params, images, cfg: VigConfig, *,
-                digc_impl: Union[str, DigcSpec, None] = None,
-                cache=None):
+                digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
+                cache=None,
+                state: Optional[DigcState] = None):
     """images (B, H, W, C) -> class logits (B, num_classes).
 
-    ``digc_impl`` may be a registered builder name or a full DigcSpec.
-    ``cache`` is an optional ``repro.core.engine.DigcCache``: blocks in
-    the same stage share a cache key, so per-layer self-graphs reuse
-    construction state (cluster centroids warm-start from the previous
-    block / the previous serving request) instead of rebuilding from
-    scratch. Only effective in eager execution (the serving path);
-    under jit it is bypassed.
+    ``digc_impl`` may be a registered builder name, a full DigcSpec, or
+    a ``VigSchedule`` (per-stage tuned specs). Construction state
+    across blocks and requests comes in two forms:
+
+    * ``state`` — a functional ``DigcState`` (see ``init_vig_state``):
+      the call returns ``(logits, new_state)`` and is fully
+      jit-compatible; blocks in a stage share a state key, so layer
+      l+1 warm-starts from layer l, and feeding the returned state into
+      the next call warm-starts request-to-request *inside* the
+      compiled program.
+    * ``cache`` — the legacy eager ``DigcCache`` shim (host-side,
+      bypassed under jit); returns logits only.
     """
-    spec = resolve_digc_spec(cfg, digc_impl)
     x = patchify(images, cfg.patch) @ params["stem"]
     x = x + params["pos"]
     grid = cfg.base_grid
     gb = 0
     for si, depth in enumerate(cfg.depths):
+        spec = resolve_digc_spec(cfg, digc_impl, stage=si)
         r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
         m = (grid // max(r, 1)) ** 2
         for bi in range(depth):
             dil = _dilation_for(cfg, gb, m)
-            x = grapher_block(
+            x, state = grapher_block(
                 params[f"stage{si}"][f"block{bi}"], x, cfg, grid, r, dil,
                 digc_spec=spec, cache=cache, layer_key=f"stage{si}",
+                state=state,
             )
             gb += 1
         if si + 1 < len(cfg.depths):
             x = _downsample(x, grid, params[f"down{si}"])
             grid //= 2
     pooled = jnp.mean(x, axis=1)
-    return pooled @ params["head"]
+    logits = pooled @ params["head"]
+    if state is not None:
+        return logits, state
+    return logits
+
+
+def init_vig_state(cfg: VigConfig, batch: int,
+                   digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
+                   ) -> DigcState:
+    """Allocate the functional DIGC state for a model + batch size.
+
+    One entry per stage (the key ``grapher_block`` passes): a cold
+    step counter always; a (B, C, D) centroid buffer when the stage's
+    builder is the cluster tier (C from ``default_cluster_params`` on
+    the stage's co-node count — the same derivation the builder uses,
+    so shapes line up). The pytree structure this fixes is the compiled
+    program's contract: changing batch size or impl means re-init.
+    """
+    from repro.core.strategies import default_cluster_params
+
+    entries = {}
+    grid = cfg.base_grid
+    for si in range(len(cfg.depths)):
+        spec = resolve_digc_spec(cfg, digc_impl, stage=si)
+        r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
+        m = (grid // max(r, 1)) ** 2
+        if spec.impl == "cluster":
+            n_clusters, _ = default_cluster_params(
+                m, spec.n_clusters, spec.n_probe
+            )
+            entries[f"stage{si}"] = state_entry(
+                centroids_shape=(batch, n_clusters, cfg.embed_dims[si])
+            )
+        else:
+            entries[f"stage{si}"] = state_entry()
+        if si + 1 < len(cfg.depths):
+            grid //= 2
+    return DigcState.init(entries)
 
 
 def vig_loss_fn(params, batch, cfg: VigConfig):
@@ -284,7 +345,8 @@ def count_digc_work(cfg: VigConfig):
         d = cfg.embed_dims[si]
         for _ in range(depth):
             dil = _dilation_for(cfg, gb, m)
-            out.append({"N": n, "M": m, "D": d, "k": cfg.k, "dilation": dil})
+            out.append({"stage": si, "N": n, "M": m, "D": d, "k": cfg.k,
+                        "dilation": dil})
             gb += 1
         if si + 1 < len(cfg.depths):
             grid //= 2

@@ -1,3 +1,5 @@
 # Serving substrate: KV caches, slot-based continuous batching for the
-# LM path, and the ViG image engine with cross-request DIGC state
-# (DigcCache + autotuned construction schedule).
+# LM path, and the ViG image engine serving every tier through a single
+# donated jax.jit with cross-request functional DigcState (per-stage
+# VigSchedule autotuning; the eager DigcCache path survives as the
+# mode="eager" compatibility shim).

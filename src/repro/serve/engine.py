@@ -124,103 +124,150 @@ class ServeEngine:
 
 
 class VigServeEngine:
-    """Batched ViG inference with cross-request DIGC state.
+    """Batched ViG inference with cross-request DIGC state, served
+    through a single donated ``jax.jit`` for **every** tier.
 
     Each ``infer`` call runs one batched forward. Two pieces of
     graph-construction state persist across requests:
 
-    * a ``DigcCache`` — cache-aware builders reuse it through
-      ``vig_forward``: the cluster tier warm-starts its per-stage
-      k-means from the previous request's centroids (2 Lloyd
-      iterations instead of 5 from random init). Only cache-aware
-      impls run eagerly (the host-side cache is bypassed under jit by
-      design); impls with no reusable state — the exact tiers — serve
-      through a jitted forward instead of paying eager dispatch for
-      nothing.
-    * an autotuned engine schedule — ``warmup()`` tunes the blocked
-      tier's (block_n, block_m, merge, fuse_norms) on the model's
-      stage-0 DIGC workload via ``core.tuner.DigcTuner`` and bakes the
-      winning knobs into the serving spec; later engine instances with
-      the same tuner path skip the measurement (JSON cache).
+    * a functional ``DigcState`` (``core/state.py``) — threaded
+      in-and-out of the jitted forward, so stateful builders work
+      *inside* the compiled program: the cluster tier warm-starts its
+      per-stage k-means from the previous request's centroids (2 Lloyd
+      iterations instead of 5, gated by a runtime step counter). The
+      state argument is donated: XLA writes the new centroids into the
+      old buffers, so steady-state serving allocates nothing for DIGC
+      state. One compiled program + state pytree is kept per batch
+      size.
+    * a ``VigSchedule`` — ``warmup()`` tunes the blocked tier's engine
+      knobs (block_n, block_m, merge, fuse_norms) **per pyramid
+      stage** via ``core.tuner.DigcTuner.tune_schedule``; later engine
+      instances with the same tuner path skip the measurement
+      (host-keyed JSON cache).
+
+    ``mode="eager"`` is the legacy compatibility shim: cache-aware
+    tiers run eager with the host-side ``DigcCache`` (the PR-2
+    behavior), everything else jits statelessly. It exists for parity
+    testing and as an escape hatch; the jit path is the serving path.
     """
 
     def __init__(self, cfg, params, *, digc_impl=None, batch: int = 8,
-                 autotune: bool = True, tuner_path=None):
+                 autotune: bool = True, tuner_path=None, mode: str = "jit"):
         from repro.core.engine import DigcCache
         from repro.models.vig import resolve_digc_spec
 
+        from repro.core.tuner import VigSchedule
+
+        if mode not in ("jit", "eager"):
+            raise ValueError(f"mode must be 'jit' or 'eager', got {mode!r}")
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.spec = resolve_digc_spec(cfg, digc_impl)
-        self.cache = DigcCache()
+        self.mode = mode
+        self.cache = DigcCache()  # engaged by the eager shim only
         self.autotune = autotune
         self.tuner_path = tuner_path
-        self.tuned = None  # TuneResult once warmed up
+        # A pre-tuned VigSchedule may be passed directly as digc_impl
+        # (e.g. tuned offline); warmup() then has nothing to do.
+        self.schedule = digc_impl if isinstance(digc_impl, VigSchedule) else None
+        self.tuned = None  # per-stage TuneResults once warmed up
         self.requests_served = 0
-        self._jit_fwd = None  # (spec, jitted forward) for cache-less impls
+        self._jit_fwd = None  # eager shim's stateless fallback
+        # jit mode: batch size -> [compiled forward, DigcState]
+        self._compiled: dict[int, list] = {}
 
     def warmup(self, rng_seed: int = 0):
-        """Autotune the engine schedule on the stage-0 DIGC workload."""
-        if not self.autotune or self.spec.impl != "blocked":
+        """Autotune a per-stage engine schedule (blocked tier only).
+
+        A no-op when a pre-tuned ``VigSchedule`` was passed at
+        construction — warmup never clobbers a user-provided schedule.
+        """
+        if (not self.autotune or self.spec.impl != "blocked"
+                or self.schedule is not None):
             return None
         from repro.core.tuner import DigcTuner
         from repro.models.vig import count_digc_work
 
-        work = count_digc_work(self.cfg)[0]  # stage 0 dominates
-        rng = np.random.default_rng(rng_seed)
-        probe = jnp.asarray(
-            rng.standard_normal((self.batch, work["N"], work["D"])),
-            jnp.float32,
-        )
-        # Pyramid stages pool co-nodes (M = N / r^2): tune the real
-        # (N, M) workload, not a self-graph stand-in.
-        y_probe = None
-        if work["M"] != work["N"]:
-            y_probe = jnp.asarray(
-                rng.standard_normal((self.batch, work["M"], work["D"])),
-                jnp.float32,
-            )
-        spec = self.spec.replace(
-            k=work["k"], dilation=work["dilation"],
-            block_n=None, block_m=None, merge=None, fuse_norms=None,
-        )
+        # One workload per stage: pooled stages tune the real (N, M)
+        # pair, later pyramid stages get their own cached entries.
+        stage_rows: dict[int, dict] = {}
+        for row in count_digc_work(self.cfg):
+            stage_rows.setdefault(row["stage"], row)
         tuner = DigcTuner(self.tuner_path)
-        tuned, result = tuner.tune(probe, y_probe, spec=spec)
-        self.spec = self.spec.replace(
-            block_n=tuned.block_n, block_m=tuned.block_m,
-            merge=tuned.merge, fuse_norms=tuned.fuse_norms,
+        self.schedule, self.tuned = tuner.tune_schedule(
+            [stage_rows[si] for si in sorted(stage_rows)],
+            spec=self.spec, batch=self.batch, rng_seed=rng_seed,
         )
-        self.tuned = result
-        return result
+        # Forwards compiled before the schedule existed bake the old
+        # spec: drop them so the next request recompiles with it.
+        self._compiled.clear()
+        self._jit_fwd = None
+        return self.tuned
 
-    def infer(self, images) -> jax.Array:
-        """images (B, H, W, C) -> logits (B, num_classes)."""
+    def _impl_choice(self):
+        return self.schedule if self.schedule is not None else self.spec
+
+    def _infer_jit(self, images) -> jax.Array:
+        from repro.models.vig import init_vig_state, vig_forward
+
+        b = int(images.shape[0])
+        if b not in self._compiled:
+            choice = self._impl_choice()
+            fwd = jax.jit(
+                lambda p, im, st: vig_forward(
+                    p, im, self.cfg, digc_impl=choice, state=st
+                ),
+                donate_argnums=(2,),
+            )
+            self._compiled[b] = [fwd, init_vig_state(self.cfg, b, choice)]
+        fwd, state = self._compiled[b]
+        logits, new_state = fwd(self.params, images, state)
+        self._compiled[b][1] = new_state
+        return logits
+
+    def _infer_eager_shim(self, images) -> jax.Array:
         from repro.core.builder import get_builder
         from repro.models.vig import vig_forward
 
-        if self.autotune and self.tuned is None and self.spec.impl == "blocked":
-            self.warmup()
         if get_builder(self.spec.impl).supports_cache:
             # Eager so the host-side DigcCache engages across requests.
-            logits = vig_forward(
+            return vig_forward(
                 self.params, images, self.cfg,
                 digc_impl=self.spec, cache=self.cache,
             )
+        # No reusable construction state: serve jitted, stateless —
+        # still through the tuned per-stage schedule when one exists,
+        # so eager vs jit mode differ only in the state threading.
+        choice = self._impl_choice()
+        if self._jit_fwd is None or self._jit_fwd[0] is not choice:
+            self._jit_fwd = (choice, jax.jit(
+                lambda p, im: vig_forward(p, im, self.cfg, digc_impl=choice)
+            ))
+        return self._jit_fwd[1](self.params, images)
+
+    def infer(self, images) -> jax.Array:
+        """images (B, H, W, C) -> logits (B, num_classes)."""
+        if (self.autotune and self.tuned is None and self.schedule is None
+                and self.spec.impl == "blocked"):
+            self.warmup()
+        if self.mode == "eager":
+            logits = self._infer_eager_shim(images)
         else:
-            # No reusable construction state: serve jitted.
-            if self._jit_fwd is None or self._jit_fwd[0] != self.spec:
-                spec = self.spec
-                self._jit_fwd = (spec, jax.jit(
-                    lambda p, im: vig_forward(p, im, self.cfg, digc_impl=spec)
-                ))
-            logits = self._jit_fwd[1](self.params, images)
+            logits = self._infer_jit(images)
         self.requests_served += int(images.shape[0])
         return logits
 
+    def state_steps(self) -> dict:
+        """Per-batch-size view of the functional state's step counters."""
+        return {b: c[1].steps() for b, c in self._compiled.items()}
+
     def stats(self) -> dict:
-        out = {"requests_served": self.requests_served,
-               "digc_cache": self.cache.stats()}
+        out = {"requests_served": self.requests_served, "mode": self.mode,
+               "digc_cache": self.cache.stats(),
+               "digc_state": self.state_steps()}
+        if self.schedule is not None:
+            out["schedule"] = self.schedule.describe()
         if self.tuned is not None:
-            out["tuned"] = self.tuned.as_dict()
+            out["tuned"] = [r.as_dict() for r in self.tuned]
         return out

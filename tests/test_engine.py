@@ -47,20 +47,49 @@ def assert_same_valid(i_a, d_a, i_b, d_b, rtol=1e-5, atol=1e-4):
 # select_topkd: the grouped LSM
 
 
+@pytest.mark.parametrize("group_w", [32, 64, 48])
 @pytest.mark.parametrize("w,kd", [(64, 4), (200, 9), (1000, 16), (7, 7)])
-def test_select_topkd_matches_lax_topk(w, kd):
+def test_select_topkd_matches_lax_topk(w, kd, group_w):
     rng = np.random.default_rng(w * 31 + kd)
     d = _rand(rng, 2, 37, w) * 10
-    vals, cols = select_topkd(d, kd)
+    vals, cols = select_topkd(d, kd, group_w=group_w)
     neg, ref_cols = jax.lax.top_k(-d, kd)
     np.testing.assert_array_equal(np.asarray(cols), np.asarray(ref_cols))
     np.testing.assert_array_equal(np.asarray(vals), np.asarray(-neg))
 
 
-def test_select_topkd_ties_lowest_column():
+@pytest.mark.parametrize("group_w", [32, 64])
+def test_select_topkd_ties_lowest_column(group_w):
     d = jnp.asarray([[3.0, 1.0, 1.0, 2.0, 1.0]])
-    vals, cols = select_topkd(d, 4)
+    vals, cols = select_topkd(d, 4, group_w=group_w)
     np.testing.assert_array_equal(np.asarray(cols[0]), [1, 2, 4, 3])
+
+
+def test_select_topkd_w64_ties_across_mask_words():
+    """Equal values on both sides of the 32-lane word boundary of one
+    64-lane group: extraction order must stay lowest-column-first and
+    the second mask word must retire lanes 32..63 correctly."""
+    row = np.full(64, 50.0, np.float32)
+    row[[2, 34, 40]] = 1.0  # tie triple spanning both words
+    row[[5, 63]] = 2.0
+    vals, cols = select_topkd(jnp.asarray(row[None]), 5, group_w=64)
+    np.testing.assert_array_equal(np.asarray(cols[0]), [2, 34, 40, 5, 63])
+    np.testing.assert_array_equal(
+        np.asarray(vals[0]), [1.0, 1.0, 1.0, 2.0, 2.0]
+    )
+
+
+def test_engine_group_w_knob_exact_end_to_end():
+    """blocked merge="select" with group_w=64 == reference, through the
+    registry (DigcSpec knob) and under query tiling."""
+    rng = np.random.default_rng(77)
+    x, y = _rand(rng, 2, 50, 12), _rand(rng, 2, 150, 12)
+    i_r = digc(x, y, k=5, impl="reference")
+    i_w = digc(x, y, k=5, impl="blocked", merge="select", group_w=64,
+               block_n=16, block_m=96)
+    np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_w))
+    with pytest.raises(ValueError, match="group_w"):
+        digc(x, y, k=5, impl="blocked", group_w=128)
 
 
 def test_select_topkd_short_rows_pad_big():
@@ -330,8 +359,9 @@ def test_cache_eviction_bounded():
 
 
 def test_vig_serve_engine_persists_state():
-    """VigServeEngine: cache state survives requests; autotune fills
-    the engine schedule and results stay finite."""
+    """VigServeEngine (jit mode, the default): the cluster tier serves
+    through the compiled forward with functional DigcState carried
+    across requests — no eager fallback, no DigcCache involvement."""
     from repro.models import vig
     from repro.models.module import init_params
     from repro.serve.engine import VigServeEngine
@@ -347,12 +377,43 @@ def test_vig_serve_engine_persists_state():
     assert out.shape == (2, 3) and bool(jnp.all(jnp.isfinite(out)))
     eng.infer(imgs)
     s = eng.stats()
-    assert s["requests_served"] == 4
-    # layer 2 warm-starts from layer 1, request 2 from request 1
-    assert s["digc_cache"]["hits"] >= 3
+    assert s["requests_served"] == 4 and s["mode"] == "jit"
+    # 2 blocks x 2 requests threaded the stage-0 state entry 4 times
+    # (layer 2 warm-starts from layer 1, request 2 from request 1) ...
+    assert s["digc_state"][2]["stage0"] == 4
+    # ... and the host-side cache never engaged (fully jitted).
+    assert s["digc_cache"]["hits"] == 0 and s["digc_cache"]["entries"] == 0
+
+
+def test_vig_serve_engine_eager_shim_matches_jit():
+    """The legacy eager DigcCache shim (mode="eager") stays available
+    and parity-equal: same logits as the jitted functional-state path
+    for the cluster tier (deterministic seed), and its DigcCache still
+    engages across layers/requests."""
+    from repro.models import vig
+    from repro.models.module import init_params
+    from repro.serve.engine import VigServeEngine
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(2,), num_classes=3, k=3,
+        digc_impl="cluster",
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    jit_eng = VigServeEngine(cfg, params, autotune=False)
+    eager_eng = VigServeEngine(cfg, params, autotune=False, mode="eager")
+    out_jit = jit_eng.infer(imgs)
+    out_eager = eager_eng.infer(imgs)
+    # First request: both sides cold-start the same k-means (same seed,
+    # same Lloyd schedule) — the shim and the pytree path must agree.
+    np.testing.assert_allclose(
+        np.asarray(out_jit), np.asarray(out_eager), rtol=1e-4, atol=1e-4
+    )
+    assert eager_eng.stats()["digc_cache"]["hits"] >= 1
 
 
 def test_vig_serve_engine_autotunes_blocked(tmp_path):
+    """warmup() now tunes a per-stage VigSchedule (host-keyed cache)."""
     from repro.models import vig
     from repro.models.module import init_params
     from repro.serve.engine import VigServeEngine
@@ -367,8 +428,53 @@ def test_vig_serve_engine_autotunes_blocked(tmp_path):
     out = eng.infer(imgs)
     assert bool(jnp.all(jnp.isfinite(out)))
     st = eng.stats()
-    assert st["tuned"]["source"] == "measured"
-    assert eng.spec.merge in ("select", "topk")
+    assert [r["source"] for r in st["tuned"]] == ["measured"]
+    assert len(st["schedule"]) == 1
+    assert eng.schedule.spec_for(0).merge in ("select", "topk")
+
+
+def test_vig_serve_engine_accepts_pretuned_schedule():
+    """A VigSchedule passed as digc_impl must be used per stage (not
+    collapsed to stage 0) and must never be clobbered by warmup."""
+    from repro.core.tuner import VigSchedule
+    from repro.models import vig
+    from repro.models.module import init_params
+    from repro.serve.engine import VigServeEngine
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(1,), num_classes=3, k=3,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    sched = VigSchedule(stages=(
+        DigcSpec(impl="blocked", k=3, block_m=32, merge="topk"),
+    ))
+    eng = VigServeEngine(cfg, params, digc_impl=sched, batch=2)
+    assert eng.schedule is sched
+    assert eng.warmup() is None  # pre-tuned: nothing to measure
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    out = eng.infer(imgs)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert eng.schedule is sched  # infer() did not re-tune over it
+
+
+def test_vig_serve_engine_eager_blocked_uses_tuned_schedule(tmp_path):
+    """mode="eager" must serve the blocked tier through the same tuned
+    schedule as jit mode (the modes differ only in state threading),
+    so warmup's measurement is never wasted."""
+    from repro.models import vig
+    from repro.models.module import init_params
+    from repro.serve.engine import VigServeEngine
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(1,), num_classes=3, k=3,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    eng = VigServeEngine(cfg, params, batch=2, mode="eager",
+                         tuner_path=tmp_path / "tune.json")
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    eng.infer(imgs)
+    assert eng.schedule is not None
+    assert eng._jit_fwd[0] is eng.schedule  # serving through the schedule
 
 
 def test_vig_forward_with_cache_matches_without():

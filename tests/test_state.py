@@ -1,0 +1,291 @@
+"""Functional DIGC state (core/state.py): pytree round-trips through
+jitted forwards, runtime-gated warm starts, donation, and parity with
+the legacy eager DigcCache shim."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DigcSpec, digc
+from repro.core.state import DigcState, DigcStateEntry, state_entry
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DigcState as a pytree
+
+
+def test_state_is_a_pytree_and_functional():
+    st = DigcState.init({
+        "a": state_entry(centroids_shape=(1, 4, 8)),
+        "b": state_entry(),
+    })
+    leaves = jax.tree_util.tree_leaves(st)
+    assert len(leaves) == 3  # a.step, a.centroids, b.step
+    st2 = st.set("b", st.entries["b"].bump())
+    assert st.steps() == {"a": 0, "b": 0}  # original untouched
+    assert st2.steps() == {"a": 0, "b": 1}
+    assert st.get("missing") is None and st.get(None) is None
+
+
+def test_state_entry_warm_flag():
+    e = state_entry(centroids_shape=(1, 2, 3))
+    assert not bool(e.warm)
+    assert bool(e.bump().warm)
+
+
+# ---------------------------------------------------------------------------
+# digc(..., state=) — the functional form
+
+
+def test_digc_state_passthrough_for_stateless_builders():
+    """A builder without state support (reference) must return the
+    state unchanged — same object structure, same steps."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 2, 20, 6)
+    st = DigcState.init({"k0": state_entry()})
+    idx, new_st = digc(x, k=3, impl="reference", state=st, state_key="k0")
+    assert new_st.steps() == {"k0": 0}
+    np.testing.assert_array_equal(
+        np.asarray(idx), np.asarray(digc(x, k=3, impl="reference"))
+    )
+
+
+def test_digc_state_missing_entry_passthrough():
+    """state without an entry for the key: stateless compute, state
+    passes through (entries are init-time only — structure is the
+    compiled program's contract)."""
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 2, 20, 6)
+    st = DigcState.init({})
+    idx, new_st = digc(x, k=3, impl="blocked", state=st, state_key="k0")
+    assert len(new_st) == 0
+    np.testing.assert_array_equal(
+        np.asarray(idx), np.asarray(digc(x, k=3, impl="blocked"))
+    )
+
+
+def test_digc_state_and_cache_mutually_exclusive():
+    from repro.core.engine import DigcCache
+
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 10, 4)
+    with pytest.raises(ValueError, match="not both"):
+        digc(x, k=2, impl="blocked", state=DigcState.init({}),
+             cache=DigcCache())
+
+
+def test_blocked_gallery_norms_jit_exact_and_counted():
+    """Frozen-gallery norms through a jitted digc: exact indices on
+    every call, sq_y filled on the cold call, step counts requests."""
+    rng = np.random.default_rng(3)
+    x, y = _rand(rng, 2, 40, 8), _rand(rng, 2, 64, 8)
+    i_ref = digc(x, y, k=5, impl="reference")
+    st = DigcState.init({"gal": state_entry(sq_y_shape=(2, 64))})
+    fn = jax.jit(
+        lambda a, by, s: digc(a, by, k=5, impl="blocked",
+                              state=s, state_key="gal")
+    )
+    i1, st = fn(x, y, st)
+    i2, st = fn(x, y, st)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i_ref))
+    assert st.steps() == {"gal": 2}
+    np.testing.assert_allclose(
+        np.asarray(st.entries["gal"].sq_y),
+        np.asarray(jnp.sum(y * y, -1)), rtol=1e-6,
+    )
+
+
+def test_blocked_gallery_norms_warm_branch_engages():
+    """Proof the warm branch actually reads the carried norms: a warm
+    entry seeded with deliberately wrong sq_y must change the result
+    (the cold path would recompute and hide the reuse)."""
+    rng = np.random.default_rng(4)
+    x, y = _rand(rng, 1, 24, 4), _rand(rng, 1, 32, 4)
+    wrong = jnp.linspace(100.0, 1000.0, 32)[None, :]
+    warm_entry = DigcStateEntry(
+        step=jnp.ones((), jnp.int32), sq_y=wrong
+    )
+    _, d_warm, _ = digc(
+        x, y, k=3, impl="blocked", return_dists=True,
+        state=DigcState.init({"g": warm_entry}), state_key="g",
+    )
+    _, d_true = digc(x, y, k=3, impl="blocked", return_dists=True)
+    assert not np.allclose(np.asarray(d_warm), np.asarray(d_true))
+
+
+def test_cluster_state_jit_warm_start_recall_and_drift():
+    """Cluster tier through jit: full probe + ample capacity stays
+    exact cold AND warm; centroids drift when the features drift."""
+    from repro.core.strategies import recall_vs_exact
+
+    rng = np.random.default_rng(5)
+    x1 = _rand(rng, 2, 128, 16)
+    x2 = x1 + 0.05 * _rand(rng, 2, 128, 16)
+    spec = DigcSpec(impl="cluster", k=4, n_clusters=8, n_probe=8,
+                    capacity_factor=8.0)
+    st = DigcState.init({"s0": state_entry(centroids_shape=(2, 8, 16))})
+    fn = jax.jit(lambda a, s: digc(a, spec=spec, state=s, state_key="s0"))
+    i_cold, st1 = fn(x1, st)
+    c1 = np.asarray(st1.entries["s0"].centroids)
+    assert st1.steps() == {"s0": 1}
+    assert not np.allclose(c1, 0.0)  # cold call wrote real centroids
+    i_warm, st2 = fn(x2, st1)
+    c2 = np.asarray(st2.entries["s0"].centroids)
+    assert st2.steps() == {"s0": 2}
+    assert not np.array_equal(c1, c2)  # warm start tracked the drift
+    assert recall_vs_exact(x1, x1, i_cold, 4) == 1.0
+    assert recall_vs_exact(x2, x2, i_warm, 4) == 1.0
+
+
+def test_cluster_state_shape_mismatch_is_cold_and_safe():
+    """A stale-shaped centroid buffer (workload changed) must not be
+    read or written — cold build, counter still advances."""
+    rng = np.random.default_rng(6)
+    x = _rand(rng, 2, 128, 16)
+    spec = DigcSpec(impl="cluster", k=4, n_clusters=8, n_probe=8,
+                    capacity_factor=8.0)
+    stale = state_entry(centroids_shape=(2, 5, 16))  # wrong C
+    st = DigcState.init({"s0": stale})
+    idx, st1 = digc(x, spec=spec, state=st, state_key="s0")
+    assert st1.steps() == {"s0": 1}
+    assert st1.entries["s0"].centroids.shape == (2, 5, 16)  # untouched
+    np.testing.assert_array_equal(
+        np.asarray(st1.entries["s0"].centroids), np.zeros((2, 5, 16))
+    )
+
+
+# ---------------------------------------------------------------------------
+# vig_forward round-trip
+
+
+def _tiny_vig(impl):
+    from repro.models import vig
+    from repro.models.module import init_params
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(2,), num_classes=3, k=3,
+        digc_impl=impl,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    return vig, cfg, params, imgs
+
+
+def test_vig_forward_state_roundtrip_jitted_cluster():
+    """DigcState through a jitted vig_forward: warm start engages on
+    call 2 (centroids move under feature drift), steps count blocks x
+    requests, logits stay finite."""
+    vig, cfg, params, imgs = _tiny_vig("cluster")
+    st = vig.init_vig_state(cfg, 2, "cluster")
+    assert st.entries["stage0"].centroids is not None
+    fwd = jax.jit(
+        lambda p, im, s: vig.vig_forward(p, im, cfg, digc_impl="cluster",
+                                         state=s)
+    )
+    l1, st1 = fwd(params, imgs, st)
+    c1 = np.asarray(st1.entries["stage0"].centroids)
+    imgs2 = imgs + 0.1 * jax.random.normal(jax.random.PRNGKey(2), imgs.shape)
+    l2, st2 = fwd(params, imgs2, st1)
+    c2 = np.asarray(st2.entries["stage0"].centroids)
+    assert st1.steps() == {"stage0": 2}  # 2 blocks
+    assert st2.steps() == {"stage0": 4}
+    assert not np.allclose(c1, 0.0) and not np.array_equal(c1, c2)
+    assert bool(jnp.all(jnp.isfinite(l1))) and bool(jnp.all(jnp.isfinite(l2)))
+
+
+def test_vig_forward_state_exact_tier_indices_unchanged():
+    """For the exact blocked tier the state must be observationally
+    inert: jitted state-threaded logits == stateless logits."""
+    vig, cfg, params, imgs = _tiny_vig("blocked")
+    st = vig.init_vig_state(cfg, 2, "blocked")
+    fwd = jax.jit(
+        lambda p, im, s: vig.vig_forward(p, im, cfg, digc_impl="blocked",
+                                         state=s)
+    )
+    l1, st1 = fwd(params, imgs, st)
+    l2, st2 = fwd(params, imgs, st1)
+    base = jax.jit(
+        lambda p, im: vig.vig_forward(p, im, cfg, digc_impl="blocked")
+    )(params, imgs)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+    # self-graph stages carry no norm buffers, only counters
+    assert st2.steps() == {"stage0": 4}
+
+
+def test_vig_forward_state_donation():
+    """The serving pattern: state donated into the jitted forward. The
+    donated input must be consumed (non-CPU backends) and the carried
+    state must keep working either way."""
+    vig, cfg, params, imgs = _tiny_vig("cluster")
+    st = vig.init_vig_state(cfg, 2, "cluster")
+    fwd = jax.jit(
+        lambda p, im, s: vig.vig_forward(p, im, cfg, digc_impl="cluster",
+                                         state=s),
+        donate_argnums=(2,),
+    )
+    import warnings
+
+    with warnings.catch_warnings():
+        # CPU ignores donation with a warning; that is fine here.
+        warnings.simplefilter("ignore")
+        l1, st1 = fwd(params, imgs, st)
+        l2, st2 = fwd(params, imgs, st1)
+    assert st2.steps() == {"stage0": 4}
+    assert bool(jnp.all(jnp.isfinite(l2)))
+    if jax.default_backend() != "cpu":
+        assert st.entries["stage0"].centroids.is_deleted()
+
+
+def test_vig_forward_state_matches_eager_cache_shim():
+    """Pytree path vs the legacy eager DigcCache shim: same Lloyd
+    schedule (cold 5 iters, warm 2), so the cluster-tier logits agree
+    request over request."""
+    from repro.core.engine import DigcCache
+
+    vig, cfg, params, imgs = _tiny_vig("cluster")
+    st = vig.init_vig_state(cfg, 2, "cluster")
+    cache = DigcCache()
+    for _ in range(2):
+        l_state, st = vig.vig_forward(params, imgs, cfg,
+                                      digc_impl="cluster", state=st)
+        l_cache = vig.vig_forward(params, imgs, cfg, digc_impl="cluster",
+                                  cache=cache)
+        np.testing.assert_allclose(
+            np.asarray(l_state), np.asarray(l_cache), rtol=1e-4, atol=1e-4
+        )
+    assert cache.stats()["hits"] >= 1
+
+
+def test_init_vig_state_pyramid_shapes():
+    """Pyramid models get one entry per stage; cluster stages size
+    their centroid buffers off the stage's pooled co-node count."""
+    from repro.core.strategies import default_cluster_params
+    from repro.models import vig
+
+    cfg = vig.VIG_VARIANTS["vig_ti_pyr"].replace(
+        image_size=32, embed_dims=(8, 12, 16, 24), depths=(1, 1, 1, 1),
+        num_classes=3, k=3,
+    )
+    st = vig.init_vig_state(cfg, 4, "cluster")
+    assert sorted(st.entries) == ["stage0", "stage1", "stage2", "stage3"]
+    grid = cfg.base_grid
+    for si in range(4):
+        r = cfg.reduce_ratios[si]
+        m = (grid // max(r, 1)) ** 2
+        nc, _ = default_cluster_params(m, None, None)
+        e = st.entries[f"stage{si}"]
+        assert e.centroids.shape == (4, nc, cfg.embed_dims[si])
+        if si < 3:
+            grid //= 2
+    # non-cluster impls: counters only
+    st_b = vig.init_vig_state(cfg, 4, "blocked")
+    assert all(e.centroids is None for e in st_b.entries.values())

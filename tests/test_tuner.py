@@ -8,7 +8,14 @@ import pytest
 
 from repro.core import DigcSpec, digc
 from repro.core.perfmodel import engine_cost_estimate, kernel_tile_defaults
-from repro.core.tuner import DigcTuner, TileConfig, autotune_spec, workload_key
+from repro.core.tuner import (
+    DigcTuner,
+    TileConfig,
+    VigSchedule,
+    autotune_spec,
+    host_key,
+    workload_key,
+)
 
 
 def _rand(rng, *shape):
@@ -16,10 +23,22 @@ def _rand(rng, *shape):
 
 
 def test_workload_key_distinguishes_workloads():
-    a = workload_key("cpu", 2, 196, 196, 192, 18)
-    b = workload_key("cpu", 2, 196, 196, 192, 9)
-    c = workload_key("cpu", 2, 196, 196, 192, 18, causal=True)
+    a = workload_key(2, 196, 196, 192, 18)
+    b = workload_key(2, 196, 196, 192, 9)
+    c = workload_key(2, 196, 196, 192, 18, causal=True)
     assert len({a, b, c}) == 3
+
+
+def test_host_key_carries_backend_platform_and_jax():
+    import platform as _platform
+
+    import jax
+
+    hk = host_key("cpu")
+    assert "cpu" in hk
+    assert _platform.machine() in hk
+    assert jax.__version__ in hk
+    assert host_key("tpu") != hk
 
 
 def test_candidates_exact_only_by_default():
@@ -72,15 +91,92 @@ def test_tune_measures_persists_and_caches(tmp_path):
     i_r = digc(x, k=4, impl="reference")
     i_t = digc(x, spec=tuned)
     np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_t))
-    # persisted ...
+    # persisted under this host's key (schema 2) ...
     data = json.loads(path.read_text())
-    assert data["schema"] == 1 and len(data["entries"]) == 1
+    assert data["schema"] == 2
+    assert list(data["hosts"]) == [host_key()]
+    assert len(data["hosts"][host_key()]) == 1
     # ... and served from cache by a fresh tuner (no re-measurement)
     tuner2 = DigcTuner(path)
     tuned2, res2 = tuner2.tune(x, spec=spec)
     assert res2.source == "cached"
     assert (tuned2.block_n, tuned2.block_m, tuned2.merge) == (
         tuned.block_n, tuned.block_m, tuned.merge)
+
+
+def test_tune_cache_not_shared_across_hosts(tmp_path):
+    """An entry tuned under one host key must be invisible to another
+    host (and to another jax version): schedules are measurements."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 2, 64, 8)
+    path = tmp_path / "tune.json"
+    spec = DigcSpec(impl="blocked", k=4)
+    tuner = DigcTuner(path, measure_iters=1, max_measure=1)
+    tuner.tune(x, spec=spec)
+    # Same file, different (faked) host: must re-measure, not reuse.
+    other = DigcTuner(path, measure_iters=1, max_measure=1)
+    other.host = "tpu|linux-v5e|jax-9.9.9"
+    other.entries = other._hosts.setdefault(other.host, {})
+    _, res = other.tune(x, spec=spec)
+    assert res.source == "measured"
+    other.save()
+    # Both hosts' entries coexist in the file.
+    data = json.loads(path.read_text())
+    assert len(data["hosts"]) == 2
+
+
+def test_schema1_tune_cache_dropped(tmp_path):
+    """Flat schema-1 entries carry no platform/jax identity: they are
+    dropped on load (re-measured), never silently reused."""
+    path = tmp_path / "tune.json"
+    path.write_text(json.dumps({
+        "schema": 1, "backend": "cpu",
+        "entries": {"cpu:b2:n64:m64:d8:kd4": {
+            "block_n": None, "block_m": 64, "merge": "select",
+            "fuse_norms": False, "us_per_call": 1.0, "exact_match": True,
+        }},
+    }))
+    tuner = DigcTuner(path)
+    assert tuner.entries == {}
+    assert tuner.lookup(workload_key(2, 64, 64, 8, 4)) is None
+
+
+def test_tune_schedule_per_stage(tmp_path):
+    """tune_schedule: one tuned spec per stage workload, pooled stages
+    tune the true (N, M) pair, results persist per stage."""
+    path = tmp_path / "tune.json"
+    tuner = DigcTuner(path, measure_iters=1, max_measure=1)
+    workloads = [
+        {"stage": 0, "N": 64, "M": 16, "D": 8, "k": 3, "dilation": 1},
+        {"stage": 1, "N": 16, "M": 16, "D": 8, "k": 3, "dilation": 1},
+    ]
+    sched, results = tuner.tune_schedule(
+        workloads, spec=DigcSpec(impl="blocked", k=3), batch=2)
+    assert len(sched.stages) == 2
+    assert all(r.source == "measured" for r in results)
+    assert all(s.merge in ("select", "topk") for s in sched.stages)
+    # stage addressing: beyond-last reuses the last entry
+    assert sched.spec_for(0) == sched.stages[0]
+    assert sched.spec_for(5) == sched.stages[1]
+    # both stage workloads cached under distinct keys
+    data = json.loads(path.read_text())
+    assert len(data["hosts"][host_key()]) == 2
+    # a fresh tuner serves the whole schedule from cache
+    sched2, results2 = DigcTuner(path).tune_schedule(
+        workloads, spec=DigcSpec(impl="blocked", k=3), batch=2)
+    assert all(r.source == "cached" for r in results2)
+    assert sched2.describe() == sched.describe()
+
+
+def test_vig_schedule_non_blocked_passthrough():
+    tuner = DigcTuner(None)
+    workloads = [{"stage": 0, "N": 16, "M": 16, "D": 4, "k": 2,
+                  "dilation": 1}]
+    sched, results = tuner.tune_schedule(
+        workloads, spec=DigcSpec(impl="reference", k=2))
+    assert isinstance(sched, VigSchedule)
+    assert results[0].source == "prior"
+    assert sched.spec_for(0).impl == "reference"
 
 
 def test_tune_non_blocked_impl_passthrough():

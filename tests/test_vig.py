@@ -70,7 +70,9 @@ def test_count_digc_work_vig_ti_224():
 def test_count_digc_work_pyramid_reduction():
     work = vig.count_digc_work(vig.VIG_VARIANTS["vig_ti_pyr"])
     # stage 0: grid 56 -> N=3136, co-nodes pooled by r=4 -> 196
-    assert work[0] == {"N": 3136, "M": 196, "D": 48, "k": 9, "dilation": 1}
+    assert work[0] == {"stage": 0, "N": 3136, "M": 196, "D": 48, "k": 9,
+                       "dilation": 1}
+    assert work[-1]["stage"] == 3
     # last stage: 7x7, no reduction
     assert work[-1]["N"] == 49 and work[-1]["M"] == 49
 
