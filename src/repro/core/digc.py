@@ -313,12 +313,24 @@ def _build_blocked(x, y, pos_bias, spec: DigcSpec, state_entry=None):
             # The entry asserts this gallery is frozen (state.py
             # invalidation rules): compute the norms on the cold call
             # only, then carry them — jit-compatible because the cold
-            # branch is a lax.cond on the runtime step counter.
-            sq_y = lax.cond(
-                state_entry.warm,
-                lambda: state_entry.sq_y,
-                lambda: jnp.sum(y.astype(jnp.float32) ** 2, axis=-1),
-            )
+            # branch is a lax.cond on the runtime step counter. With
+            # per-row counters (multi-tenant serving) the gate is per
+            # batch row: warm rows read their carried norms, rows just
+            # reset for a new tenant recompute theirs — norms are cheap
+            # enough that the mixed batch computes them unconditionally
+            # and selects.
+            if state_entry.row_step is not None:
+                sq_y = jnp.where(
+                    state_entry.row_warm[:, None],
+                    state_entry.sq_y,
+                    jnp.sum(y.astype(jnp.float32) ** 2, axis=-1),
+                )
+            else:
+                sq_y = lax.cond(
+                    state_entry.warm,
+                    lambda: state_entry.sq_y,
+                    lambda: jnp.sum(y.astype(jnp.float32) ** 2, axis=-1),
+                )
             new_entry = state_entry.bump(sq_y=sq_y)
     out = digc_blocked(
         x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,

@@ -24,6 +24,13 @@ stage name) to a ``DigcStateEntry``:
     warm start), or None for builders without them.
   * ``sq_y``      — (B, M) co-node squared norms (the blocked tier's
     frozen-gallery hook), or None.
+  * ``row_step``  — optional (B,) int32 **per-row** call counters for
+    multi-tenant serving (DESIGN.md §9): when present, builders gate
+    warm/cold *per batch row* instead of per entry, so a batch may mix
+    a warm tenant (row carried from its previous request) with a cold
+    one (row just reset on slot admission) without either leaking into
+    the other. Absent (None) on single-tenant state: the scalar
+    ``step`` gate applies to the whole batch, the PR-3 behavior.
 
 Invalidation rules (who may reuse what):
 
@@ -40,6 +47,12 @@ Invalidation rules (who may reuse what):
     ``sq_y`` must match the co-node *contents* exactly: an entry with
     ``sq_y`` asserts the gallery identified by its key is frozen — the
     caller must re-init the state when the gallery version changes.
+  * Row reuse is **per tenant** (multi-tenant serving): a state row may
+    only warm-start requests of the tenant that wrote it. The serving
+    engine enforces this with ``take_rows`` / ``put_rows`` /
+    ``reset_rows`` — a slot reassigned to a new tenant has its rows
+    reset (``row_step`` 0 ⇒ cold), and padding lanes of a bucketed
+    batch are never scattered back, so they cannot clobber live rows.
 
 Why donation matters: serving threads the same state pytree through
 every request (`state -> forward -> new state -> forward -> ...`).
@@ -66,15 +79,77 @@ class DigcStateEntry:
     step: jax.Array  # () int32; 0 = cold
     centroids: Optional[jax.Array] = None  # (B, C, D) | None
     sq_y: Optional[jax.Array] = None  # (B, M) | None
+    row_step: Optional[jax.Array] = None  # (B,) int32 | None; 0 = cold row
 
     @property
     def warm(self) -> jax.Array:
         """Traced bool: has this entry been written at least once?"""
         return self.step > 0
 
+    @property
+    def row_warm(self) -> Optional[jax.Array]:
+        """Traced (B,) bool: which rows have been written at least once.
+        None when the entry carries no per-row counters."""
+        if self.row_step is None:
+            return None
+        return self.row_step > 0
+
     def bump(self, **updates) -> "DigcStateEntry":
-        """Functional update: advance the call counter, replace fields."""
+        """Functional update: advance the call counter(s), replace
+        fields. ``row_step`` (when present) advances for every row —
+        the serving engine discards padding lanes on scatter, so only
+        live rows' counters persist."""
+        if self.row_step is not None and "row_step" not in updates:
+            updates["row_step"] = self.row_step + 1
         return dataclasses.replace(self, step=self.step + 1, **updates)
+
+    # -- per-slot row lifecycle (multi-tenant serving, DESIGN.md §9) ----
+
+    def _row_fields(self):
+        return ("centroids", "sq_y", "row_step")
+
+    def take_rows(self, rows) -> "DigcStateEntry":
+        """Gather batch rows: entry over rows ``rows`` (any index array/
+        sequence; repeats allowed — padding lanes replicate a live
+        row). The scalar ``step`` is copied, not aliased: the taken
+        entry is typically donated into a jit, and an aliased buffer
+        would invalidate the source entry's counter on real backends."""
+        rows = jnp.asarray(rows, jnp.int32)
+        updates = {
+            f: getattr(self, f)[rows]
+            for f in self._row_fields() if getattr(self, f) is not None
+        }
+        updates["step"] = self.step + 0
+        return dataclasses.replace(self, **updates)
+
+    def put_rows(self, src: "DigcStateEntry", rows) -> "DigcStateEntry":
+        """Scatter ``src``'s leading rows back: row ``i`` of ``src``
+        lands at ``rows[i]`` of self. ``src`` rows beyond ``len(rows)``
+        (padding lanes) are dropped — they can never clobber live rows.
+        The scalar ``step`` is taken from ``src`` (the served entry)."""
+        rows = jnp.asarray(rows, jnp.int32)
+        n = rows.shape[0]
+        updates = {"step": src.step}
+        for f in self._row_fields():
+            dst_v, src_v = getattr(self, f), getattr(src, f)
+            if dst_v is None or src_v is None:
+                continue
+            updates[f] = dst_v.at[rows].set(src_v[:n])
+        return dataclasses.replace(self, **updates)
+
+    def reset_rows(self, rows) -> "DigcStateEntry":
+        """Zero the given rows (cold: ``row_step`` 0 routes builders to
+        their cold path; the zeroed buffers are never read as values).
+        Called when a slot is reassigned to a new tenant, so warm state
+        never leaks across tenants."""
+        rows = jnp.asarray(rows, jnp.int32)
+        updates = {}
+        for f in self._row_fields():
+            v = getattr(self, f)
+            if v is None:
+                continue
+            updates[f] = v.at[rows].set(jnp.zeros((), v.dtype))
+        return dataclasses.replace(self, **updates)
 
 
 def state_entry(
@@ -82,12 +157,17 @@ def state_entry(
     centroids_shape: Optional[tuple[int, ...]] = None,
     sq_y_shape: Optional[tuple[int, ...]] = None,
     dtype=jnp.float32,
+    rows: Optional[int] = None,
 ) -> DigcStateEntry:
     """A cold entry with zero-initialized buffers of the given shapes.
 
     The zeros are never *read* as values — ``step == 0`` routes every
     builder to its cold path — they only fix the pytree leaves so the
     first and the thousandth call share one compiled program.
+
+    ``rows`` allocates (rows,) per-row counters (``row_step``) for
+    multi-tenant serving: warm/cold becomes a per-batch-row value and
+    the ``take_rows``/``put_rows``/``reset_rows`` lifecycle applies.
     """
     return DigcStateEntry(
         step=jnp.zeros((), jnp.int32),
@@ -96,6 +176,7 @@ def state_entry(
             else jnp.zeros(centroids_shape, dtype)
         ),
         sq_y=None if sq_y_shape is None else jnp.zeros(sq_y_shape, jnp.float32),
+        row_step=None if rows is None else jnp.zeros((rows,), jnp.int32),
     )
 
 
@@ -122,6 +203,38 @@ class DigcState:
     def steps(self) -> dict[str, int]:
         """Host-side view of the per-key call counters (concrete only)."""
         return {k: int(e.step) for k, e in self.entries.items()}
+
+    def row_steps(self) -> dict[str, list[int]]:
+        """Host-side view of per-row counters (keys carrying them)."""
+        return {
+            k: [int(v) for v in e.row_step]
+            for k, e in self.entries.items() if e.row_step is not None
+        }
+
+    # -- per-slot row lifecycle (multi-tenant serving, DESIGN.md §9) ----
+
+    def take_rows(self, rows) -> "DigcState":
+        """Gather batch rows from every entry (slot rows -> bucket
+        lanes; repeats allowed for padding lanes)."""
+        return DigcState(entries={
+            k: e.take_rows(rows) for k, e in self.entries.items()
+        })
+
+    def put_rows(self, src: "DigcState", rows) -> "DigcState":
+        """Scatter ``src``'s leading rows into every entry at ``rows``
+        (bucket lanes -> slot rows; src rows beyond ``len(rows)`` —
+        padding lanes — are dropped)."""
+        return DigcState(entries={
+            k: e.put_rows(src.entries[k], rows)
+            for k, e in self.entries.items()
+        })
+
+    def reset_rows(self, rows) -> "DigcState":
+        """Cold-reset the given rows in every entry (slot reassigned to
+        a new tenant)."""
+        return DigcState(entries={
+            k: e.reset_rows(rows) for k, e in self.entries.items()
+        })
 
     def __len__(self) -> int:
         return len(self.entries)

@@ -240,9 +240,13 @@ def cluster_digc(
     staged — ``lax.cond`` runs the warm index build (``warm_iters``
     Lloyd iterations from ``init_centroids``) when true and the cold
     build (``kmeans_iters`` from random init) when false — so the same
-    compiled program serves the first and every later request. With
-    ``init_valid=None`` (the legacy eager path), warm/cold is a
-    trace-time choice: ``init_centroids`` present means warm.
+    compiled program serves the first and every later request. A (B,)
+    bool vector makes validity **per batch row** (multi-tenant
+    serving, DESIGN.md §9): each row gets the build its own validity
+    selects — all-warm batches pay one build, mixed batches stage both
+    and select per row. With ``init_valid=None`` (the legacy eager
+    path), warm/cold is a trace-time choice: ``init_centroids``
+    present means warm.
 
     ``return_state=True`` additionally returns {"centroids": (B, C, D)}
     for warm-starting the next call.
@@ -265,14 +269,14 @@ def cluster_digc(
     if init3 is not None and init3.shape[1] != n_clusters:
         init3 = None  # stale cache shape (workload changed): cold start
 
-    def build_index(iters: int, init_b3):
+    def build_index(iters: int, init_b3, shared: bool = shared_y):
         def index_one(yb, init_b=None):
             return _cluster_index(
                 yb, n_clusters=n_clusters, cap=cap, seed=seed,
                 iters=iters, init_centroids=init_b,
             )
 
-        if shared_y:
+        if shared:
             cents1, members1 = index_one(
                 y3[0], None if init_b3 is None else init_b3[0]
             )
@@ -288,11 +292,33 @@ def cluster_digc(
         cents, members = build_index(kmeans_iters, None)
     elif init_valid is None:
         cents, members = build_index(kmeans_iters, init3)
-    else:
+    elif jnp.ndim(init_valid) == 0:
         cents, members = lax.cond(
             init_valid,
             lambda: build_index(warm_iters, init3),
             lambda: build_index(kmeans_iters, None),
+        )
+    else:
+        # (B,) per-row validity (multi-tenant serving): a batch mixing
+        # warm tenants with cold ones must give each *row* exactly the
+        # build a B=1 call with that row's validity would — warm rows a
+        # warm_iters Lloyd refinement of their carried centroids, cold
+        # rows the full cold build. Steady state (every row warm) pays
+        # one build; a mixed batch stages both and selects per row.
+        # Shared-co-node indexing is per-row here by construction: rows
+        # carry independent init centroids.
+        valid = init_valid
+
+        def mixed_index():
+            cw, mw = build_index(warm_iters, init3, shared=False)
+            cc, mc = build_index(kmeans_iters, None, shared=False)
+            sel = valid[:, None, None]
+            return jnp.where(sel, cw, cc), jnp.where(sel, mw, mc)
+
+        cents, members = lax.cond(
+            jnp.all(valid),
+            lambda: build_index(warm_iters, init3, shared=False),
+            mixed_index,
         )
 
     idx, dist = jax.vmap(
@@ -432,8 +458,10 @@ def _build_cluster(x, y, pos_bias, spec: DigcSpec, cache=None, cache_key=None,
 def _build_cluster_stateful(x, y, spec: DigcSpec, entry):
     """Functional form: (x, y, spec, DigcStateEntry) ->
     (idx, dist, new entry). Jit-native — warm/cold is a runtime
-    ``lax.cond`` on the entry's step counter, and the new centroids are
-    returned in the entry (donation-stable shapes/dtypes)."""
+    ``lax.cond`` on the entry's step counter (per batch row when the
+    entry carries ``row_step``: multi-tenant batches mix warm and cold
+    tenants), and the new centroids are returned in the entry
+    (donation-stable shapes/dtypes)."""
     m = y.shape[1] if y is not None else x.shape[1]
     n_clusters, _ = default_cluster_params(m, spec.n_clusters, spec.n_probe)
     expected = (x.shape[0], n_clusters, x.shape[-1])
@@ -454,8 +482,9 @@ def _build_cluster_stateful(x, y, spec: DigcSpec, entry):
         # program's contract).
         idx, dist, st = cluster_digc(x, y, **common)
         return idx, dist, entry.bump()
+    valid = entry.row_warm if entry.row_step is not None else entry.warm
     idx, dist, st = cluster_digc(
-        x, y, init_centroids=init, init_valid=entry.warm, **common
+        x, y, init_centroids=init, init_valid=valid, **common
     )
     return idx, dist, entry.bump(
         centroids=st["centroids"].astype(init.dtype)

@@ -331,6 +331,34 @@ class DigcTuner:
             results.append(result)
         return VigSchedule(stages=tuple(stages)), results
 
+    def tune_bucket_schedules(
+        self,
+        workloads: Sequence[dict],
+        *,
+        spec: DigcSpec,
+        buckets: Sequence[int],
+        rng_seed: int = 0,
+        force: bool = False,
+    ) -> tuple[dict[int, "VigSchedule"], dict[int, list[TuneResult]]]:
+        """One ``VigSchedule`` per serving bucket (bucketed multi-tenant
+        serving, DESIGN.md §9).
+
+        The workload key includes the batch size, and a bucketed engine
+        serves each request batch padded to a bucket — so the schedule
+        must be resolved **per bucket**, not per request batch: a
+        B=8-tuned tile is not a B=1-tuned tile. Returns ``{bucket:
+        schedule}`` plus the per-bucket results; previously-measured
+        (host-keyed) entries are served from the JSON cache.
+        """
+        schedules: dict[int, VigSchedule] = {}
+        results: dict[int, list[TuneResult]] = {}
+        for b in sorted(set(int(v) for v in buckets)):
+            schedules[b], results[b] = self.tune_schedule(
+                workloads, spec=spec, batch=b, rng_seed=rng_seed,
+                force=force,
+            )
+        return schedules, results
+
 
 @dataclasses.dataclass(frozen=True)
 class VigSchedule:

@@ -293,7 +293,7 @@ def vig_forward(params, images, cfg: VigConfig, *,
 
 def init_vig_state(cfg: VigConfig, batch: int,
                    digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
-                   ) -> DigcState:
+                   *, per_slot: bool = False) -> DigcState:
     """Allocate the functional DIGC state for a model + batch size.
 
     One entry per stage (the key ``grapher_block`` passes): a cold
@@ -302,9 +302,17 @@ def init_vig_state(cfg: VigConfig, batch: int,
     the stage's co-node count — the same derivation the builder uses,
     so shapes line up). The pytree structure this fixes is the compiled
     program's contract: changing batch size or impl means re-init.
+
+    ``per_slot=True`` additionally allocates (batch,) per-row step
+    counters on every entry — the multi-tenant serving layout
+    (DESIGN.md §9): each batch row is a serving slot whose warm/cold
+    validity is tracked independently, so the slot lifecycle
+    (``DigcState.take_rows`` / ``put_rows`` / ``reset_rows``) can admit
+    and evict tenants without cross-contaminating warm starts.
     """
     from repro.core.strategies import default_cluster_params
 
+    rows = batch if per_slot else None
     entries = {}
     grid = cfg.base_grid
     for si in range(len(cfg.depths)):
@@ -316,10 +324,11 @@ def init_vig_state(cfg: VigConfig, batch: int,
                 m, spec.n_clusters, spec.n_probe
             )
             entries[f"stage{si}"] = state_entry(
-                centroids_shape=(batch, n_clusters, cfg.embed_dims[si])
+                centroids_shape=(batch, n_clusters, cfg.embed_dims[si]),
+                rows=rows,
             )
         else:
-            entries[f"stage{si}"] = state_entry()
+            entries[f"stage{si}"] = state_entry(rows=rows)
         if si + 1 < len(cfg.depths):
             grid //= 2
     return DigcState.init(entries)

@@ -1,5 +1,6 @@
 # Serving substrate: KV caches, slot-based continuous batching for the
-# LM path, and the ViG image engine serving every tier through a single
-# donated jax.jit with cross-request functional DigcState (per-stage
-# VigSchedule autotuning; the eager DigcCache path survives as the
-# mode="eager" compatibility shim).
+# LM path (per-slot cache commit masks), and the multi-tenant bucketed
+# ViG image engine (DESIGN.md §9): fixed slots, request batches padded
+# to a static bucket set, one donated jax.jit + per-slot functional
+# DigcState rows per bucket (per-bucket VigSchedule autotuning; the
+# eager DigcCache path survives as the mode="eager" compatibility shim).

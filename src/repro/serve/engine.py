@@ -5,18 +5,25 @@
   finished slots are refilled from the queue without stalling in-flight
   decodes. Per-slot lengths are tracked host-side; the decode step
   itself is a single jit'd call over the full slot batch (static
-  shapes — production TPU serving style).
-* ``VigServeEngine`` — batched ViG image inference with cross-request
-  DIGC state: a ``DigcCache`` persists cluster centroids (k-means warm
-  starts) and co-node norms across requests, and the streaming-engine
-  tile schedule is autotuned once per workload (``core/tuner.py``) and
-  served from the tuner's JSON cache afterwards.
+  shapes — production TPU serving style). Every cache write carries an
+  explicit per-slot commit mask, so prefilling one slot or decoding a
+  position group can never clobber another slot's cache rows.
+* ``VigServeEngine`` — multi-tenant ViG image serving with
+  cross-request DIGC state (DESIGN.md §9): a host-side request queue
+  feeds fixed slots, each engine tick pads the active slots to a small
+  static **bucket** (default {1, 2, 4, 8}) and serves it through one
+  donated jit program per bucket — at most |bucket set| compiled
+  programs no matter how ragged the arrival stream. Per-slot
+  ``DigcState`` rows (cluster centroids, gallery norms, per-row step
+  counters) are gathered into the bucket batch and scattered back for
+  live lanes only, so a tenant's warm start follows it across buckets
+  and padding lanes never touch live state.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Union
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +42,36 @@ class Request:
     done: bool = False
 
 
+def _merge_cache_rows(new, old, keep, cfg: ModelConfig):
+    """Commit ``new`` cache rows only where ``keep`` (B,) is True.
+
+    ``decode_step`` writes its k/v (or recurrent state) at the scalar
+    position for **every** batch row — a per-slot engine decoding one
+    position group (or prefilling one slot) must therefore mask the
+    commit, or slots at other positions get garbage written into their
+    caches. Leaves carry the batch axis at 1 when layer-stacked (the
+    scan layout, (L, B, ...)) and at 0 for the unstacked hybrid
+    remainder entries ((B, ...)).
+    """
+
+    def merge(axis):
+        def f(n, o):
+            shape = [1] * n.ndim
+            shape[axis] = keep.shape[0]
+            return jnp.where(keep.reshape(shape), n, o)
+
+        return f
+
+    if cfg.family == "hybrid":
+        return {
+            "groups": jax.tree_util.tree_map(
+                merge(1), new["groups"], old["groups"]
+            ),
+            "rem": jax.tree_util.tree_map(merge(0), new["rem"], old["rem"]),
+        }
+    return jax.tree_util.tree_map(merge(1), new, old)
+
+
 class ServeEngine:
     """Greedy-decoding engine over the functional model API."""
 
@@ -48,26 +85,56 @@ class ServeEngine:
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
+        self.decode_calls = 0  # observability: jitted steps issued
 
-        self._decode = jax.jit(
-            lambda p, c, t, pos: tr.decode_step(p, c, t, pos, cfg)
-        )
+        def _decode(p, c, t, pos, keep):
+            logits, new_c = tr.decode_step(p, c, t, pos, cfg)
+            return logits, _merge_cache_rows(new_c, c, keep, cfg)
+
+        # The cache is donated: the commit-mask merge rewrites every
+        # leaf, and the caller always replaces self.cache with the
+        # result, so XLA may update the old buffers in place instead of
+        # doubling the KV cache's memory traffic each step.
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
 
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError(
+                f"request {req.uid}: empty prompt (prefill needs at "
+                "least one token to produce a next-token distribution)"
+            )
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 1 "
+                "(prefill always emits the first token)"
+            )
         self.queue.append(req)
+
+    def _step_decode(self, tokens, pos: int, members: list[int]):
+        """One jitted decode committing only ``members``' cache rows."""
+        keep = np.zeros(self.slots, bool)
+        keep[members] = True
+        self.decode_calls += 1
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos),
+            jnp.asarray(keep),
+        )
+        return logits
 
     def _prefill_one(self, slot: int, req: Request):
         """Feed the prompt through decode steps (token-by-token prefill;
-        simple and cache-layout-identical to decode)."""
+        simple and cache-layout-identical to decode). Only this slot's
+        cache rows are committed — other slots may be mid-decode at
+        overlapping positions."""
         for t, tok in enumerate(req.prompt):
             tokens = np.zeros((self.slots, 1), np.int32)
             tokens[slot, 0] = tok
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(tokens), jnp.int32(t)
-            )
+            logits = self._step_decode(tokens, t, [slot])
         self.slot_pos[slot] = len(req.prompt)
         nxt = int(jnp.argmax(logits[slot, -1]))
         req.out_tokens.append(nxt)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True  # budget met by the prefill token itself
 
     def step(self) -> int:
         """One engine tick: refill slots, one decode step for the whole
@@ -86,17 +153,15 @@ class ServeEngine:
         tokens = np.zeros((self.slots, 1), np.int32)
         for s in active:
             tokens[s, 0] = self.slot_req[s].out_tokens[-1]
-        # NOTE: slots share a scalar position in this engine tick; we use
-        # the max position and rely on per-slot masks being equivalent
-        # for slots at the same phase. For mixed-length batches the
-        # decode step is issued per distinct position group.
+        # decode_step takes one scalar position, so mixed-length slots
+        # decode in per-position groups; the commit mask restricts each
+        # group's cache write to its own members, so the groups cannot
+        # corrupt each other (regression-pinned in the serve tests).
         groups: dict[int, list[int]] = {}
         for s in active:
             groups.setdefault(int(self.slot_pos[s]), []).append(s)
         for pos, members in sorted(groups.items()):
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
-            )
+            logits = self._step_decode(tokens, pos, members)
             for s in members:
                 req = self.slot_req[s]
                 nxt = int(jnp.argmax(logits[s, -1]))
@@ -123,36 +188,86 @@ class ServeEngine:
 # ViG image serving
 
 
-class VigServeEngine:
-    """Batched ViG inference with cross-request DIGC state, served
-    through a single donated ``jax.jit`` for **every** tier.
+@dataclasses.dataclass
+class VigRequest:
+    """One image inference request.
 
-    Each ``infer`` call runs one batched forward. Two pieces of
-    graph-construction state persist across requests:
+    ``tenant`` names the state stream the request belongs to:
+    consecutive requests of one tenant share a serving slot, so the
+    cluster tier warm-starts request N+1's k-means from request N's
+    centroids — but only within the tenant. ``tenant=None`` marks a
+    one-shot anonymous request (always a cold slot).
+    """
+
+    uid: int
+    image: np.ndarray  # (H, W, C) float
+    tenant: Optional[Any] = None
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+
+
+DEFAULT_BUCKETS = (1, 2, 4, 8)
+
+
+class VigServeEngine:
+    """Multi-tenant bucketed ViG inference with cross-request DIGC
+    state, served through a single donated ``jax.jit`` per bucket.
+
+    **The request path** (``submit``/``step``/``run``) is the
+    multi-tenant engine (DESIGN.md §9): requests occupy fixed slots
+    (``slots = max(buckets)``), each tick gathers the active slots,
+    pads them to the smallest bucket that fits, and runs that bucket's
+    compiled program. State is per **slot**, not per bucket: the
+    canonical ``DigcState`` keeps one row per slot (with per-row step
+    counters, ``init_vig_state(per_slot=True)``); each tick slices the
+    active rows into the bucket batch and scatters the live lanes back,
+    so
+
+    * a tenant's warm start follows it even when the serving bucket
+      changes tick to tick,
+    * padding lanes (which replicate a live lane so their compute is
+      well-conditioned) are never scattered back — they cannot clobber
+      live state,
+    * a slot reassigned to a new tenant is row-reset first — warm state
+      never leaks between tenants.
+
+    ``buckets=None`` disables padding: every tick compiles/serves at
+    the exact active-batch size (the PR-3 one-program-per-batch-size
+    behavior, kept as the benchmark baseline).
+
+    **The direct path** (``infer``) runs one batched forward per call
+    with one compiled program + state per exact batch size — the PR-3
+    API, still the right call for offline fixed-batch workloads.
+
+    Two pieces of graph-construction state persist across requests:
 
     * a functional ``DigcState`` (``core/state.py``) — threaded
       in-and-out of the jitted forward, so stateful builders work
       *inside* the compiled program: the cluster tier warm-starts its
       per-stage k-means from the previous request's centroids (2 Lloyd
-      iterations instead of 5, gated by a runtime step counter). The
-      state argument is donated: XLA writes the new centroids into the
-      old buffers, so steady-state serving allocates nothing for DIGC
-      state. One compiled program + state pytree is kept per batch
-      size.
+      iterations instead of 5, gated by a runtime step counter — per
+      slot row on the request path). The state argument is donated:
+      XLA writes the new centroids into the old buffers, so
+      steady-state serving allocates nothing for DIGC state.
     * a ``VigSchedule`` — ``warmup()`` tunes the blocked tier's engine
       knobs (block_n, block_m, merge, fuse_norms) **per pyramid
-      stage** via ``core.tuner.DigcTuner.tune_schedule``; later engine
-      instances with the same tuner path skip the measurement
+      stage** via ``core.tuner.DigcTuner.tune_schedule``; the request
+      path resolves the schedule **per bucket** (the workload key
+      includes the batch size — a B=8 tile is not a B=1 tile). Later
+      engine instances with the same tuner path skip the measurement
       (host-keyed JSON cache).
 
     ``mode="eager"`` is the legacy compatibility shim: cache-aware
     tiers run eager with the host-side ``DigcCache`` (the PR-2
     behavior), everything else jits statelessly. It exists for parity
-    testing and as an escape hatch; the jit path is the serving path.
+    testing and as an escape hatch; the jit path is the serving path
+    and the only one the multi-tenant request API supports.
     """
 
     def __init__(self, cfg, params, *, digc_impl=None, batch: int = 8,
-                 autotune: bool = True, tuner_path=None, mode: str = "jit"):
+                 autotune: bool = True, tuner_path=None, mode: str = "jit",
+                 buckets: Optional[tuple] = DEFAULT_BUCKETS,
+                 on_compile: Optional[Callable[[int], None]] = None):
         from repro.core.engine import DigcCache
         from repro.models.vig import resolve_digc_spec
 
@@ -160,6 +275,10 @@ class VigServeEngine:
 
         if mode not in ("jit", "eager"):
             raise ValueError(f"mode must be 'jit' or 'eager', got {mode!r}")
+        if buckets is not None:
+            buckets = tuple(sorted(set(int(b) for b in buckets)))
+            if not buckets or buckets[0] < 1:
+                raise ValueError(f"buckets must be positive ints: {buckets!r}")
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -169,34 +288,66 @@ class VigServeEngine:
         self.autotune = autotune
         self.tuner_path = tuner_path
         # A pre-tuned VigSchedule may be passed directly as digc_impl
-        # (e.g. tuned offline); warmup() then has nothing to do.
-        self.schedule = digc_impl if isinstance(digc_impl, VigSchedule) else None
+        # (e.g. tuned offline); warmup() then has nothing to do. Only a
+        # *user-provided* schedule applies to every bucket — a
+        # warmup()-tuned one is a measurement at self.batch and must
+        # not leak into other buckets' programs (_bucket_choice).
+        self._user_schedule = isinstance(digc_impl, VigSchedule)
+        self.schedule = digc_impl if self._user_schedule else None
         self.tuned = None  # per-stage TuneResults once warmed up
         self.requests_served = 0
         self._jit_fwd = None  # eager shim's stateless fallback
-        # jit mode: batch size -> [compiled forward, DigcState]
+        # jit mode, direct path: batch size -> [compiled forward, DigcState]
         self._compiled: dict[int, list] = {}
+
+        # -- multi-tenant request path (jit mode) -----------------------
+        self.buckets = buckets
+        self.slots = max(buckets) if buckets is not None else batch
+        self.on_compile = on_compile  # compile-counter hook (tests/ops)
+        self.compile_count = 0  # programs built on the request path
+        self.queue: list[VigRequest] = []
+        self.slot_tenant: list[Optional[Any]] = [None] * self.slots
+        self._tenant_slot: dict[Any, int] = {}
+        self._slot_last_tick = [0] * self.slots
+        self._tick = 0
+        self._slot_state = None  # canonical per-slot DigcState (lazy)
+        self._programs: dict[int, Callable] = {}  # bucket -> compiled fwd
+        self._bucket_schedules: dict[int, Any] = {}
+        self._bucket_tuned: dict[int, list] = {}
+        self.bucket_ticks: dict[int, int] = {}
+        # last-tick observability (asserted by the property tests)
+        self.last_lanes: list[int] = []
+        self.last_resets: list[int] = []
+        self.last_bucket: Optional[int] = None
+
+    # -- tuning ---------------------------------------------------------
+
+    def _stage_rows(self) -> list[dict]:
+        """One workload row per stage: pooled stages tune the real
+        (N, M) pair, later pyramid stages get their own entries."""
+        from repro.models.vig import count_digc_work
+
+        rows: dict[int, dict] = {}
+        for row in count_digc_work(self.cfg):
+            rows.setdefault(row["stage"], row)
+        return [rows[si] for si in sorted(rows)]
 
     def warmup(self, rng_seed: int = 0):
         """Autotune a per-stage engine schedule (blocked tier only).
 
-        A no-op when a pre-tuned ``VigSchedule`` was passed at
-        construction — warmup never clobbers a user-provided schedule.
+        Tunes the direct-path batch size; the request path additionally
+        tunes per bucket, lazily, on each bucket's first tick. A no-op
+        when a pre-tuned ``VigSchedule`` was passed at construction —
+        warmup never clobbers a user-provided schedule.
         """
         if (not self.autotune or self.spec.impl != "blocked"
                 or self.schedule is not None):
             return None
         from repro.core.tuner import DigcTuner
-        from repro.models.vig import count_digc_work
 
-        # One workload per stage: pooled stages tune the real (N, M)
-        # pair, later pyramid stages get their own cached entries.
-        stage_rows: dict[int, dict] = {}
-        for row in count_digc_work(self.cfg):
-            stage_rows.setdefault(row["stage"], row)
         tuner = DigcTuner(self.tuner_path)
         self.schedule, self.tuned = tuner.tune_schedule(
-            [stage_rows[si] for si in sorted(stage_rows)],
+            self._stage_rows(),
             spec=self.spec, batch=self.batch, rng_seed=rng_seed,
         )
         # Forwards compiled before the schedule existed bake the old
@@ -207,6 +358,37 @@ class VigServeEngine:
 
     def _impl_choice(self):
         return self.schedule if self.schedule is not None else self.spec
+
+    def _bucket_choice(self, bucket: int):
+        """Resolve the DIGC impl/schedule for one bucket's program.
+
+        The tuner's workload key includes the batch size, so bucketed
+        serving tunes **per bucket** (``tune_bucket_schedules``), never
+        reusing a schedule measured at a different batch — including
+        the one ``warmup()`` measured at ``self.batch`` for the direct
+        path (a warmup-tuned B=8 tile must not bake into the B=1
+        program; only a user-provided schedule applies everywhere).
+        """
+        if self._user_schedule:
+            return self.schedule
+        if self.spec.impl != "blocked" or not self.autotune:
+            return self.spec
+        if bucket not in self._bucket_schedules:
+            from repro.core.tuner import DigcTuner
+
+            # First miss tunes every configured bucket at once: a
+            # serving replica will compile them all anyway, and the
+            # tuner's JSON cache makes later engines free.
+            targets = self.buckets if self.buckets is not None else (bucket,)
+            tuner = DigcTuner(self.tuner_path)
+            schedules, tuned = tuner.tune_bucket_schedules(
+                self._stage_rows(), spec=self.spec, buckets=targets,
+            )
+            self._bucket_schedules.update(schedules)
+            self._bucket_tuned.update(tuned)
+        return self._bucket_schedules[bucket]
+
+    # -- direct fixed-batch path (PR-3 API) -----------------------------
 
     def _infer_jit(self, images) -> jax.Array:
         from repro.models.vig import init_vig_state, vig_forward
@@ -247,7 +429,12 @@ class VigServeEngine:
         return self._jit_fwd[1](self.params, images)
 
     def infer(self, images) -> jax.Array:
-        """images (B, H, W, C) -> logits (B, num_classes)."""
+        """images (B, H, W, C) -> logits (B, num_classes).
+
+        Direct fixed-batch path: one compiled program + state per exact
+        batch size. Ragged multi-tenant traffic belongs on the request
+        path (``submit``/``run``) instead.
+        """
         if (self.autotune and self.tuned is None and self.schedule is None
                 and self.spec.impl == "blocked"):
             self.warmup()
@@ -258,16 +445,221 @@ class VigServeEngine:
         self.requests_served += int(images.shape[0])
         return logits
 
+    # -- multi-tenant request path --------------------------------------
+
+    def submit(self, req: VigRequest) -> None:
+        """Enqueue a request for the next engine tick."""
+        self.queue.append(req)
+
+    def release(self, tenant: Any) -> None:
+        """Tenant disconnect: free its slot and cold-reset the rows, so
+        the next occupant cannot warm-start from its state."""
+        slot = self._tenant_slot.pop(tenant, None)
+        if slot is None:
+            return
+        self.slot_tenant[slot] = None
+        if self._slot_state is not None:
+            self._slot_state = self._slot_state.reset_rows([slot])
+
+    def bucket_for(self, active: int) -> int:
+        """Smallest bucket that fits ``active`` slots (the bucket
+        policy); the exact count when bucketing is disabled."""
+        if not 1 <= active <= self.slots:
+            raise ValueError(f"active={active} outside 1..{self.slots}")
+        if self.buckets is None:
+            return active
+        return next(b for b in self.buckets if b >= active)
+
+    def _ensure_slot_state(self):
+        from repro.models.vig import init_vig_state
+
+        if self._slot_state is None:
+            # Allocate from the same impl choice the bucket programs
+            # resolve: a user-provided VigSchedule may carry per-stage
+            # specs (e.g. cluster with stage-specific n_clusters) whose
+            # entry shapes differ from a stage-0-only resolution. The
+            # autotuned (blocked-only) schedules never change entry
+            # shapes, so the canonical state stays bucket-independent.
+            choice = self.schedule if self._user_schedule else self.spec
+            self._slot_state = init_vig_state(
+                self.cfg, self.slots, choice, per_slot=True
+            )
+        return self._slot_state
+
+    def _build_program(self, bucket: int) -> Callable:
+        """Compile one bucket's donated forward. Split out so tests can
+        stub program construction and count compiles."""
+        from repro.models.vig import vig_forward
+
+        choice = self._bucket_choice(bucket)
+        return jax.jit(
+            lambda p, im, st: vig_forward(
+                p, im, self.cfg, digc_impl=choice, state=st
+            ),
+            donate_argnums=(2,),
+        )
+
+    def _program_for(self, bucket: int) -> Callable:
+        if bucket not in self._programs:
+            self._programs[bucket] = self._build_program(bucket)
+            self.compile_count += 1
+            if self.on_compile is not None:
+                self.on_compile(bucket)
+        return self._programs[bucket]
+
+    def _admit(self, tenant_key, used: set) -> Optional[int]:
+        """Bind a new tenant to a slot: a free one, else LRU-evict an
+        idle one (never a slot already serving this tick). The bound
+        slot's state rows are cold-reset. Returns None when every slot
+        is busy this tick."""
+        free = [s for s in range(self.slots) if self.slot_tenant[s] is None
+                and s not in used]
+        if free:
+            slot = free[0]
+        else:
+            idle = [s for s in range(self.slots) if s not in used]
+            if not idle:
+                return None
+            slot = min(idle, key=lambda s: self._slot_last_tick[s])
+            evicted = self.slot_tenant[slot]
+            if evicted is not None:
+                del self._tenant_slot[evicted]
+        self.slot_tenant[slot] = tenant_key
+        self._tenant_slot[tenant_key] = slot
+        if self._slot_state is not None:
+            self._slot_state = self._slot_state.reset_rows([slot])
+        self.last_resets.append(slot)
+        return slot
+
+    def step(self) -> int:
+        """One engine tick: admit queued requests into slots, serve the
+        active slots padded to a bucket, scatter state back. Returns
+        the number of requests served."""
+        if not self.queue:
+            return 0
+        if self.mode != "jit":
+            raise RuntimeError(
+                "the multi-tenant request path serves through the jitted "
+                "functional-state forward; construct with mode='jit'"
+            )
+        self._tick += 1
+        self.last_resets = []
+        used: set[int] = set()
+        assigned: dict[int, int] = {}  # id(request) -> slot
+
+        def _tkey(req):
+            return req.tenant if req.tenant is not None else ("req", req.uid)
+
+        # Admission pass 1 — tenants that already own a slot reserve it
+        # first, so a new tenant admitted later in the same tick can
+        # only LRU-evict *idle* slots, never a warm tenant that is
+        # itself active this tick (queue order must not decide whose
+        # warm state survives). One lane per tenant per tick: state is
+        # a serial carry, a tenant's second request waits for the next
+        # tick so it warm-starts from the first's output.
+        for req in self.queue:
+            if len(assigned) >= self.slots:
+                break
+            slot = self._tenant_slot.get(_tkey(req))
+            if slot is not None and slot not in used:
+                used.add(slot)
+                assigned[id(req)] = slot
+        # Admission pass 2 — new tenants, in arrival order, into free
+        # slots first, else LRU-evicting an idle slot.
+        for req in self.queue:
+            if len(assigned) >= self.slots:
+                break
+            if id(req) in assigned:
+                continue
+            tkey = _tkey(req)
+            if self._tenant_slot.get(tkey) is not None:
+                continue  # bound tenant already serving this tick
+            slot = self._admit(tkey, used)
+            if slot is None:
+                continue
+            used.add(slot)
+            assigned[id(req)] = slot
+        picked = [(assigned[id(r)], r) for r in self.queue
+                  if id(r) in assigned]
+        self.queue = [r for r in self.queue if id(r) not in assigned]
+        picked.sort(key=lambda sr: sr[0])
+
+        lanes = [slot for slot, _ in picked]
+        a = len(lanes)
+        bucket = self.bucket_for(a)
+        self.last_lanes = list(lanes)
+        self.last_bucket = bucket
+        # Padding lanes replicate lane 0 (image AND state row): their
+        # compute mirrors a live lane — well-conditioned, and warm
+        # whenever lane 0 is, so they never force the mixed warm/cold
+        # path — and their outputs/state are simply dropped.
+        rows = lanes + [lanes[0]] * (bucket - a)
+        imgs = np.stack(
+            [np.asarray(req.image, np.float32) for _, req in picked]
+            + [np.asarray(picked[0][1].image, np.float32)] * (bucket - a)
+        )
+        state = self._ensure_slot_state()
+        bucket_state = state.take_rows(rows)
+        fwd = self._program_for(bucket)
+        logits, new_bucket_state = fwd(
+            self.params, jnp.asarray(imgs), bucket_state
+        )
+        # Scatter live lanes only: src rows >= a (padding) are dropped.
+        self._slot_state = state.put_rows(new_bucket_state, lanes)
+        logits_np = np.asarray(logits)
+        for i, (slot, req) in enumerate(picked):
+            req.logits = logits_np[i]
+            req.done = True
+            self._slot_last_tick[slot] = self._tick
+            if req.tenant is None:
+                # anonymous one-shot: free the slot immediately so it
+                # never pins out live warm tenants under LRU eviction
+                # (the next occupant is cold-reset on admission)
+                self.slot_tenant[slot] = None
+                self._tenant_slot.pop(("req", req.uid), None)
+        self.requests_served += a
+        self.bucket_ticks[bucket] = self.bucket_ticks.get(bucket, 0) + 1
+        return a
+
+    def run(self) -> list[VigRequest]:
+        """Drain the queue; returns the completed requests in
+        submission order. (The engine keeps no completion log of its
+        own — a step()-driven server owns its request objects, so
+        nothing accumulates across ticks.)"""
+        pending = list(self.queue)
+        while self.queue:
+            self.step()
+        return [r for r in pending if r.done]
+
+    # -- observability --------------------------------------------------
+
     def state_steps(self) -> dict:
-        """Per-batch-size view of the functional state's step counters."""
+        """Per-batch-size view of the functional state's step counters
+        (the direct fixed-batch path)."""
         return {b: c[1].steps() for b, c in self._compiled.items()}
+
+    def slot_row_steps(self) -> dict:
+        """Per-slot request counters of the canonical multi-tenant
+        state (empty before the first tick)."""
+        if self._slot_state is None:
+            return {}
+        return self._slot_state.row_steps()
 
     def stats(self) -> dict:
         out = {"requests_served": self.requests_served, "mode": self.mode,
                "digc_cache": self.cache.stats(),
-               "digc_state": self.state_steps()}
+               "digc_state": self.state_steps(),
+               "buckets": self.buckets,
+               "bucket_ticks": dict(self.bucket_ticks),
+               "compiled_programs": self.compile_count,
+               "slot_tenants": list(self.slot_tenant),
+               "slot_row_steps": self.slot_row_steps()}
         if self.schedule is not None:
             out["schedule"] = self.schedule.describe()
         if self.tuned is not None:
             out["tuned"] = [r.as_dict() for r in self.tuned]
+        if self._bucket_schedules:
+            out["bucket_schedules"] = {
+                b: s.describe() for b, s in self._bucket_schedules.items()
+            }
         return out

@@ -1,7 +1,9 @@
 """Ring-DIGC (distributed GMM): exactness vs single-device reference.
 
-Runs in a subprocess so the 8-device XLA host-platform flag never leaks
-into the main test process (which must see 1 device).
+The multi-device tests run in a subprocess so the 8-device XLA
+host-platform flag never leaks into the main test process (which must
+see 1 device); the fast tests below ride a degenerate 1-device mesh in
+the main process.
 """
 
 import subprocess
@@ -9,9 +11,81 @@ import sys
 import textwrap
 from pathlib import Path
 
+import numpy as np
 import pytest
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+# ---------------------------------------------------------------------------
+# Fast (1-device mesh, main process): batched parity + state contract
+
+
+def test_ring_batched_parity_state_passthrough():
+    """Batched ring == reference on a 1-device mesh, and — documenting
+    the current contract — the ring builder sits **outside** the
+    functional-state path: ``digc(state=)`` passes the state through
+    untouched (no counters advance, no co-node shard norms are carried
+    across hops). The ROADMAP sharded-serving item adds a ring state
+    entry; ``test_ring_state_entry_planned`` flips when it lands."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import DigcSpec, digc
+    from repro.core.builder import get_builder
+    from repro.core.state import DigcState, state_entry
+
+    mesh = jax.make_mesh((1,), ("data",))
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(2, 48, 12), jnp.float32)
+    i_ref = digc(x, k=4, impl="reference")
+    spec = DigcSpec(impl="ring", k=4, mesh=mesh)
+    with mesh:
+        i_ring = digc(x, spec=spec)
+        st = DigcState.init({"ring0": state_entry(sq_y_shape=(2, 48),
+                                                  rows=2)})
+        i_st, new_st = digc(x, spec=spec, state=st, state_key="ring0")
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_ring))
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_st))
+    # passthrough: not supports_state => entry untouched, counters cold
+    assert not get_builder("ring").supports_state
+    assert new_st.steps() == {"ring0": 0}
+    assert new_st.row_steps() == {"ring0": [0, 0]}
+    np.testing.assert_array_equal(
+        np.asarray(new_st.entries["ring0"].sq_y), 0.0)
+
+
+@pytest.mark.xfail(
+    strict=True,
+    reason="core/ring.py is outside the functional-state path: no "
+    "co-node shard-norm state entry yet (ROADMAP: sharded serving — "
+    "a ring builder state entry would let DigcState ride shard_map "
+    "for pod-level serving). This test flips to XPASS, and must be "
+    "rewritten into a real parity test, when that item lands.",
+)
+def test_ring_state_entry_planned():
+    """The planned contract: the ring builder advances a DigcState
+    entry (carrying per-shard co-node norms across requests) the same
+    way the blocked tier carries its frozen-gallery norms."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import DigcSpec, digc
+    from repro.core.builder import get_builder
+    from repro.core.state import DigcState, state_entry
+
+    assert get_builder("ring").supports_state
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.asarray(np.random.RandomState(6).randn(32, 8), jnp.float32)
+    st = DigcState.init({"r": state_entry(sq_y_shape=(1, 32))})
+    with mesh:
+        _, new_st = digc(x, spec=DigcSpec(impl="ring", k=3, mesh=mesh),
+                         state=st, state_key="r")
+    assert new_st.steps() == {"r": 1}
+
+
+# ---------------------------------------------------------------------------
+# Multi-device subprocess tests (slow)
 
 
 def _run(snippet: str) -> str:

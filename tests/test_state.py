@@ -38,6 +38,75 @@ def test_state_entry_warm_flag():
     assert bool(e.bump().warm)
 
 
+def test_state_entry_row_counters_and_bump():
+    """Per-row counters (multi-tenant serving): allocated via rows=,
+    advanced by bump alongside the scalar step, row_warm per row."""
+    e = state_entry(centroids_shape=(3, 2, 4), rows=3)
+    assert e.row_step.shape == (3,) and e.row_warm is not None
+    assert not bool(jnp.any(e.row_warm))
+    e2 = e.bump()
+    assert int(e2.step) == 1
+    np.testing.assert_array_equal(np.asarray(e2.row_step), [1, 1, 1])
+    assert bool(jnp.all(e2.row_warm))
+    # legacy entries carry no row counters: pytree structure unchanged
+    assert state_entry().row_step is None
+    assert state_entry().row_warm is None
+    assert len(jax.tree_util.tree_leaves(state_entry())) == 1
+
+
+def test_state_row_lifecycle_take_put_reset():
+    """The serving slot lifecycle: gather slot rows into a bucket batch
+    (repeats = padding lanes), scatter live lanes back (padding lanes
+    dropped), cold-reset a reassigned slot."""
+    st = DigcState.init({
+        "s": state_entry(centroids_shape=(4, 2, 3), sq_y_shape=(4, 5),
+                         rows=4),
+    })
+    # make rows distinguishable: row r's centroids are all r+1
+    marked = DigcStateEntry(
+        step=jnp.int32(7),
+        centroids=jnp.arange(1, 5, dtype=jnp.float32)[:, None, None]
+        * jnp.ones((4, 2, 3)),
+        sq_y=jnp.arange(1, 5, dtype=jnp.float32)[:, None] * jnp.ones((4, 5)),
+        row_step=jnp.asarray([3, 0, 2, 1], jnp.int32),
+    )
+    st = st.set("s", marked)
+    # bucket of 4 over lanes [2, 0] + padding replicating lane 0 (slot 2)
+    bucket = st.take_rows([2, 0, 2, 2])
+    b = bucket.entries["s"]
+    np.testing.assert_array_equal(np.asarray(b.row_step), [2, 3, 2, 2])
+    np.testing.assert_array_equal(np.asarray(b.centroids[1]),
+                                  np.asarray(marked.centroids[0]))
+    assert int(b.step) == 7
+    # the forward bumps; pretend it also rewrote centroids
+    served = bucket.set("s", b.bump(centroids=b.centroids + 100.0))
+    back = st.put_rows(served, [2, 0])
+    a = back.entries["s"]
+    # live lanes landed at their slots
+    np.testing.assert_array_equal(np.asarray(a.row_step), [4, 0, 3, 1])
+    np.testing.assert_allclose(np.asarray(a.centroids[2]),
+                               np.asarray(marked.centroids[2]) + 100.0)
+    np.testing.assert_allclose(np.asarray(a.centroids[0]),
+                               np.asarray(marked.centroids[0]) + 100.0)
+    # padding lanes (src rows 2, 3) dropped: untouched slots identical
+    np.testing.assert_array_equal(np.asarray(a.centroids[1]),
+                                  np.asarray(marked.centroids[1]))
+    np.testing.assert_array_equal(np.asarray(a.centroids[3]),
+                                  np.asarray(marked.centroids[3]))
+    np.testing.assert_array_equal(np.asarray(a.sq_y[3]),
+                                  np.asarray(marked.sq_y[3]))
+    assert int(a.step) == 8  # scalar counter taken from the served entry
+    # reset: slot 0 reassigned to a new tenant -> cold zero rows
+    reset = back.reset_rows([0])
+    r = reset.entries["s"]
+    np.testing.assert_array_equal(np.asarray(r.row_step), [0, 0, 3, 1])
+    np.testing.assert_array_equal(np.asarray(r.centroids[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(r.sq_y[0]), 0.0)
+    np.testing.assert_allclose(np.asarray(r.centroids[2]),
+                               np.asarray(a.centroids[2]))
+    assert back.row_steps() == {"s": [4, 0, 3, 1]}
+
+
 # ---------------------------------------------------------------------------
 # digc(..., state=) — the functional form
 
@@ -141,6 +210,78 @@ def test_cluster_state_jit_warm_start_recall_and_drift():
     assert not np.array_equal(c1, c2)  # warm start tracked the drift
     assert recall_vs_exact(x1, x1, i_cold, 4) == 1.0
     assert recall_vs_exact(x2, x2, i_warm, 4) == 1.0
+
+
+def test_cluster_rowwise_warm_gate_matches_b1_replay():
+    """Per-row warm gating (multi-tenant batches): a batch mixing a
+    warm row with a freshly reset (cold) row must give each row exactly
+    what a B=1 call with that row's own state history gives — warm rows
+    the 2-Lloyd refinement, cold rows the full cold build."""
+    rng = np.random.default_rng(40)
+    x1 = _rand(rng, 3, 64, 8)
+    x2 = x1 + 0.05 * _rand(rng, 3, 64, 8)
+    spec = DigcSpec(impl="cluster", k=4, n_clusters=4, n_probe=4,
+                    capacity_factor=8.0)
+    st = DigcState.init({
+        "s": state_entry(centroids_shape=(3, 4, 8), rows=3)
+    })
+    fn = jax.jit(lambda a, s: digc(a, spec=spec, state=s, state_key="s"))
+    _, st1 = fn(x1, st)
+    assert st1.row_steps() == {"s": [1, 1, 1]}
+    # row 2's tenant evicted: cold reset; rows 0/1 stay warm
+    i_mixed, st2 = fn(x2, st1.reset_rows([2]))
+    assert st2.row_steps() == {"s": [2, 2, 1]}
+
+    def replay(row, warm):
+        s = DigcState.init({
+            "s": state_entry(centroids_shape=(1, 4, 8), rows=1)
+        })
+        f1 = jax.jit(lambda a, sv: digc(a, spec=spec, state=sv,
+                                        state_key="s"))
+        if warm:
+            _, s = f1(x1[row:row + 1], s)
+        idx, _ = f1(x2[row:row + 1], s)
+        return np.asarray(idx)[0]
+
+    np.testing.assert_array_equal(np.asarray(i_mixed[0]), replay(0, True))
+    np.testing.assert_array_equal(np.asarray(i_mixed[1]), replay(1, True))
+    np.testing.assert_array_equal(np.asarray(i_mixed[2]), replay(2, False))
+
+
+def test_blocked_rowwise_gallery_norms_exact_after_reset():
+    """Blocked frozen-gallery norms with per-row counters stay exact
+    through resets (warm rows read carried norms, reset rows
+    recompute)."""
+    rng = np.random.default_rng(41)
+    x, y = _rand(rng, 2, 20, 6), _rand(rng, 2, 32, 6)
+    i_ref = digc(x, y, k=3, impl="reference")
+    st = DigcState.init({"g": state_entry(sq_y_shape=(2, 32), rows=2)})
+    fn = jax.jit(lambda a, by, s: digc(a, by, k=3, impl="blocked",
+                                       state=s, state_key="g"))
+    i1, st = fn(x, y, st)
+    i2, st = fn(x, y, st.reset_rows([0]))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i_ref))
+    assert st.row_steps() == {"g": [1, 2]}
+    np.testing.assert_allclose(np.asarray(st.entries["g"].sq_y),
+                               np.asarray(jnp.sum(y * y, -1)), rtol=1e-6)
+
+
+def test_init_vig_state_per_slot_rows():
+    """per_slot=True allocates (B,) row counters on every stage entry
+    (the multi-tenant serving layout)."""
+    from repro.models import vig
+
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=32, embed_dims=(16,), depths=(2,), num_classes=3, k=3,
+    )
+    st = vig.init_vig_state(cfg, 4, "cluster", per_slot=True)
+    e = st.entries["stage0"]
+    assert e.row_step.shape == (4,) and e.centroids is not None
+    assert st.row_steps() == {"stage0": [0, 0, 0, 0]}
+    # default stays the single-tenant layout (no row counters)
+    st_flat = vig.init_vig_state(cfg, 4, "cluster")
+    assert st_flat.entries["stage0"].row_step is None
 
 
 def test_cluster_state_shape_mismatch_is_cold_and_safe():
