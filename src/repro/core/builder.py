@@ -70,9 +70,20 @@ class DigcSpec:
     # --- axial (GreedyViG family)
     grid_h: Optional[int] = None
     grid_w: Optional[int] = None
-    # --- ring (distributed)
+    # --- ring (distributed): mesh + co-node ring axis, plus an
+    # optional second mesh axis sharding the batch rows data-parallel
+    # (serving slot rows x ring-sharded co-nodes, DESIGN.md §10)
     mesh: Optional[Any] = None
     axis_name: Optional[str] = None
+    batch_axis: Optional[str] = None
+
+    def mesh_shape(self) -> Optional[tuple[int, ...]]:
+        """Device counts of the spec's mesh (None when unsharded) —
+        part of the tuner's workload identity: a schedule measured on
+        an N-way ring is not a single-device schedule."""
+        if self.mesh is None:
+            return None
+        return tuple(int(s) for s in self.mesh.shape.values())
 
     def replace(self, **kw) -> "DigcSpec":
         return dataclasses.replace(self, **kw)

@@ -28,6 +28,11 @@ Implementation tiers (see DESIGN.md §3):
     the running candidate buffer resident in VMEM and batch as the
     leading grid dimension.
 
+A fourth, distributed tier (``repro.core.ring``, DESIGN.md §10) runs
+the same contract mesh-sharded: co-node shards rotate a device ring,
+the whole batch rides one shard_map program, and a ``DigcState`` entry
+carries the sharded co-node norms across requests.
+
 ``digc`` is the public entry point: a thin lookup into the GraphBuilder
 registry (``repro.core.builder``, DESIGN.md §4). Select a tier with a
 ``DigcSpec`` (``digc(x, y, spec=...)``) or the legacy ``impl=`` keyword.

@@ -71,6 +71,26 @@ import jax
 import jax.numpy as jnp
 
 
+def _like_sharding(src, new):
+    """Re-place ``new`` with ``src``'s NamedSharding (eager row ops on
+    sharded entries must not silently collapse a device-resident buffer
+    onto the default device — DESIGN.md §10 state placement).
+
+    A no-op under tracing (jit propagates shardings itself), for
+    unsharded arrays, and when the row op changed the partitioned
+    dimension itself (a take/put only ever changes the *row* axis,
+    which serving keeps unpartitioned)."""
+    if isinstance(new, jax.core.Tracer) or isinstance(src, jax.core.Tracer):
+        return new
+    sharding = getattr(src, "sharding", None)
+    if not isinstance(sharding, jax.sharding.NamedSharding):
+        return new
+    try:
+        return jax.device_put(new, sharding)
+    except (ValueError, TypeError):  # shape no longer placeable: keep
+        return new
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DigcStateEntry:
@@ -116,7 +136,7 @@ class DigcStateEntry:
         would invalidate the source entry's counter on real backends."""
         rows = jnp.asarray(rows, jnp.int32)
         updates = {
-            f: getattr(self, f)[rows]
+            f: _like_sharding(getattr(self, f), getattr(self, f)[rows])
             for f in self._row_fields() if getattr(self, f) is not None
         }
         updates["step"] = self.step + 0
@@ -129,12 +149,13 @@ class DigcStateEntry:
         The scalar ``step`` is taken from ``src`` (the served entry)."""
         rows = jnp.asarray(rows, jnp.int32)
         n = rows.shape[0]
-        updates = {"step": src.step}
+        updates = {"step": jnp.asarray(src.step)}
         for f in self._row_fields():
             dst_v, src_v = getattr(self, f), getattr(src, f)
             if dst_v is None or src_v is None:
                 continue
-            updates[f] = dst_v.at[rows].set(src_v[:n])
+            src_v = jnp.asarray(src_v)  # parked host rows re-materialize
+            updates[f] = _like_sharding(dst_v, dst_v.at[rows].set(src_v[:n]))
         return dataclasses.replace(self, **updates)
 
     def reset_rows(self, rows) -> "DigcStateEntry":
@@ -148,7 +169,9 @@ class DigcStateEntry:
             v = getattr(self, f)
             if v is None:
                 continue
-            updates[f] = v.at[rows].set(jnp.zeros((), v.dtype))
+            updates[f] = _like_sharding(
+                v, v.at[rows].set(jnp.zeros((), v.dtype))
+            )
         return dataclasses.replace(self, **updates)
 
 
@@ -158,6 +181,8 @@ def state_entry(
     sq_y_shape: Optional[tuple[int, ...]] = None,
     dtype=jnp.float32,
     rows: Optional[int] = None,
+    mesh=None,
+    axis_name: str = "data",
 ) -> DigcStateEntry:
     """A cold entry with zero-initialized buffers of the given shapes.
 
@@ -168,8 +193,18 @@ def state_entry(
     ``rows`` allocates (rows,) per-row counters (``row_step``) for
     multi-tenant serving: warm/cold becomes a per-batch-row value and
     the ``take_rows``/``put_rows``/``reset_rows`` lifecycle applies.
+
+    ``mesh`` places the entry for sharded construction (DESIGN.md §10):
+    ``sq_y`` — the ring tier's per-shard co-node norms — is partitioned
+    along ``axis_name`` on its co-node dimension (each device owns the
+    norm shard its ``shard_map`` body reads/writes), while the
+    counters and centroids are replicated across the mesh (they are
+    per-row values every device needs). Entries placed this way stay
+    device-resident through the row lifecycle: ``take_rows`` /
+    ``put_rows`` / ``reset_rows`` re-place their results with the
+    source buffer's sharding.
     """
-    return DigcStateEntry(
+    entry = DigcStateEntry(
         step=jnp.zeros((), jnp.int32),
         centroids=(
             None if centroids_shape is None
@@ -177,6 +212,38 @@ def state_entry(
         ),
         sq_y=None if sq_y_shape is None else jnp.zeros(sq_y_shape, jnp.float32),
         row_step=None if rows is None else jnp.zeros((rows,), jnp.int32),
+    )
+    if mesh is None:
+        return entry
+    if axis_name not in mesh.shape:
+        raise ValueError(
+            f"state_entry placement axis {axis_name!r} is not an axis "
+            f"of the mesh (axes: {tuple(mesh.shape)}); pass the mesh's "
+            "co-node ring axis as axis_name="
+        )
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def place(v, spec):
+        return None if v is None else jax.device_put(
+            v, NamedSharding(mesh, spec)
+        )
+
+    sq_spec = PartitionSpec(None, axis_name)
+    if (
+        entry.sq_y is not None
+        and entry.sq_y.shape[-1] % mesh.shape[axis_name] != 0
+    ):
+        # A ragged co-node count still *works* sharded (the ring pads
+        # internally) but cannot be device_put along the axis;
+        # replicate — placement is a performance choice, never a
+        # semantic one.
+        sq_spec = PartitionSpec()
+    return dataclasses.replace(
+        entry,
+        step=place(entry.step, PartitionSpec()),
+        centroids=place(entry.centroids, PartitionSpec()),
+        sq_y=place(entry.sq_y, sq_spec),
+        row_step=place(entry.row_step, PartitionSpec()),
     )
 
 

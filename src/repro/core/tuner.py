@@ -112,13 +112,29 @@ def host_key(backend: Optional[str] = None) -> str:
 def workload_key(
     b: int, n: int, m: int, d: int, kd: int,
     causal: bool = False, has_pos: bool = False,
+    mesh_shape: Optional[tuple[int, ...]] = None,
 ) -> str:
-    """Workload identity within one host (see ``host_key``)."""
+    """Workload identity within one host (see ``host_key``).
+
+    ``mesh_shape`` (device counts per mesh axis, ``DigcSpec.
+    mesh_shape()``) keys sharded workloads separately: a schedule
+    measured with co-nodes rotating a 4-device ring is a different
+    measurement from the single-device tile sweep, even at identical
+    (B, N, M) — the per-hop tile is M/n_dev wide and the ICI transfer
+    is part of the measured step. Unsharded workloads (the common
+    case) keep their historical keys. Today this is a *forward guard*:
+    ``tune()`` only measures the blocked tier, which carries no mesh
+    knob — the suffix exists so the committed single-device entries
+    can never be clobbered (or mis-served) the day a sharded tier
+    becomes measurable (ROADMAP: ring on real ICI).
+    """
     key = f"b{b}:n{n}:m{m}:d{d}:kd{kd}"
     if causal:
         key += ":causal"
     if has_pos:
         key += ":pos"
+    if mesh_shape:
+        key += ":mesh" + "x".join(str(s) for s in mesh_shape)
     return key
 
 
@@ -240,7 +256,8 @@ class DigcTuner:
         m = n if y is None else (y.shape[-2])
         kd = spec.k * spec.dilation
         key = workload_key(b, n, m, d, kd, spec.causal,
-                           pos_bias is not None)
+                           pos_bias is not None,
+                           mesh_shape=spec.mesh_shape())
         if not force:
             cached = self.lookup(key)
             if cached is not None:

@@ -300,29 +300,55 @@ def attention_apply(params, x, cfg: ModelConfig, *, positions,
     # ---- decode: single new token against the cache (grouped-query,
     # no KV repetition: the cache keeps its seq/kv-head sharding and the
     # softmax/AV contraction reduces across shards — flash-decode).
+    # ``pos`` is a scalar (every row writes/attends at one position) or
+    # a (B,) per-slot vector — a mixed-length slot batch decodes in ONE
+    # call, each row writing its own cache slot and masking at its own
+    # length (the serving engine's per-tick collapse, DESIGN.md §9).
     q, k_new, v_new = _qkv(params, x, cfg, positions)
     b = q.shape[0]
     kvh, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
     t = cache["k"].shape[1]
+    vec = jnp.ndim(pos) == 1  # per-slot position vector
     if window > 0:
         slot = pos % t  # rolling buffer for local attention
     else:
         slot = pos
-    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
-    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    if vec:
+        hit = jnp.arange(t)[None, :] == slot[:, None]  # (B, T)
+        k_cache = jnp.where(
+            hit[:, :, None, None], k_new.astype(cache["k"].dtype), cache["k"]
+        )
+        v_cache = jnp.where(
+            hit[:, :, None, None], v_new.astype(cache["v"].dtype), cache["v"]
+        )
+    else:
+        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
     qg = q.reshape(b, 1, kvh, g, cfg.dh)
     logits = jnp.einsum(
         "bqkgd,btkd->bkgqt", qg, k_cache.astype(dt)
     ).astype(jnp.float32) * cfg.dh**-0.5
     logits = constrain(logits, ("batch", "act_kv", None, None, "act_cache"))
     kpos = jnp.arange(t)
-    if window > 0:
-        # rolling buffer: slot s holds absolute position derived from pos
-        abs_pos = jnp.where(kpos <= slot, pos - slot + kpos, pos - slot - t + kpos)
-        mask = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+    if vec:
+        pv, sv = pos[:, None], slot[:, None]  # (B, 1) against kpos (T,)
+        if window > 0:
+            abs_pos = jnp.where(
+                kpos[None, :] <= sv, pv - sv + kpos[None, :],
+                pv - sv - t + kpos[None, :],
+            )
+            mask = (abs_pos >= 0) & (abs_pos <= pv) & (abs_pos > pv - window)
+        else:
+            mask = kpos[None, :] <= pv  # (B, T)
+        logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
     else:
-        mask = kpos <= pos
-    logits = jnp.where(mask[None, None, None, None, :], logits, NEG_INF)
+        if window > 0:
+            # rolling buffer: slot s holds absolute position derived from pos
+            abs_pos = jnp.where(kpos <= slot, pos - slot + kpos, pos - slot - t + kpos)
+            mask = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+        else:
+            mask = kpos <= pos
+        logits = jnp.where(mask[None, None, None, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1).astype(dt)
     out = jnp.einsum("bkgqt,btkd->bqkgd", w, v_cache.astype(dt))
     out = out.reshape(b, 1, cfg.num_heads, cfg.dh)
@@ -349,16 +375,27 @@ def knn_attention_apply(params, x, cfg: ModelConfig, *, positions,
         out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
         return out, (k, v)
     t = cache["k"].shape[1]
-    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
-    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+    if jnp.ndim(pos) == 1:  # per-slot position vector (one call per tick)
+        hit = jnp.arange(t)[None, :] == pos[:, None]  # (B, T)
+        k_cache = jnp.where(
+            hit[:, :, None, None], k.astype(cache["k"].dtype), cache["k"]
+        )
+        v_cache = jnp.where(
+            hit[:, :, None, None], v.astype(cache["v"].dtype), cache["v"]
+        )
+        pos_b = pos
+    else:
+        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+        pos_b = jnp.full((q.shape[0],), pos, jnp.int32)
     kk = _repeat_kv(k_cache.astype(dt), cfg.num_heads)
     vv = _repeat_kv(v_cache.astype(dt), cfg.num_heads)
 
-    def per_batch(qb, kb, vb):
+    def per_batch(qb, kb, vb, pb):
         return knn_attention_decode(
-            qb, kb, vb, pos + 1, num_neighbors=cfg.knn_neighbors
+            qb, kb, vb, pb + 1, num_neighbors=cfg.knn_neighbors
         )
 
-    out = jax.vmap(per_batch)(q[:, 0], kk, vv)  # (B,H,dh)
+    out = jax.vmap(per_batch)(q[:, 0], kk, vv, pos_b)  # (B,H,dh)
     out = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(dt))[:, None]
     return out, {"k": k_cache, "v": v_cache}

@@ -84,14 +84,30 @@ def mla_apply(params, x, cfg: ModelConfig, *, positions,
         out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
         return out, (c_kv, k_pe)
 
-    # decode: absorbed attention directly in the latent space.
+    # decode: absorbed attention directly in the latent space. ``pos``
+    # is a scalar or a (B,) per-slot vector (mixed-length slot batches
+    # decode in one call; each row writes/masks at its own position).
     c_new, kpe_new = _compress(params, x, cfg, positions)
-    c_cache = lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, 1
-    )
-    kpe_cache = lax.dynamic_update_slice_in_dim(
-        cache["k_pe"], kpe_new.astype(cache["k_pe"].dtype), pos, 1
-    )
+    t = cache["c_kv"].shape[1]
+    if jnp.ndim(pos) == 1:
+        hit = jnp.arange(t)[None, :] == pos[:, None]  # (B, T)
+        c_cache = jnp.where(
+            hit[:, :, None], c_new.astype(cache["c_kv"].dtype), cache["c_kv"]
+        )
+        kpe_cache = jnp.where(
+            hit[:, :, None], kpe_new.astype(cache["k_pe"].dtype),
+            cache["k_pe"],
+        )
+        mask = jnp.arange(t)[None, :] <= pos[:, None]  # (B, T)
+        mask_b = mask[:, None, None, :]
+    else:
+        c_cache = lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, 1
+        )
+        kpe_cache = lax.dynamic_update_slice_in_dim(
+            cache["k_pe"], kpe_new.astype(cache["k_pe"].dtype), pos, 1
+        )
+        mask_b = (jnp.arange(t) <= pos)[None, None, None, :]
     q_nope, q_pe = _queries(params, x, cfg, positions)  # (B,1,H,*)
     # absorb W_uk into the query: q_lat = q_nope @ W_uk^T per head
     q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["w_uk"].astype(dt))
@@ -99,9 +115,7 @@ def mla_apply(params, x, cfg: ModelConfig, *, positions,
         jnp.einsum("bshl,btl->bhst", q_lat, c_cache.astype(dt))
         + jnp.einsum("bshr,btr->bhst", q_pe, kpe_cache.astype(dt))
     ).astype(jnp.float32) * scale
-    t = c_cache.shape[1]
-    mask = jnp.arange(t) <= pos
-    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(mask_b, logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1).astype(dt)
     ctx = jnp.einsum("bhst,btl->bshl", w, c_cache.astype(dt))
     out = jnp.einsum("bshl,lhk->bshk", ctx, params["w_uv"].astype(dt))

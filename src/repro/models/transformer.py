@@ -292,11 +292,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *, positions=None):
-    """One decode step. tokens (B,1); pos scalar int32 (write slot /
-    absolute position). Returns (logits (B,1,V), new_cache)."""
+    """One decode step. tokens (B,1); pos int32 — a scalar (write slot /
+    absolute position for every row) **or a (B,) per-slot vector**: a
+    mixed-length slot batch decodes in one call, each row writing its
+    cache at (and attending up to) its own position. Returns
+    (logits (B,1,V), new_cache)."""
     b = tokens.shape[0]
     if positions is None:
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        if jnp.ndim(pos) == 1:
+            positions = jnp.reshape(pos, (b, 1)).astype(jnp.int32)
+        else:
+            positions = jnp.full((b, 1), pos, jnp.int32)
         if cfg.mrope_sections:
             positions = jnp.broadcast_to(positions, (3, b, 1))
     x = embed_apply(params["embed"], tokens, cfg)

@@ -293,7 +293,8 @@ def vig_forward(params, images, cfg: VigConfig, *,
 
 def init_vig_state(cfg: VigConfig, batch: int,
                    digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
-                   *, per_slot: bool = False) -> DigcState:
+                   *, per_slot: bool = False, mesh=None,
+                   mesh_axis: str = "data") -> DigcState:
     """Allocate the functional DIGC state for a model + batch size.
 
     One entry per stage (the key ``grapher_block`` passes): a cold
@@ -309,6 +310,16 @@ def init_vig_state(cfg: VigConfig, batch: int,
     validity is tracked independently, so the slot lifecycle
     (``DigcState.take_rows`` / ``put_rows`` / ``reset_rows``) can admit
     and evict tenants without cross-contaminating warm starts.
+
+    ``mesh``/``mesh_axis`` place every entry for sharded construction
+    (DESIGN.md §10): a stage whose spec carries a mesh (the ring tier)
+    must see its state buffers resident where its ``shard_map`` body
+    reads them. A spec that names its own mesh (``spec.mesh``) wins
+    over the argument, so a mixed schedule (ring stage next to a
+    single-device stage) places each stage where it runs. In a ViG
+    forward the co-nodes are this call's own features (never a frozen
+    gallery), so ring/blocked stages carry counters only — placement
+    matters the moment a caller allocates gallery norms or centroids.
     """
     from repro.core.strategies import default_cluster_params
 
@@ -319,16 +330,21 @@ def init_vig_state(cfg: VigConfig, batch: int,
         spec = resolve_digc_spec(cfg, digc_impl, stage=si)
         r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
         m = (grid // max(r, 1)) ** 2
+        stage_mesh = spec.mesh if spec.mesh is not None else mesh
+        stage_axis = (
+            spec.axis_name if spec.axis_name is not None else mesh_axis
+        )
+        placement = dict(mesh=stage_mesh, axis_name=stage_axis)
         if spec.impl == "cluster":
             n_clusters, _ = default_cluster_params(
                 m, spec.n_clusters, spec.n_probe
             )
             entries[f"stage{si}"] = state_entry(
                 centroids_shape=(batch, n_clusters, cfg.embed_dims[si]),
-                rows=rows,
+                rows=rows, **placement,
             )
         else:
-            entries[f"stage{si}"] = state_entry(rows=rows)
+            entries[f"stage{si}"] = state_entry(rows=rows, **placement)
         if si + 1 < len(cfg.depths):
             grid //= 2
     return DigcState.init(entries)

@@ -3,11 +3,13 @@
 * ``ServeEngine`` — LM prefill + decode with a slot-based batch
   (continuous-batching-lite). Requests occupy fixed batch slots;
   finished slots are refilled from the queue without stalling in-flight
-  decodes. Per-slot lengths are tracked host-side; the decode step
-  itself is a single jit'd call over the full slot batch (static
-  shapes — production TPU serving style). Every cache write carries an
-  explicit per-slot commit mask, so prefilling one slot or decoding a
-  position group can never clobber another slot's cache rows.
+  decodes. Per-slot lengths are tracked host-side; a decode tick is a
+  **single** jit'd call over the full slot batch even when slot
+  lengths differ (static shapes — production TPU serving style):
+  ``decode_step`` takes the per-slot position *vector*, each row
+  writing its cache at its own position. Every cache write still
+  carries an explicit per-slot commit mask, so prefilling one slot can
+  never clobber an in-flight neighbor's cache rows.
 * ``VigServeEngine`` — multi-tenant ViG image serving with
   cross-request DIGC state (DESIGN.md §9): a host-side request queue
   feeds fixed slots, each engine tick pads the active slots to a small
@@ -45,12 +47,12 @@ class Request:
 def _merge_cache_rows(new, old, keep, cfg: ModelConfig):
     """Commit ``new`` cache rows only where ``keep`` (B,) is True.
 
-    ``decode_step`` writes its k/v (or recurrent state) at the scalar
-    position for **every** batch row — a per-slot engine decoding one
-    position group (or prefilling one slot) must therefore mask the
-    commit, or slots at other positions get garbage written into their
-    caches. Leaves carry the batch axis at 1 when layer-stacked (the
-    scan layout, (L, B, ...)) and at 0 for the unstacked hybrid
+    ``decode_step`` writes its k/v (or recurrent state) for **every**
+    batch row — each at its own per-slot position now, but idle and
+    draining slots still decode garbage tokens — so a per-slot engine
+    must mask the commit, or inactive slots get garbage written into
+    their caches. Leaves carry the batch axis at 1 when layer-stacked
+    (the scan layout, (L, B, ...)) and at 0 for the unstacked hybrid
     remainder entries ((B, ...)).
     """
 
@@ -110,14 +112,16 @@ class ServeEngine:
             )
         self.queue.append(req)
 
-    def _step_decode(self, tokens, pos: int, members: list[int]):
-        """One jitted decode committing only ``members``' cache rows."""
+    def _step_decode(self, tokens, pos, members: list[int]):
+        """One jitted decode committing only ``members``' cache rows.
+        ``pos`` is the (slots,) per-slot position vector — a single
+        call serves arbitrarily mixed-length slots (DESIGN.md §9)."""
         keep = np.zeros(self.slots, bool)
         keep[members] = True
         self.decode_calls += 1
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos),
-            jnp.asarray(keep),
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos, dtype=jnp.int32), jnp.asarray(keep),
         )
         return logits
 
@@ -129,7 +133,9 @@ class ServeEngine:
         for t, tok in enumerate(req.prompt):
             tokens = np.zeros((self.slots, 1), np.int32)
             tokens[slot, 0] = tok
-            logits = self._step_decode(tokens, t, [slot])
+            logits = self._step_decode(
+                tokens, np.full(self.slots, t, np.int32), [slot]
+            )
         self.slot_pos[slot] = len(req.prompt)
         nxt = int(jnp.argmax(logits[slot, -1]))
         req.out_tokens.append(nxt)
@@ -153,22 +159,20 @@ class ServeEngine:
         tokens = np.zeros((self.slots, 1), np.int32)
         for s in active:
             tokens[s, 0] = self.slot_req[s].out_tokens[-1]
-        # decode_step takes one scalar position, so mixed-length slots
-        # decode in per-position groups; the commit mask restricts each
-        # group's cache write to its own members, so the groups cannot
-        # corrupt each other (regression-pinned in the serve tests).
-        groups: dict[int, list[int]] = {}
+        # decode_step takes the per-slot position vector, so a tick over
+        # arbitrarily mixed-length slots is ONE jitted call — each row
+        # writes its cache at (and attends up to) its own position, and
+        # the commit mask still restricts the write to the active slots
+        # (call count pinned in the serve tests; the per-position-group
+        # loop this replaced issued one call per distinct length).
+        logits = self._step_decode(tokens, self.slot_pos.copy(), active)
         for s in active:
-            groups.setdefault(int(self.slot_pos[s]), []).append(s)
-        for pos, members in sorted(groups.items()):
-            logits = self._step_decode(tokens, pos, members)
-            for s in members:
-                req = self.slot_req[s]
-                nxt = int(jnp.argmax(logits[s, -1]))
-                req.out_tokens.append(nxt)
-                self.slot_pos[s] += 1
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    req.done = True
+            req = self.slot_req[s]
+            nxt = int(jnp.argmax(logits[s, -1]))
+            req.out_tokens.append(nxt)
+            self.slot_pos[s] += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
         return len(active)
 
     def run(self) -> list[Request]:
@@ -235,6 +239,26 @@ class VigServeEngine:
     the exact active-batch size (the PR-3 one-program-per-batch-size
     behavior, kept as the benchmark baseline).
 
+    **Sharded mode** (``mesh=``, DESIGN.md §10): the engine goes
+    mesh-native — the construction spec is threaded with the mesh
+    (``mesh_axis`` names the co-node ring axis, ``mesh_batch_axis``
+    optionally shards bucket rows data-parallel), the canonical slot
+    state is allocated with matching ``PartitionSpec``s
+    (``init_vig_state(mesh=)``), and every bucket program runs the
+    distributed builder's ``shard_map`` inside the same donated jit.
+    The slot/bucket/warm-gating lifecycle is unchanged: a ragged
+    multi-tenant trace on an N-device mesh still compiles at most
+    |bucket set| programs and each row still matches its own B=1
+    replay bit-for-bit on CPU.
+
+    **LRU state parking** (``park_capacity``, DESIGN.md §10): when a
+    tenant is LRU-evicted from its slot, its state rows are copied to
+    host memory (bounded by ``park_capacity`` tenants, oldest parked
+    copy dropped first) and restored on re-admit — hot tenants survive
+    slot churn warm instead of re-admitting cold. ``release()`` (an
+    explicit disconnect) still drops state entirely, and
+    ``park_capacity=0`` restores the PR-4 evict-means-cold behavior.
+
     **The direct path** (``infer``) runs one batched forward per call
     with one compiled program + state per exact batch size — the PR-3
     API, still the right call for offline fixed-batch workloads.
@@ -267,7 +291,11 @@ class VigServeEngine:
     def __init__(self, cfg, params, *, digc_impl=None, batch: int = 8,
                  autotune: bool = True, tuner_path=None, mode: str = "jit",
                  buckets: Optional[tuple] = DEFAULT_BUCKETS,
-                 on_compile: Optional[Callable[[int], None]] = None):
+                 on_compile: Optional[Callable[[int], None]] = None,
+                 mesh=None, mesh_axis: str = "data",
+                 mesh_batch_axis: Optional[str] = None,
+                 park_capacity: int = 8):
+        from repro.core.builder import get_builder
         from repro.core.engine import DigcCache
         from repro.models.vig import resolve_digc_spec
 
@@ -284,6 +312,50 @@ class VigServeEngine:
         self.batch = batch
         self.spec = resolve_digc_spec(cfg, digc_impl)
         self.mode = mode
+        # -- sharded mode (DESIGN.md §10): thread the mesh into the
+        # construction spec, so every bucket program and the slot state
+        # allocation see the same placement. mesh_axis names the
+        # co-node ring axis; mesh_batch_axis optionally shards the
+        # bucket rows data-parallel (every bucket must divide by it).
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.mesh_batch_axis = mesh_batch_axis
+        if mesh is not None:
+            if isinstance(digc_impl, VigSchedule):
+                raise ValueError(
+                    "mesh= applies one placement to every stage; a "
+                    "pre-tuned VigSchedule carries per-stage specs — "
+                    "set mesh/axis_name on its stage specs instead"
+                )
+            builder = get_builder(self.spec.impl)
+            if not {"mesh", "axis_name"} <= builder.knobs:
+                raise ValueError(
+                    f"DIGC impl {self.spec.impl!r} is not mesh-native "
+                    "(no mesh/axis_name knobs); sharded serving needs "
+                    "a distributed builder (ring)"
+                )
+            if mesh_batch_axis is not None:
+                if buckets is None:
+                    # The exact-size policy serves every active count
+                    # 1..slots; most of those cannot divide a >1-device
+                    # batch axis, and failing mid-tick (after admission
+                    # mutated slot state) is worse than refusing here.
+                    raise ValueError(
+                        "mesh_batch_axis requires a bucket set: the "
+                        "exact-size policy (buckets=None) serves "
+                        "arbitrary batch sizes, which cannot all "
+                        "divide a sharded batch axis"
+                    )
+                dsz = int(mesh.shape[mesh_batch_axis])
+                bad = [v for v in buckets if v % dsz]
+                if bad:
+                    raise ValueError(
+                        f"bucket sizes {bad} do not divide the "
+                        f"{mesh_batch_axis!r} mesh axis ({dsz} devices)"
+                    )
+            self.spec = self.spec.replace(
+                mesh=mesh, axis_name=mesh_axis, batch_axis=mesh_batch_axis
+            )
         self.cache = DigcCache()  # engaged by the eager shim only
         self.autotune = autotune
         self.tuner_path = tuner_path
@@ -315,9 +387,18 @@ class VigServeEngine:
         self._bucket_schedules: dict[int, Any] = {}
         self._bucket_tuned: dict[int, list] = {}
         self.bucket_ticks: dict[int, int] = {}
+        # -- LRU state parking (DESIGN.md §10): host-side copies of
+        # evicted tenants' state rows, restored on re-admit so hot
+        # tenants survive slot churn warm. Bounded; park_capacity=0
+        # disables (evictees re-admit cold, the PR-4 behavior).
+        self.park_capacity = int(park_capacity)
+        self._parked: "dict[Any, Any]" = {}  # tenant -> host DigcState rows
+        self.park_hits = 0
+        self.park_evictions = 0
         # last-tick observability (asserted by the property tests)
         self.last_lanes: list[int] = []
         self.last_resets: list[int] = []
+        self.last_restores: list[int] = []
         self.last_bucket: Optional[int] = None
 
     # -- tuning ---------------------------------------------------------
@@ -453,13 +534,52 @@ class VigServeEngine:
 
     def release(self, tenant: Any) -> None:
         """Tenant disconnect: free its slot and cold-reset the rows, so
-        the next occupant cannot warm-start from its state."""
+        the next occupant cannot warm-start from its state. A released
+        tenant's parked copy (if any) is dropped too — disconnect means
+        gone, unlike an LRU eviction (which parks)."""
+        self._parked.pop(tenant, None)
         slot = self._tenant_slot.pop(tenant, None)
         if slot is None:
             return
         self.slot_tenant[slot] = None
         if self._slot_state is not None:
             self._slot_state = self._slot_state.reset_rows([slot])
+
+    # -- LRU state parking (DESIGN.md §10) ------------------------------
+
+    def _park(self, tenant: Any, slot: int) -> None:
+        """Copy an evicted tenant's state rows to host memory (bounded,
+        LRU-dropped) so a later re-admit restores them warm."""
+        if self.park_capacity <= 0 or self._slot_state is None:
+            return
+        rows = self._slot_state.take_rows([slot])
+        self._parked.pop(tenant, None)  # re-insert = most recent
+        self._parked[tenant] = jax.tree_util.tree_map(np.asarray, rows)
+        while len(self._parked) > self.park_capacity:
+            oldest = next(iter(self._parked))
+            del self._parked[oldest]
+            self.park_evictions += 1
+
+    def _unpark(self, tenant: Any, slot: int) -> bool:
+        """Restore a parked tenant's rows into its freshly bound slot.
+        Returns False (caller cold-resets) when nothing is parked. Only
+        the *row* fields are restored — the scalar ``step`` stays the
+        canonical entry's (it is the engine-global call counter, not a
+        per-tenant value; per-row validity lives in ``row_step``)."""
+        host = self._parked.pop(tenant, None)
+        if host is None:
+            return False
+        state = self._ensure_slot_state()
+        from repro.core.state import DigcState
+
+        self._slot_state = DigcState(entries={
+            k: dataclasses.replace(
+                e.put_rows(host.entries[k], [slot]), step=e.step
+            )
+            for k, e in state.entries.items()
+        })
+        self.park_hits += 1
+        return True
 
     def bucket_for(self, active: int) -> int:
         """Smallest bucket that fits ``active`` slots (the bucket
@@ -482,7 +602,8 @@ class VigServeEngine:
             # shapes, so the canonical state stays bucket-independent.
             choice = self.schedule if self._user_schedule else self.spec
             self._slot_state = init_vig_state(
-                self.cfg, self.slots, choice, per_slot=True
+                self.cfg, self.slots, choice, per_slot=True,
+                mesh=self.mesh, mesh_axis=self.mesh_axis,
             )
         return self._slot_state
 
@@ -509,9 +630,11 @@ class VigServeEngine:
 
     def _admit(self, tenant_key, used: set) -> Optional[int]:
         """Bind a new tenant to a slot: a free one, else LRU-evict an
-        idle one (never a slot already serving this tick). The bound
-        slot's state rows are cold-reset. Returns None when every slot
-        is busy this tick."""
+        idle one (never a slot already serving this tick; the evictee's
+        rows are parked host-side first). The bound slot's state rows
+        are restored from the tenant's parked copy when one exists,
+        else cold-reset. Returns None when every slot is busy this
+        tick."""
         free = [s for s in range(self.slots) if self.slot_tenant[s] is None
                 and s not in used]
         if free:
@@ -524,11 +647,15 @@ class VigServeEngine:
             evicted = self.slot_tenant[slot]
             if evicted is not None:
                 del self._tenant_slot[evicted]
+                self._park(evicted, slot)
         self.slot_tenant[slot] = tenant_key
         self._tenant_slot[tenant_key] = slot
-        if self._slot_state is not None:
-            self._slot_state = self._slot_state.reset_rows([slot])
-        self.last_resets.append(slot)
+        if self._unpark(tenant_key, slot):
+            self.last_restores.append(slot)
+        else:
+            if self._slot_state is not None:
+                self._slot_state = self._slot_state.reset_rows([slot])
+            self.last_resets.append(slot)
         return slot
 
     def step(self) -> int:
@@ -544,6 +671,7 @@ class VigServeEngine:
             )
         self._tick += 1
         self.last_resets = []
+        self.last_restores = []
         used: set[int] = set()
         assigned: dict[int, int] = {}  # id(request) -> slot
 
@@ -653,7 +781,12 @@ class VigServeEngine:
                "bucket_ticks": dict(self.bucket_ticks),
                "compiled_programs": self.compile_count,
                "slot_tenants": list(self.slot_tenant),
-               "slot_row_steps": self.slot_row_steps()}
+               "slot_row_steps": self.slot_row_steps(),
+               "mesh": (None if self.mesh is None
+                        else {k: int(v) for k, v in self.mesh.shape.items()}),
+               "parked_tenants": list(self._parked),
+               "park_hits": self.park_hits,
+               "park_evictions": self.park_evictions}
         if self.schedule is not None:
             out["schedule"] = self.schedule.describe()
         if self.tuned is not None:

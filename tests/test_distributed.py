@@ -2,27 +2,13 @@
 parallelism vs dense reference, pipeline parallelism vs sequential,
 int8 ring all-reduce vs psum, FSDP sharding rules."""
 
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
 import pytest
 
-SRC = str(Path(__file__).resolve().parent.parent / "src")
+from _subproc import run_snippet
 
 
 def _run(snippet: str, devices: int = 8) -> str:
-    proc = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(snippet)],
-        capture_output=True,
-        text=True,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}"},
-        timeout=900,
-    )
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    return proc.stdout
+    return run_snippet(snippet, devices=devices, timeout=900).stdout
 
 
 @pytest.mark.slow

@@ -2,20 +2,14 @@
 cells build correct abstract args + shardings on the production meshes
 (spec construction only — compiles happen in launch/dryrun.py)."""
 
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
 import pytest
 
-SRC = str(Path(__file__).resolve().parent.parent / "src")
+from _subproc import run_snippet
 
 
 @pytest.mark.slow
 def test_all_cells_build_specs_on_production_meshes():
-    code = textwrap.dedent(
-        """
+    code = """
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
         import jax
@@ -50,11 +44,7 @@ def test_all_cells_build_specs_on_production_meshes():
         assert built == 64 and skipped == 16, (built, skipped)
         print("SPECS_OK", built, skipped)
         """
-    )
-    proc = subprocess.run(
-        [sys.executable, "-c", code],
-        capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
+    # devices=None: the snippet sets its own 512-device flag before
+    # importing jax
+    proc = run_snippet(code, devices=None, timeout=900)
     assert "SPECS_OK 64 16" in proc.stdout

@@ -14,9 +14,9 @@ Three layers of proof that the slot/bucket/state lifecycle is sound:
   size (asserted through the compile-counter hook).
 * **LM engine regression**: ``ServeEngine``'s decode/prefill cache
   writes carry an explicit per-slot commit mask — mixed-length slots
-  must decode exactly as if each were served alone, while the
-  grouped-by-position batching (one jitted call per distinct position)
-  is pinned as the current behavior.
+  must decode exactly as if each were served alone, in ONE jitted call
+  per tick (``decode_step`` takes the per-slot position vector; the
+  call count is pinned).
 """
 
 import numpy as np
@@ -135,7 +135,9 @@ def test_bucketed_eviction_refill_no_state_bleed():
     """Slot churn on the stateful tier: 3 tenants on 2 slots. The
     evicted slot's new tenant must serve **cold** (no warm start from
     the previous occupant's centroids), the surviving tenant must stay
-    warm, and the returning tenant re-admits cold."""
+    warm, and the returning tenant re-admits **warm** — its rows were
+    parked host-side on eviction (LRU state parking, DESIGN.md §10)
+    and restored on re-admit."""
     impl = "cluster"
     cfg, params = _tiny_vig(impl)
     eng = VigServeEngine(cfg, params, digc_impl=impl, autotune=False,
@@ -155,7 +157,7 @@ def test_bucketed_eviction_refill_no_state_bleed():
     np.testing.assert_allclose(a2.logits, refs_a[1], rtol=1e-5, atol=1e-5)
     assert set(eng.slot_tenant) == {"A", "B"}
 
-    # C arrives alone: evicts the LRU slot, must serve cold
+    # C arrives alone: evicts (and parks) the LRU slot, must serve cold
     c1 = mk("C")
     eng.submit(c1)
     eng.step()
@@ -164,6 +166,7 @@ def test_bucketed_eviction_refill_no_state_bleed():
     np.testing.assert_allclose(c1.logits, ref_c[0], rtol=1e-5, atol=1e-5)
     evicted = "A" if "A" not in eng.slot_tenant else "B"
     survivor = "B" if evicted == "A" else "A"
+    assert evicted in eng._parked  # the evictee's rows were parked
 
     # the survivor's warm row must be untouched by C's admission tick
     s3 = mk(survivor)
@@ -173,13 +176,65 @@ def test_bucketed_eviction_refill_no_state_bleed():
     refs_s, _ = _replay_tenant(cfg, params, impl, history)
     np.testing.assert_allclose(s3.logits, refs_s[-1], rtol=1e-5, atol=1e-5)
 
-    # the evicted tenant returns: re-admitted cold (its old state is
-    # gone — conservative, never another tenant's rows)
+    # the evicted tenant returns: restored WARM from its parked rows —
+    # it must match the replay of its FULL history, not a cold start
     e4 = mk(evicted)
     eng.submit(e4)
     eng.step()
-    ref_e, _ = _replay_tenant(cfg, params, impl, [e4])
-    np.testing.assert_allclose(e4.logits, ref_e[0], rtol=1e-5, atol=1e-5)
+    assert eng.park_hits == 1 and eng.last_restores
+    full = {"A": [a1, a2], "B": [b1, b2]}[evicted] + [e4]
+    refs_e, _ = _replay_tenant(cfg, params, impl, full)
+    np.testing.assert_allclose(e4.logits, refs_e[-1], rtol=1e-5, atol=1e-5)
+
+
+def test_eviction_readmit_cold_when_parking_disabled():
+    """park_capacity=0 restores the PR-4 contract: an evicted tenant's
+    state is gone and it re-admits cold."""
+    impl = "cluster"
+    cfg, params = _tiny_vig(impl)
+    eng = VigServeEngine(cfg, params, digc_impl=impl, autotune=False,
+                         buckets=(1, 2), park_capacity=0)
+    rng = np.random.default_rng(12)
+    mk = lambda t: VigRequest(uid=rng.integers(1 << 30), image=_image(rng),
+                              tenant=t)
+    a1, b1 = mk("A"), mk("B")
+    eng.submit(a1), eng.submit(b1)
+    eng.step()
+    c1 = mk("C")
+    eng.submit(c1)
+    eng.step()
+    evicted = "A" if "A" not in eng.slot_tenant else "B"
+    assert not eng._parked
+    e2 = mk(evicted)
+    eng.submit(e2)
+    eng.step()
+    assert eng.park_hits == 0 and not eng.last_restores
+    ref_cold, _ = _replay_tenant(cfg, params, impl, [e2])
+    np.testing.assert_allclose(e2.logits, ref_cold[0], rtol=1e-5, atol=1e-5)
+
+
+def test_parking_lru_capacity_and_release():
+    """The parking tier is bounded LRU (oldest parked copy dropped at
+    capacity) and an explicit release() drops the parked copy too."""
+    eng = _stub_engine((1, 2), park=2)
+    img = np.zeros((16, 16, 3), np.float32)
+    uid = 0
+    # churn 5 tenants through 2 slots: evictions park in LRU order
+    for t in ("A", "B", "C", "D", "E"):
+        eng.submit(VigRequest(uid=uid, image=img, tenant=t))
+        uid += 1
+        eng.step()
+    # A..C were evicted in order; capacity 2 keeps only the last two
+    assert list(eng._parked) == ["B", "C"]
+    assert eng.park_evictions == 1  # A dropped at capacity
+    # release drops both the slot binding and the parked copy
+    eng.release("C")
+    assert "C" not in eng._parked
+    # a re-admitted parked tenant consumes its copy (restore-once)
+    eng.submit(VigRequest(uid=uid, image=img, tenant="B"))
+    eng.step()
+    assert eng.park_hits == 1 and "B" not in eng._parked
+    assert eng.last_restores and not eng.last_resets
 
 
 def test_bucketed_padding_lanes_keep_warm_gate_and_idle_rows():
@@ -255,6 +310,21 @@ def test_bucketed_requires_jit_mode_and_valid_buckets():
     with pytest.raises(ValueError, match="active"):
         VigServeEngine(cfg, params, autotune=False,
                        buckets=(1, 2)).bucket_for(3)
+
+
+def test_mesh_mode_rejects_invalid_configurations():
+    """Sharded-mode validation: non-distributed impls have no mesh
+    knobs; a sharded batch axis needs a bucket set (the exact-size
+    policy serves counts that cannot all divide the axis — refusing at
+    init beats crashing mid-tick after admission mutated slot state)."""
+    cfg, params = _tiny_vig("ring")
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="mesh-native"):
+        VigServeEngine(cfg, params, digc_impl="blocked", autotune=False,
+                       mesh=mesh)
+    with pytest.raises(ValueError, match="bucket set"):
+        VigServeEngine(cfg, params, digc_impl="ring", autotune=False,
+                       mesh=mesh, mesh_batch_axis="data", buckets=None)
 
 
 def test_anonymous_requests_free_their_slot():
@@ -359,11 +429,11 @@ class _StubProgramEngine(VigServeEngine):
         return fake_fwd
 
 
-def _stub_engine(buckets, on_compile=None):
+def _stub_engine(buckets, on_compile=None, park=8):
     cfg, params = _tiny_vig("cluster")
     return _StubProgramEngine(cfg, params, digc_impl="cluster",
                               autotune=False, buckets=buckets,
-                              on_compile=on_compile)
+                              on_compile=on_compile, park_capacity=park)
 
 
 @settings(max_examples=60)
@@ -380,10 +450,11 @@ def test_property_bucket_is_smallest_that_fits(active, buckets):
 @given(arrivals=st.lists(st.integers(0, 5), min_size=1, max_size=14))
 def test_property_padding_never_mutates_live_rows(arrivals):
     """Arbitrary arrival sequences (tenant ids 0-5 on 4 slots, so both
-    padding and eviction occur): after every tick, rows of slots that
-    neither served nor were reset this tick are bit-identical, the
-    served slots' counters advanced exactly once, and the bucket was
-    the smallest that fits."""
+    padding, eviction and park/restore occur): after every tick, rows
+    of slots that neither served nor were reset/restored this tick are
+    bit-identical, the served slots' counters advanced exactly once
+    (from 0 on a cold reset, from the parked value on a restore), and
+    the bucket was the smallest that fits."""
     eng = _stub_engine((1, 2, 4))
     for i, t in enumerate(arrivals):
         eng.submit(VigRequest(
@@ -395,11 +466,16 @@ def test_property_padding_never_mutates_live_rows(arrivals):
             k: jax.tree_util.tree_map(np.asarray, e)
             for k, e in state.entries.items()
         }
+        parked_before = {
+            t: {k: int(e.row_step[0]) for k, e in st.entries.items()}
+            for t, st in eng._parked.items()
+        }
         served = eng.step()
         served_total += served
         assert served == len(eng.last_lanes) >= 1
         assert eng.last_bucket == eng.bucket_for(served)
-        touched = set(eng.last_lanes) | set(eng.last_resets)
+        touched = (set(eng.last_lanes) | set(eng.last_resets)
+                   | set(eng.last_restores))
         after = eng._slot_state
         for key, ent in after.entries.items():
             for s in range(eng.slots):
@@ -413,8 +489,14 @@ def test_property_padding_never_mutates_live_rows(arrivals):
                         np.asarray(ent.centroids[s]),
                         before[key].centroids[s])
                 elif s in eng.last_lanes:
-                    reset = s in eng.last_resets
-                    assert new_step == (1 if reset else old_step + 1)
+                    if s in eng.last_resets:
+                        base = 0  # cold admit
+                    elif s in eng.last_restores:
+                        # warm re-admit: continue from the parked copy
+                        base = parked_before[eng.slot_tenant[s]][key]
+                    else:
+                        base = old_step
+                    assert new_step == base + 1
     assert served_total == len(arrivals)
 
 
@@ -449,11 +531,11 @@ def _lm_setup():
 
 
 def test_serve_engine_mixed_length_slots_match_solo():
-    """Regression (PR-4): decode/prefill cache writes land at one scalar
-    position for the whole batch, so without the per-slot commit mask a
-    slot prefilling (or decoding in another position group) clobbered
-    its neighbors' cache rows — mixed-length batches silently decoded
-    garbage. Each request must now match a solo (slots=1) run."""
+    """Regression (PR-4): without the per-slot commit mask a slot
+    prefilling clobbered its neighbors' cache rows — mixed-length
+    batches silently decoded garbage. Now with per-slot position
+    vectors (one decode call per tick) each request must still match a
+    solo (slots=1) run exactly."""
     from repro.serve.engine import Request, ServeEngine
 
     cfg, params = _lm_setup()
@@ -521,26 +603,26 @@ def test_user_schedule_sizes_slot_state():
         np.asarray(eng._slot_state.entries["stage0"].centroids[slot]), 0.0)
 
 
-def test_serve_engine_groups_by_position_pinned():
-    """Pin the current scheduling: decode_step takes one scalar
-    position, so a tick over slots at distinct positions issues one
-    jitted call per position group (the commit mask makes that safe).
-    A per-slot position vector would collapse this to one call —
-    that's the upgrade path, and this test documents today's shape."""
+def test_serve_engine_one_decode_call_per_tick_pinned():
+    """Pin the collapsed scheduling (ROADMAP PR-4 follow-up, landed):
+    ``decode_step`` takes the per-slot position *vector*, so a tick
+    over slots at distinct positions is ONE jitted call — the
+    per-position-group loop (one call per distinct length) is gone,
+    and the per-slot commit masks still protect inactive slots."""
     from repro.serve.engine import Request, ServeEngine
 
     cfg, params = _lm_setup()
     eng = ServeEngine(cfg, params, slots=2, max_len=32)
-    # same length: one position group -> 1 decode call per tick
+    # same length: 1 decode call per tick
     eng.submit(Request(uid=0, prompt=np.asarray([5, 9], np.int32),
                        max_new_tokens=3))
     eng.submit(Request(uid=1, prompt=np.asarray([7, 1], np.int32),
                        max_new_tokens=3))
-    eng.step()  # prefill (2 tokens per slot) + first grouped decode
+    eng.step()  # prefill (2 tokens per slot) + first batched decode
     before = eng.decode_calls
     eng.step()
-    assert eng.decode_calls == before + 1  # one group, one call
-    # mixed length: two position groups -> 2 decode calls per tick
+    assert eng.decode_calls == before + 1  # one call
+    # mixed length: STILL one decode call per tick (the collapse)
     eng2 = ServeEngine(cfg, params, slots=2, max_len=32)
     eng2.submit(Request(uid=0, prompt=np.asarray([5], np.int32),
                         max_new_tokens=4))
@@ -549,4 +631,4 @@ def test_serve_engine_groups_by_position_pinned():
     eng2.step()
     before = eng2.decode_calls
     eng2.step()
-    assert eng2.decode_calls == before + 2  # two groups, two calls
+    assert eng2.decode_calls == before + 1  # mixed lengths, one call

@@ -430,3 +430,75 @@ def test_init_vig_state_pyramid_shapes():
     # non-cluster impls: counters only
     st_b = vig.init_vig_state(cfg, 4, "blocked")
     assert all(e.centroids is None for e in st_b.entries.values())
+
+
+# ---------------------------------------------------------------------------
+# Sharding-aware allocation + row ops (DESIGN.md §10)
+
+
+def test_state_entry_mesh_placement():
+    """``state_entry(mesh=)`` places the buffers with PartitionSpecs:
+    ``sq_y`` partitioned along the ring axis on its co-node dim, the
+    counters and centroids replicated — and a co-node count that does
+    not divide the axis falls back to replication (placement is a
+    performance choice, never a semantic one)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    e = state_entry(sq_y_shape=(2, 8), centroids_shape=(2, 3, 4), rows=2,
+                    mesh=mesh)
+    assert isinstance(e.sq_y.sharding, NamedSharding)
+    assert e.sq_y.sharding.spec == P(None, "data")
+    assert e.centroids.sharding.spec == P()
+    assert e.row_step.sharding.spec == P()
+    # step counter semantics unchanged
+    assert int(e.step) == 0 and int(e.bump().step) == 1
+    # a placement axis the mesh does not have is a named error, not a
+    # KeyError deep in the divisibility check
+    with pytest.raises(ValueError, match="not an axis"):
+        state_entry(sq_y_shape=(1, 8), mesh=mesh, axis_name="ring")
+    # (the ragged-M replicated fallback needs a >1-device axis to be
+    # observable; asserted in test_ring's 4-device subprocess)
+
+
+def test_state_row_ops_preserve_named_sharding():
+    """take_rows / put_rows / reset_rows keep sharded entries on their
+    mesh — an eager slot-lifecycle pass must not collapse a
+    device-resident buffer onto the default device — and accept
+    host-side (numpy) source rows, the parking round trip."""
+    mesh = jax.make_mesh((1,), ("data",))
+    st = DigcState.init({
+        "s": state_entry(sq_y_shape=(4, 8), centroids_shape=(4, 2, 3),
+                         rows=4, mesh=mesh),
+    })
+    want = st.entries["s"].sq_y.sharding
+    bucket = st.take_rows([2, 0, 2, 2])
+    assert bucket.entries["s"].sq_y.sharding == want
+    back = st.put_rows(bucket, [1, 3])
+    assert back.entries["s"].sq_y.sharding == want
+    assert back.entries["s"].centroids.sharding == st.entries["s"].centroids.sharding
+    reset = back.reset_rows([0])
+    assert reset.entries["s"].sq_y.sharding == want
+    # parking round trip: host copies scatter back onto the mesh
+    parked = jax.tree_util.tree_map(np.asarray, st.take_rows([1]))
+    restored = st.put_rows(parked, [2])
+    assert restored.entries["s"].sq_y.sharding == want
+
+
+def test_init_vig_state_mesh_placement_and_spec_mesh_wins():
+    """``init_vig_state(mesh=)`` places every stage entry; a stage spec
+    that names its own mesh/axis wins over the argument."""
+    from repro.core.builder import DigcSpec
+    from repro.models import vig
+
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=16, patch=4, embed_dims=(16,), depths=(2,),
+        num_classes=3, k=3,
+    )
+    st = vig.init_vig_state(cfg, 2, "cluster", per_slot=True, mesh=mesh)
+    e = st.entries["stage0"]
+    assert e.row_step.sharding.mesh.shape == {"data": 1}
+    spec = DigcSpec(impl="ring", mesh=mesh, axis_name="data")
+    st2 = vig.init_vig_state(cfg, 2, spec, per_slot=True)
+    assert st2.entries["stage0"].row_step.sharding.mesh.shape == {"data": 1}
