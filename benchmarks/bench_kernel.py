@@ -25,6 +25,13 @@ def _hillclimb():
                                block_n=512, block_m=1024)),
         ("K5_bucketed_r2", dict(packed=True, mxu_bf16=True, input_bytes=2,
                                 block_n=512, block_m=1024, bucket_rounds=2)),
+        # PR 6: sorted two-level merge (bitonic LSM + single GMM pass).
+        # K6 is the *exact* fp32 form at default tiles; K7 stacks it on
+        # the packed/bf16/big-block pipeline it was designed for.
+        ("K6_bitonic_exact", dict(kernel_merge="bitonic")),
+        ("K7_bitonic_packed", dict(kernel_merge="bitonic", packed=True,
+                                   mxu_bf16=True, input_bytes=2,
+                                   block_n=512, block_m=1024)),
     ]
     base = None
     for name, kw in iters:
@@ -85,6 +92,37 @@ def _group_w_ablation(x, k, iters=2):
              f"N={n};D={d};block_m={bm};speedup_vs_w32={base/t:.2f}x")
 
 
+def _merge_sweep(smoke: bool = False, iters=2):
+    """Kernel merge-strategy sweep: measured interpret wall-clock (the
+    CPU floor) plus the modeled TPU bound/mxu_frac for the same config —
+    the derived fields are what the interpret numbers cannot show."""
+    n = 256 if smoke else 1024
+    kd, bn, bm = 16, 128, 256  # bm % kd == 0, bm // kd >= 2
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((n, 192)), jnp.float32)
+    variants = [
+        ("legacy", dict(kernel_merge="legacy")),
+        ("bucket_r2", dict(kernel_merge="legacy", packed=True,
+                           bucket_rounds=2)),
+        ("bitonic", dict(kernel_merge="bitonic")),
+    ]
+    for name, kw in variants:
+        spec = DigcSpec(impl="pallas", k=kd, block_n=bn, block_m=bm, **kw)
+        fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
+        t = timeit(fn, x, iters=iters)
+        e = tpu_digc_estimate(
+            n=n, m=n, d=192, k=kd, dilation=1, block_n=bn, block_m=bm,
+            packed=kw.get("packed", False),
+            bucket_rounds=kw.get("bucket_rounds", 0),
+            kernel_merge=kw["kernel_merge"],
+        )
+        mxu = e["flops"] / 197e12 / e["latency_s"]
+        emit(f"kernel/merge_{name}_us", t * 1e6,
+             f"interpret;N={n};kd={kd};bn={bn};bm={bm};"
+             f"bound={e['bound']};tpu_model_us={e['latency_s'] * 1e6:.1f};"
+             f"mxu_frac={mxu:.3f}")
+
+
 def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     n, d, k = (512, 192, 9) if smoke else (4096, 192, 9)
@@ -97,6 +135,7 @@ def run(smoke: bool = False):
         emit(f"kernel/blocked_bm{bm}_us", t * 1e6, f"N={n};D={d}")
     _merge_ablation(x, k, iters=iters)
     _group_w_ablation(x, k, iters=iters)
+    _merge_sweep(smoke, iters=iters)
     _hillclimb()
     _bucketed_recall(n=256 if smoke else 2048)
     return True

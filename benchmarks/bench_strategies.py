@@ -20,9 +20,11 @@ from repro.core.strategies import recall_vs_exact
 from repro.core.tuner import DigcTuner
 from benchmarks.common import emit, timeit
 
-# Per-impl workload scale: the interpret-mode Pallas kernel emulates the
-# TPU grid on CPU, so it benchmarks at a smaller grid than the XLA tiers.
-GRID_SIDE = {"default": 56, "pallas": 16}
+# Every tier benchmarks the same ViG-224 grid (N=3136) — including the
+# Pallas kernel, which runs in interpret mode on CPU: its wall-clock row
+# is the emulation floor, and the derived text carries the perfmodel's
+# compiled-TPU projection for the same config (PR 6).
+GRID_SIDE = {"default": 56}
 HIGH_RES_SIDE = 112  # N = 12544: ViG @ 1792^2 / patch 16
 BATCH = 2
 TUNE_CACHE = ".digc_tune.json"
@@ -143,6 +145,25 @@ def run(smoke: bool = False):
             tile_desc = ";" + tile_desc
         else:
             spec = _spec_for(builder, h, w, k)
+        if builder.name == "pallas":
+            # The kernel's production pipeline (PR 6): packed keys
+            # through the bitonic LSM+GMM, padding-free divisor tiles.
+            # Interpret wall-clock is an emulation floor, not a TPU
+            # number, so the derived fields attach the perfmodel's
+            # compiled projection (bitonic vs the legacy kd-pass).
+            from repro.core.perfmodel import tpu_digc_estimate
+
+            bn, bm = min(448, n), min(1568, n)
+            spec = spec.replace(packed=True, block_n=bn, block_m=bm)
+            kw = dict(n=n, m=n, d=d, k=k, dilation=1, packed=True,
+                      block_n=bn, block_m=bm)
+            bit = tpu_digc_estimate(**kw, kernel_merge="bitonic")
+            leg = tpu_digc_estimate(**kw, kernel_merge="legacy")
+            tile_desc = (
+                f";interpret=1;packed=1;tile=bn{bn}xbm{bm};"
+                f"tpu_model_us={bit['latency_s'] * BATCH * 1e6:.0f};"
+                f"model_speedup_vs_legacy_merge="
+                f"{leg['latency_s'] / bit['latency_s']:.2f}x")
         fn = jax.jit(lambda a, s=spec: digc(a, spec=s))
         # the reference row IS the speedup denominator: time it once
         t = reference_time(x) if builder.name == "reference" else timeit(

@@ -62,6 +62,9 @@ class DigcSpec:
     packed: Optional[bool] = None
     mxu_bf16: Optional[bool] = None
     bucket_rounds: Optional[int] = None
+    # LSM/GMM realization inside the fused kernel: "bitonic" (default,
+    # sorted two-level merge) or "legacy" (kd-pass extraction)
+    kernel_merge: Optional[str] = None
     # --- cluster (ClusterViG family)
     n_clusters: Optional[int] = None
     n_probe: Optional[int] = None

@@ -59,7 +59,10 @@ from jax import lax
 from repro.core.packedkey import (
     INT_BIG,
     idx_bits_for,
+    merge_sorted,
+    next_pow2,
     pack_keys,
+    topk_keys,
     unpack_keys,
 )
 
@@ -175,24 +178,23 @@ def merge_topk_xla(run_d, run_i, blk_d, blk_i, kd: int):
 
 
 def merge_packed_xla(run_k, blk_k, kd: int):
-    """Packed-key min/mask merge: kd rounds over one int32 candidate
-    array — the XLA mirror of the Pallas kernel's packed GMM. Keys are
-    unique (index bits), so each masked update hits exactly one lane."""
-    cand = jnp.concatenate([run_k, blk_k], axis=-1)
-    out_shape = run_k.shape[:-1] + (kd,)
-    out_col = lax.broadcasted_iota(jnp.int32, out_shape, len(out_shape) - 1)
-
-    def body(t, state):
-        cand, out = state
-        mn = jnp.min(cand, axis=-1)
-        out = jnp.where(out_col == t, mn[..., None], out)
-        cand = jnp.where(cand == mn[..., None], INT_BIG, cand)
-        return cand, out
-
-    _, out = lax.fori_loop(
-        0, kd, body, (cand, jnp.full(out_shape, INT_BIG, jnp.int32))
-    )
-    return out
+    """Packed-key sorted two-level merge — the XLA mirror of the Pallas
+    kernel's bitonic LSM+GMM, built from the same ``core/packedkey``
+    networks: reduce the tile to its sorted top-kd_pad
+    (``topk_keys``), then one O(log kd_pad) ``merge_sorted`` against
+    the running buffer. ``run_k`` must be sorted ascending (the scan
+    invariant: the INT_BIG init is sorted, and this returns sorted).
+    Keys are unique (index bits), so the result is exactly the kd
+    lexicographically-smallest (dist, idx) pairs of the union."""
+    kd_pad = next_pow2(kd)
+    if run_k.shape[-1] < kd_pad:
+        run_k = jnp.concatenate(
+            [run_k, jnp.full(run_k.shape[:-1] + (kd_pad - run_k.shape[-1],),
+                             INT_BIG, jnp.int32)],
+            axis=-1,
+        )
+    merged = merge_sorted(run_k[..., :kd_pad], topk_keys(blk_k, kd_pad))
+    return merged[..., :kd]
 
 
 # ---------------------------------------------------------------------------

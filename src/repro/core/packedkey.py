@@ -22,12 +22,26 @@ path only where two distances agree in their truncated high bits
 (within ~2^-(23-idx_bits) relative). Exact consumers use the unpacked
 paths; ``kernels/digc_topk.py`` and ``core/engine.py`` expose packing
 as an opt-in knob (``DigcSpec.packed`` / ``merge="packed"``).
+
+This module also hosts the **bitonic sort/merge networks** shared by
+the Pallas kernel's LSM+GMM stages and the engine's packed merge
+(``sort_keys`` / ``merge_sorted`` / ``topk_keys``, plus the
+comparator-generic ``bitonic_*`` forms used by the kernel's exact
+two-array path). Every network is built from data-independent
+compare-exchange passes realized as reshape + elementwise min/max —
+no gathers, no data-dependent control flow, static shapes throughout —
+so the same code lowers on the VPU and runs under XLA. Because the
+packed-key integer order *is* the lexicographic (dist, idx) order,
+the bitonic path preserves the lowest-index tie rule exactly.
 """
 
 from __future__ import annotations
 
+from typing import Callable, Sequence
+
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 # Packed-key sentinel (a very large distance with index bits zeroed).
 # A python int so it inlines as a weak-typed literal in kernels instead
@@ -72,3 +86,148 @@ def unpack_keys(keys: jax.Array, idx_bits: int) -> tuple[jax.Array, jax.Array]:
     bits = jnp.left_shift(jnp.right_shift(keys, idx_bits), idx_bits)
     bits = jnp.where(bits >= 0, bits, jnp.invert(bits ^ INT_MIN))
     return jax.lax.bitcast_convert_type(bits, jnp.float32), idx
+
+
+# ---------------------------------------------------------------------------
+# Bitonic compare-exchange networks (LSM local sort + GMM sorted merge)
+#
+# The comparator-generic forms move a *tuple* of arrays through the
+# network in lockstep so the kernel's exact path can sort (dist, idx)
+# pairs under the lexicographic order; the packed wrappers specialize
+# to a single int32 key array whose integer order already encodes it.
+
+# Index fill for padded lanes in the exact two-array path: larger than
+# any real co-node index, so a padding lane loses every distance tie.
+IDX_FILL = 0x7FFFFFFF
+
+
+def next_pow2(v: int) -> int:
+    """Smallest power of two >= v (1 for v <= 1)."""
+    return 1 if v <= 1 else 1 << (v - 1).bit_length()
+
+
+def key_less(a: Sequence[jax.Array], b: Sequence[jax.Array]) -> jax.Array:
+    """Packed-key comparator: integer order == (dist, idx) order."""
+    return a[0] < b[0]
+
+
+def dist_idx_less(a: Sequence[jax.Array], b: Sequence[jax.Array]) -> jax.Array:
+    """Lexicographic (distance, index) comparator — ``lax.top_k``'s tie
+    rule (lowest index wins among equal distances), made explicit."""
+    return (a[0] < b[0]) | ((a[0] == b[0]) & (a[1] < b[1]))
+
+
+def _ce_pass(vals: tuple, dist: int, asc_run: int | None, less: Callable):
+    """One compare-exchange pass at partner distance ``dist`` along the
+    last axis: reshape to (..., L/2d, 2, d) pairs element p with p^d —
+    no gathers, static shapes. ``asc_run`` is the sorted-run length
+    whose bit of p picks the direction (the classic ``i & k`` rule);
+    None means every pair sorts ascending (a merge/clean pass)."""
+    lead = vals[0].shape[:-1]
+    n_items = vals[0].shape[-1]
+    chunks = n_items // (2 * dist)
+    resh = [v.reshape(lead + (chunks, 2, dist)) for v in vals]
+    lo = tuple(r[..., 0, :] for r in resh)
+    hi = tuple(r[..., 1, :] for r in resh)
+    if asc_run is None:
+        asc = True
+    else:
+        # chunk c holds positions [c*2d, (c+1)*2d); all of them share
+        # the asc_run bit because dist < asc_run. broadcasted_iota keeps
+        # this a traced op (TPU rejects 1D iota / captured constants).
+        cid = lax.broadcasted_iota(jnp.int32, (chunks, dist), 0)
+        asc = ((cid * (2 * dist)) // asc_run) % 2 == 0
+    keep = jnp.equal(less(lo, hi), asc)
+    new_lo = tuple(jnp.where(keep, a, b) for a, b in zip(lo, hi))
+    new_hi = tuple(jnp.where(keep, b, a) for a, b in zip(lo, hi))
+    return tuple(
+        jnp.stack((a, b), axis=-2).reshape(lead + (n_items,))
+        for a, b in zip(new_lo, new_hi)
+    )
+
+
+def bitonic_sort(vals: tuple, less: Callable) -> tuple:
+    """Full ascending bitonic sort along the last axis (length must be a
+    power of two): log2(L)*(log2(L)+1)/2 data-independent passes."""
+    n_items = vals[0].shape[-1]
+    if n_items & (n_items - 1):
+        raise ValueError(f"bitonic_sort needs a power-of-two length; got {n_items}")
+    run = 2
+    while run <= n_items:
+        dist = run // 2
+        while dist >= 1:
+            vals = _ce_pass(vals, dist, run, less)
+            dist //= 2
+        run *= 2
+    return vals
+
+
+def bitonic_merge_sorted(a: tuple, b: tuple, less: Callable) -> tuple:
+    """Merge two ascending sorted length-L sequences into the ascending
+    lowest-L of their union in 1 + log2(L) passes.
+
+    The first pass pairs a[i] with b[L-1-i] (a ++ reverse(b) is
+    bitonic): the elementwise winners are exactly the L smallest of the
+    union and form a bitonic sequence, cleaned by log2(L) ascending
+    passes — the paper's GMM heap-insert, as a sorting network."""
+    n_items = a[0].shape[-1]
+    b_rev = tuple(jnp.flip(v, axis=-1) for v in b)
+    take_a = less(a, b_rev)
+    vals = tuple(jnp.where(take_a, x, y) for x, y in zip(a, b_rev))
+    dist = n_items // 2
+    while dist >= 1:
+        vals = _ce_pass(vals, dist, None, less)
+        dist //= 2
+    return vals
+
+
+def bitonic_topk(vals: tuple, k_pad: int, less: Callable, fill: tuple) -> tuple:
+    """Ascending lowest-``k_pad`` of the last axis (any width) — the
+    LSM local-sort stage: pad with ``fill`` sentinels to g*k_pad (g a
+    power of two), sort each width-k_pad group, then tournament-merge
+    group pairs with ``bitonic_merge_sorted`` until one remains.
+    Per-element pass count is O(log^2 k_pad), independent of width."""
+    if k_pad & (k_pad - 1):
+        raise ValueError(f"bitonic_topk needs power-of-two k_pad; got {k_pad}")
+    lead = vals[0].shape[:-1]
+    width = vals[0].shape[-1]
+    groups = next_pow2(-(-width // k_pad))
+    w_pad = groups * k_pad
+    if w_pad != width:
+        vals = tuple(
+            jnp.concatenate(
+                [v, jnp.full(lead + (w_pad - width,), f, v.dtype)], axis=-1
+            )
+            for v, f in zip(vals, fill)
+        )
+    grp = tuple(v.reshape(lead + (groups, k_pad)) for v in vals)
+    grp = bitonic_sort(grp, less)
+    while groups > 1:
+        halves = [v.reshape(lead + (groups // 2, 2, k_pad)) for v in grp]
+        a = tuple(h[..., 0, :] for h in halves)
+        b = tuple(h[..., 1, :] for h in halves)
+        grp = bitonic_merge_sorted(a, b, less)
+        groups //= 2
+    return tuple(v.reshape(lead + (k_pad,)) for v in grp)
+
+
+# -- packed-key wrappers (the shared kernel/engine API) ---------------------
+
+
+def sort_keys(keys: jax.Array) -> jax.Array:
+    """Ascending bitonic sort of packed keys along the last axis
+    (power-of-two length). Integer order == (dist, idx) order, so the
+    result is lexicographically sorted with ties -> lowest index."""
+    return bitonic_sort((keys,), key_less)[0]
+
+
+def merge_sorted(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sorted lowest-L of two ascending sorted packed-key lists (equal
+    power-of-two length L) in 1 + log2(L) passes."""
+    return bitonic_merge_sorted((a,), (b,), key_less)[0]
+
+
+def topk_keys(keys: jax.Array, k_pad: int) -> jax.Array:
+    """Ascending lowest-``k_pad`` packed keys of the last axis (any
+    width; ``INT_BIG``-padded internally)."""
+    return bitonic_topk((keys,), k_pad, key_less, (INT_BIG,))[0]

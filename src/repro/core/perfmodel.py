@@ -97,20 +97,31 @@ def tpu_digc_estimate(n: int, m: int, d: int, k: int, dilation: int,
                       block_n: int = 128, block_m: int = 256,
                       cfg: TPUConfig = TPUConfig(), *,
                       mxu_bf16: bool = False, packed: bool = False,
-                      input_bytes: int = 4, bucket_rounds: int = 0):
+                      input_bytes: int = 4, bucket_rounds: int = 0,
+                      kernel_merge: str = "legacy"):
     """Roofline-style estimate for the fused Pallas DIGC kernel.
 
     Variant knobs (the §Perf hillclimb levers, all implemented in
     kernels/digc_topk.py and validated in interpret mode):
       * mxu_bf16: bf16 x bf16 -> fp32 MXU contraction: full 197 TF/s;
         the fp32 path runs the MXU at ~1/4 rate.
-      * packed:   single int32 (dist|idx) merge keys: ~3 VPU ops per
-        candidate per pass vs ~6 for the two-array form.
+      * packed:   single int32 (dist|idx) merge keys: compare-exchange
+        is a min/max pair (~1.5 ops/elem/pass) vs the two-array
+        predicate+4-select form (~3.5); the legacy extraction passes
+        cost ~3 vs ~6 ops/elem/pass for the same reason.
       * input_bytes: 2 when X/Y are stored bf16 in HBM.
-      * bucket_rounds r>0: per-tile bucketed pre-reduction — r min-pass
-        sweeps fold bm columns into kd buckets, then the running merge
-        touches only r*kd survivors. O(r) passes instead of O(kd);
-        recall@kd measured >= 0.99 at r=2 on ViG workloads.
+      * bucket_rounds r>0 (legacy only): per-tile bucketed pre-reduction
+        — r min-pass sweeps fold bm columns into kd buckets, then the
+        running merge touches only r*kd survivors. O(r) passes instead
+        of O(kd); recall@kd measured >= 0.99 at r=2 on ViG workloads.
+      * kernel_merge: "legacy" = kd sequential extraction sweeps over
+        (kd + block_m) candidates per tile; "bitonic" = the sorted
+        two-level merge — per tile, a local group sort costs
+        log2(kd_pad)*(log2(kd_pad)+1)/2 passes over bm elements, the
+        tournament reduce a further (log2(kd_pad)+1) amortized passes
+        (geometric over rounds), and the GMM fold one (log2(kd_pad)+1)-
+        pass merge over kd_pad — so per-element passes drop from
+        O(kd) to O(log^2 kd_pad), independent of bm, and stay exact.
     """
     kd = k * dilation
     flops = digc_flops(n, m, d)
@@ -119,14 +130,21 @@ def tpu_digc_estimate(n: int, m: int, d: int, k: int, dilation: int,
     bytes_moved = digc_hbm_bytes(n, m, d, kd, block_n=block_n,
                                  streaming=True, dtype_bytes=input_bytes)
     memory_s = bytes_moved / cfg.hbm_bw
-    # Merge cost: kd extraction sweeps over (block_n, kd + block_m) per tile.
     tiles = ceil_div(n, block_n) * ceil_div(m, block_m)
-    ops_per_elem = 3 if packed else 6
-    if bucket_rounds > 0:
+    if kernel_merge == "bitonic":
+        kd_pad = 1 if kd <= 1 else 1 << (kd - 1).bit_length()
+        lg = clog2(kd_pad)
+        ce_ops = 1.5 if packed else 3.5  # ops per element per CE pass
+        local_sort = block_m * (lg * (lg + 1) // 2)  # LSM group sort
+        tournament = block_m * (lg + 1)  # geometric sum over rounds
+        gmm = kd_pad * (lg + 1)  # one sorted merge per tile
+        vpu_ops = tiles * block_n * (local_sort + tournament + gmm) * ce_ops
+    elif bucket_rounds > 0:
         sweep = tiles * block_n * block_m * (3 * bucket_rounds - 1)
         fine = tiles * kd * block_n * (kd + bucket_rounds * kd) * 3
         vpu_ops = sweep + fine
     else:
+        ops_per_elem = 3 if packed else 6
         vpu_ops = tiles * kd * block_n * (kd + block_m) * ops_per_elem
     merge_s = vpu_ops / (cfg.vpu_lanes * cfg.clock_hz)
     naive_bytes = digc_hbm_bytes(n, m, d, kd, block_n=block_n,
@@ -246,8 +264,14 @@ def engine_cost_estimate(
         final = 0.0 if nb_m == 1 else rows * nb_m * kd * c["topk"]
         merge_s = build + rounds + final
     elif merge == "packed":
+        # Bitonic two-level merge (core/packedkey networks): group sort
+        # + tournament + sorted fold, O(log^2 kd_pad) passes per elem.
+        kd_pad = 1 if kd <= 1 else 1 << (kd - 1).bit_length()
+        lg = clog2(kd_pad)
         pack = tile_elems * 2 * c["lane"]
-        passes = rows * nb_m * kd * (kd + bm) * 2 * c["lane"]
+        passes = rows * nb_m * (
+            bm * (lg * (lg + 1) // 2 + lg + 1) + kd_pad * (lg + 1)
+        ) * 1.5 * c["lane"]
         merge_s = pack + passes
     else:  # "topk"
         merge_s = rows * nb_m * (kd + bm) * c["topk"]
@@ -268,4 +292,55 @@ def engine_cost_estimate(
         "spill_s": spill_s,
         "total_s": total,
         "live_tile_bytes": live_tile_bytes,
+    }
+
+
+# Interpret-mode emulation constants (fitted to CPU wall-clock): each
+# grid program pays a python/XLA dispatch, plus per-element emulated
+# vector work. Huge relative to the engine on purpose — the prior must
+# keep interpret-mode kernel configs out of the measured top-N on CPU
+# while letting compiled TPU configs compete on roofline terms.
+_INTERPRET_PROGRAM_S = 2e-3
+_INTERPRET_ELEM_S = 2e-8
+
+
+def kernel_cost_estimate(
+    n: int,
+    m: int,
+    d: int,
+    kd: int,
+    *,
+    b: int = 1,
+    block_n: int = 128,
+    block_m: int = 256,
+    kernel_merge: str = "bitonic",
+    packed: bool = False,
+    mxu_bf16: bool = False,
+    backend: str = "cpu",
+    interpret: bool | None = None,
+) -> dict:
+    """Analytical cost of one fused-kernel DIGC call (tuner priors).
+
+    The engine/kernel choice is a *measured* decision (core/tuner.py);
+    this prior only has to rank sensibly: on a TPU backend the cost is
+    the roofline ``tpu_digc_estimate`` scaled by batch, everywhere else
+    the interpret-mode emulation penalty dominates by construction.
+    """
+    if interpret is None:
+        interpret = backend != "tpu"
+    n_pad = ceil_div(n, block_n) * block_n
+    m_pad = ceil_div(m, block_m) * block_m
+    if interpret:
+        programs = b * ceil_div(n, block_n) * ceil_div(m, block_m)
+        total = (programs * _INTERPRET_PROGRAM_S
+                 + b * n_pad * m_pad * _INTERPRET_ELEM_S)
+        return {"total_s": total, "interpret": True, "bound": "interpret"}
+    est = tpu_digc_estimate(
+        n_pad, m_pad, d, kd, 1, block_n=block_n, block_m=block_m,
+        mxu_bf16=mxu_bf16, packed=packed, kernel_merge=kernel_merge,
+    )
+    return {
+        "total_s": est["latency_s"] * b,
+        "interpret": False,
+        "bound": est["bound"],
     }

@@ -3,11 +3,17 @@
 GraphLeap's lesson (PAPERS.md, arXiv 2604.21290) is that a decoupled
 construction dataflow leaves most of its headroom on the table until
 the tile/merge configuration is *tuned per workload*. This module
-picks ``(block_n, block_m, merge, fuse_norms)`` per
-``(backend, B, N, M, D, kd, causal, pos_bias)`` workload:
+picks ``(block_n, block_m, merge, fuse_norms)`` — or a fused-kernel
+config ``(impl="pallas", block_n, block_m, kernel_merge)`` — per
+``(backend, B, N, M, D, kd, causal, pos_bias)`` workload, so
+kernel-vs-engine is a measured per-workload choice, not a code path:
 
-  1. rank the candidate grid with the analytical engine cost model
-     (``perfmodel.engine_cost_estimate``) — priors;
+  1. rank the candidate grid with the analytical cost models
+     (``perfmodel.engine_cost_estimate`` for engine schedules,
+     ``perfmodel.kernel_cost_estimate`` for kernel configs — the
+     latter's interpret-mode penalty keeps emulated kernels out of the
+     measured top-N off-TPU while compiled TPU configs compete on
+     roofline terms) — priors;
   2. measure the top-ranked candidates on the live workload arrays
      (median wall time over a few jitted calls) — refinement;
   3. verify each measured candidate's indices against an
@@ -46,26 +52,51 @@ from typing import Any, Optional, Sequence
 import numpy as np
 
 from repro.core.builder import DigcSpec
-from repro.core.perfmodel import engine_cost_estimate
+from repro.core.perfmodel import (
+    engine_cost_estimate,
+    kernel_cost_estimate,
+    kernel_tile_defaults,
+)
 
 # Knobs the tuner owns on a DigcSpec.
-TUNED_KNOBS = ("block_n", "block_m", "merge", "fuse_norms")
+TUNED_KNOBS = ("block_n", "block_m", "merge", "fuse_norms", "kernel_merge")
 
 _BLOCK_N_CANDIDATES = (None, 256, 512, 1024)
 _BLOCK_M_CANDIDATES = (256, 512, 1024, 2048, 4096)
 _EXACT_MERGES = ("select", "topk")
+# Fused-kernel candidates compete as first-class configs: the LSM/GMM
+# realization is a measured per-workload choice (ISSUE 6 tentpole).
+_KERNEL_MERGES = ("bitonic", "legacy")
+_KERNEL_TILE_FALLBACKS = ((128, 256), (256, 512))
 
 
 @dataclasses.dataclass(frozen=True)
 class TileConfig:
-    """One engine schedule: the tuner's unit of search."""
+    """One schedule — engine tiles *or* a fused-kernel config: the
+    tuner's unit of search. ``impl`` picks the tier ("blocked" engine
+    schedules keep their historical field meanings; "pallas" configs
+    carry kernel tile dims + the ``kernel_merge`` variant and use
+    ``merge="kernel"`` as a display placeholder)."""
 
     block_n: Optional[int]
     block_m: int
     merge: str
     fuse_norms: bool = False
+    impl: str = "blocked"
+    kernel_merge: Optional[str] = None
 
     def apply(self, spec: DigcSpec) -> DigcSpec:
+        if self.impl == "pallas":
+            return spec.replace(
+                impl="pallas",
+                block_n=self.block_n,
+                block_m=self.block_m,
+                kernel_merge=self.kernel_merge,
+                # engine-only knobs must be unset for the kernel builder
+                merge=None,
+                fuse_norms=None,
+                group_w=None,
+            )
         return spec.replace(
             block_n=self.block_n,
             block_m=self.block_m,
@@ -172,7 +203,8 @@ class DigcTuner:
     # -- candidate generation -------------------------------------------
 
     def candidates(
-        self, n: int, m: int, *, allow_approx: bool = False
+        self, n: int, m: int, *, d: Optional[int] = None,
+        kd: Optional[int] = None, allow_approx: bool = False
     ) -> list[TileConfig]:
         block_ns = {bn if (bn is None or bn < n) else None
                     for bn in _BLOCK_N_CANDIDATES}
@@ -185,12 +217,29 @@ class DigcTuner:
                 for merge in merges:
                     for fuse in (False, True):
                         out.append(TileConfig(bn, bm, merge, fuse))
+        # Fused-kernel configs: the VMEM-budgeted workload default tile
+        # plus fixed fallbacks, each with both LSM/GMM realizations.
+        # All exact (unpacked), so they verify against the same oracle.
+        kernel_tiles = set(_KERNEL_TILE_FALLBACKS)
+        if d is not None and kd is not None:
+            kernel_tiles.add(kernel_tile_defaults(n, m, d, kd))
+        for bn, bm in sorted(kernel_tiles):
+            for km in _KERNEL_MERGES:
+                out.append(TileConfig(bn, bm, "kernel", False,
+                                      impl="pallas", kernel_merge=km))
         return out
 
     def rank(
         self, cands: list[TileConfig], *, b, n, m, d, kd
     ) -> list[TileConfig]:
         def prior(cfg: TileConfig) -> float:
+            if cfg.impl == "pallas":
+                return kernel_cost_estimate(
+                    n, m, d, kd, b=b, block_n=cfg.block_n or 128,
+                    block_m=cfg.block_m,
+                    kernel_merge=cfg.kernel_merge or "bitonic",
+                    backend=self.backend,
+                )["total_s"]
             return engine_cost_estimate(
                 n, m, d, kd, b=b, block_n=cfg.block_n, block_m=cfg.block_m,
                 merge=cfg.merge, fuse_norms=cfg.fuse_norms,
@@ -207,7 +256,10 @@ class DigcTuner:
             return None
         return TuneResult(
             TileConfig(e["block_n"], e["block_m"], e["merge"],
-                       e.get("fuse_norms", False)),
+                       e.get("fuse_norms", False),
+                       # pre-PR-6 entries are engine schedules
+                       e.get("impl", "blocked"),
+                       e.get("kernel_merge")),
             e.get("us_per_call", float("nan")),
             e.get("exact_match", True),
             "cached",
@@ -264,7 +316,7 @@ class DigcTuner:
                 return cached.config.apply(spec), cached
 
         cands = self.rank(
-            self.candidates(n, m, allow_approx=allow_approx),
+            self.candidates(n, m, d=d, kd=kd, allow_approx=allow_approx),
             b=b, n=n, m=m, d=d, kd=kd,
         )[: self.max_measure]
 
@@ -341,6 +393,7 @@ class DigcTuner:
             stage_spec = spec.replace(
                 k=work["k"], dilation=work["dilation"],
                 block_n=None, block_m=None, merge=None, fuse_norms=None,
+                kernel_merge=None,
             )
             tuned, result = self.tune(probe, y_probe, spec=stage_spec,
                                       force=force)
@@ -404,6 +457,7 @@ class VigSchedule:
                 "block_m": s.block_m,
                 "merge": s.merge,
                 "fuse_norms": bool(s.fuse_norms),
+                "kernel_merge": s.kernel_merge,
             }
             for si, s in enumerate(self.stages)
         ]

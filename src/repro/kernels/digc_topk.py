@@ -10,23 +10,33 @@ TPU-native port of the paper's DCM + LSM + GMM pipeline (DESIGN.md §2):
     FPGA's deep pipelining.
   * DCM: one MXU contraction per tile, `x_blk @ y_blk^T`, plus the
     rank-1 norm terms. fp32 accumulation.
-  * LSM+GMM: a running sorted top-(k*d) (dist, idx) buffer lives in the
-    *output* VMEM blocks (revisited across the streaming dimension, the
-    flash-attention accumulator pattern). Each tile's candidates are
-    merged with k*d rounds of (min, argmin, mask) — sort-free, fully
-    vectorized on the VPU, ties broken by lowest index because the
-    candidate layout is [running | tile] and running indices always
-    precede tile indices.
+  * LSM (default ``kernel_merge="bitonic"``): each (bn, bm) tile is
+    reduced to its sorted top-kd_pad by a partial bitonic sort — sort
+    width-kd_pad groups in O(log^2 kd_pad) data-independent VPU
+    passes, then tournament-merge group pairs (core/packedkey.py, the
+    networks shared with the engine's packed merge).
+  * GMM: the tile's sorted list folds into a running sorted buffer
+    with ONE O(log kd_pad) bitonic merge of two sorted sequences — the
+    paper's heap insertion as a sorting network. The buffer lives in a
+    VMEM **scratch accumulator** (``scratch_shapes``), not in
+    revisited output blocks: outputs are written once per (b, i)
+    row-block, on the last streaming step.
+  * ``kernel_merge="legacy"`` keeps the previous kd-sequential
+    (min, argmin, mask) extraction merge (and its ``bucket_rounds``
+    approximate pre-reduction) as a measured alternative — the tuner
+    treats old-vs-new as a per-workload choice.
   * NSM (stride-d selection) happens in the wrapper (`ops.digc_topk`);
     the kernel returns the full sorted top-(k*d) list, matching the
     paper's modular split.
 
 The full N x M distance matrix never exists in HBM (or VMEM): per-tile
 working set = block_n*D + block_m*D + block_n*block_m + 2*block_n*kd
-floats, chosen to fit VMEM with MXU-aligned tile shapes.
+floats (+ 2*block_n*kd_pad scratch), chosen to fit VMEM with
+MXU-aligned tile shapes.
 
 Validated in interpret mode on CPU against ``ref.digc_reference``; the
-lowering target is TPU v5e.
+lowering target is TPU v5e. ``interpret=None`` resolves to compiled on
+a TPU backend and interpret everywhere else.
 """
 
 from __future__ import annotations
@@ -38,16 +48,30 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compat import tpu_compiler_params
 
-# Packed (dist|idx) int32 keys are shared with the XLA engine's packed
-# merge (core/engine.py) — one format across tiers (DESIGN.md §5).
-from repro.core.packedkey import INT_BIG, idx_bits_for
+# Packed (dist|idx) int32 keys and the bitonic sort/merge networks are
+# shared with the XLA engine's packed merge (core/engine.py) — one
+# format and one network family across tiers (DESIGN.md §5).
+from repro.core.packedkey import (
+    IDX_FILL,
+    INT_BIG,
+    bitonic_merge_sorted,
+    bitonic_topk,
+    dist_idx_less,
+    idx_bits_for,
+    merge_sorted,
+    next_pow2,
+    topk_keys,
+)
 from repro.core.packedkey import pack_keys as _pack_keys
 from repro.core.packedkey import unpack_keys as _unpack_keys
 
 BIG = float(1e30)  # plain float: jnp scalars would be captured as consts
+
+KERNEL_MERGES = ("bitonic", "legacy")
 
 
 def _bucket_reduce(blk_k, kd: int, rounds: int):
@@ -71,10 +95,10 @@ def _bucket_reduce(blk_k, kd: int, rounds: int):
 
 
 def _merge_body_packed(kd: int, run_k, blk_k):
-    """Packed-key merge: kd passes of (min, compare-mask) over one int32
-    candidate array. ~2 VPU ops/element/pass vs ~4 for the two-array
-    form, half the VMEM operand traffic. Keys are unique (index bits),
-    so the masked update hits exactly one lane per pass."""
+    """Legacy packed-key merge: kd passes of (min, compare-mask) over
+    one int32 candidate array. ~2 VPU ops/element/pass vs ~4 for the
+    two-array form, half the VMEM operand traffic. Keys are unique
+    (index bits), so the masked update hits exactly one lane per pass."""
     cand = jnp.concatenate([run_k, blk_k], axis=1)  # (bn, kd+bm) int32
     bn = cand.shape[0]
     out_col = lax.broadcasted_iota(jnp.int32, (bn, kd), 1)
@@ -93,11 +117,13 @@ def _merge_body_packed(kd: int, run_k, blk_k):
 
 
 def _merge_body(kd: int, run_d, run_i, blk_d, blk_i):
-    """k*d rounds of (min, argmin, mask) over [running | tile] candidates.
+    """Legacy merge: k*d rounds of (min, argmin, mask) over
+    [running | tile] candidates.
 
     Returns the new sorted running (dist, idx) pair. All ops are
     elementwise/reduction VPU ops — no sort networks, no data-dependent
-    control flow (the FPGA heap's TPU-idiomatic replacement).
+    control flow, but kd *sequential* extraction passes per tile (the
+    cost the bitonic path removes).
     """
     cand_d = jnp.concatenate([run_d, blk_d], axis=1)  # (bn, kd+bm)
     cand_i = jnp.concatenate([run_i, blk_i], axis=1)
@@ -126,20 +152,25 @@ def _merge_body(kd: int, run_d, run_i, blk_d, blk_i):
     return out_d, out_i
 
 
-def _digc_kernel(x_ref, y_ref, *rest, kd: int, m_total: int, block_m: int,
-                 block_n: int, nsteps_m: int, has_pos: bool, causal: bool,
-                 packed: bool, mxu_bf16: bool, idx_bits: int = 16,
-                 bucket_rounds: int = 0):
-    if has_pos:
-        p_ref = rest[0]
-        out_refs = rest[1:]
-    else:
-        p_ref = None
-        out_refs = rest
+def _digc_kernel(x_ref, y_ref, *rest, kd: int, kd_pad: int, m_total: int,
+                 block_m: int, block_n: int, has_pos: bool, causal: bool,
+                 packed: bool, mxu_bf16: bool, kernel_merge: str,
+                 idx_bits: int = 16, bucket_rounds: int = 0):
+    refs = list(rest)
+    p_ref = refs.pop(0) if has_pos else None
     if packed:
-        (ok_ref,) = out_refs  # int32 packed (dist|idx) running buffer
+        ok_ref = refs.pop(0)  # int32 packed (dist|idx) output
     else:
-        od_ref, oi_ref = out_refs
+        od_ref = refs.pop(0)
+        oi_ref = refs.pop(0)
+    bitonic = kernel_merge == "bitonic"
+    if bitonic:
+        # VMEM scratch accumulator (bn, kd_pad): the running sorted
+        # buffer. Outputs are written once, on the last streaming step.
+        if packed:
+            (ak_ref,) = refs
+        else:
+            ad_ref, ai_ref = refs
     # grid = (B, N/bn, M/bm): program_id(0) is the batch index (its
     # blocks are squeezed out of the refs by the None BlockSpec dims).
     i = pl.program_id(1)
@@ -147,7 +178,13 @@ def _digc_kernel(x_ref, y_ref, *rest, kd: int, m_total: int, block_m: int,
 
     @pl.when(j == 0)
     def _init():
-        if packed:
+        if bitonic:
+            if packed:
+                ak_ref[...] = jnp.full(ak_ref.shape, INT_BIG, jnp.int32)
+            else:
+                ad_ref[...] = jnp.full(ad_ref.shape, BIG, jnp.float32)
+                ai_ref[...] = jnp.full(ai_ref.shape, IDX_FILL, jnp.int32)
+        elif packed:
             ok_ref[...] = jnp.full(ok_ref.shape, INT_BIG, jnp.int32)
         else:
             od_ref[...] = jnp.full(od_ref.shape, BIG, jnp.float32)
@@ -182,9 +219,25 @@ def _digc_kernel(x_ref, y_ref, *rest, kd: int, m_total: int, block_m: int,
 
         if packed:
             blk_k = _pack_keys(d_blk, cols, idx_bits)
-            if bucket_rounds > 0 and bm % kd == 0 and bm // kd >= 2:
-                blk_k = _bucket_reduce(blk_k, kd, bucket_rounds)
-            ok_ref[...] = _merge_body_packed(kd, ok_ref[...], blk_k)
+            if bitonic:
+                # LSM: sorted top-kd_pad of the tile; GMM: one sorted
+                # merge into the running scratch buffer.
+                ak_ref[...] = merge_sorted(
+                    ak_ref[...], topk_keys(blk_k, kd_pad)
+                )
+            else:
+                if bucket_rounds > 0:
+                    blk_k = _bucket_reduce(blk_k, kd, bucket_rounds)
+                ok_ref[...] = _merge_body_packed(kd, ok_ref[...], blk_k)
+        elif bitonic:
+            tile_d, tile_i = bitonic_topk(
+                (d_blk, cols), kd_pad, dist_idx_less, (BIG, IDX_FILL)
+            )
+            run_d, run_i = bitonic_merge_sorted(
+                (ad_ref[...], ai_ref[...]), (tile_d, tile_i), dist_idx_less
+            )
+            ad_ref[...] = run_d
+            ai_ref[...] = run_i
         else:
             run_d, run_i = _merge_body(kd, od_ref[...], oi_ref[...], d_blk, cols)
             od_ref[...] = run_d
@@ -200,11 +253,23 @@ def _digc_kernel(x_ref, y_ref, *rest, kd: int, m_total: int, block_m: int,
     else:
         _do_tile()
 
+    if bitonic:
+        # Single unpack/write per (b, i) row-block — the scratch
+        # accumulator replaces the revisited-output-block pattern.
+        @pl.when(j == pl.num_programs(2) - 1)
+        def _final():
+            if packed:
+                ok_ref[...] = ak_ref[..., :kd]
+            else:
+                od_ref[...] = ad_ref[..., :kd]
+                oi_ref[...] = ai_ref[..., :kd]
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("kd", "block_n", "block_m", "interpret", "m_valid",
-                     "causal", "packed", "mxu_bf16", "bucket_rounds"),
+                     "causal", "packed", "mxu_bf16", "bucket_rounds",
+                     "kernel_merge"),
 )
 def digc_topk_pallas(
     x: jax.Array,
@@ -214,12 +279,13 @@ def digc_topk_pallas(
     kd: int,
     block_n: int = 128,
     block_m: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     m_valid: Optional[int] = None,
     causal: bool = False,
     packed: bool = False,
     mxu_bf16: bool = False,
     bucket_rounds: int = 0,
+    kernel_merge: Optional[str] = None,
 ):
     """Run the fused kernel with batch as the leading grid dimension.
 
@@ -230,7 +296,37 @@ def digc_topk_pallas(
     for unbatched input — sorted ascending by distance. ``m_valid`` is
     the true (unpadded) co-node count; columns >= m_valid are masked to
     BIG inside the kernel.
+
+    ``kernel_merge``: "bitonic" (default; partial bitonic LSM + sorted
+    GMM, exact when unpacked) or "legacy" (kd-pass extraction merge).
+    ``bucket_rounds`` implies/requires the legacy packed path.
+    ``interpret=None`` resolves to compiled on TPU, interpret elsewhere.
     """
+    if kernel_merge is None:
+        kernel_merge = "legacy" if bucket_rounds > 0 else "bitonic"
+    if kernel_merge not in KERNEL_MERGES:
+        raise ValueError(
+            f"unknown kernel_merge {kernel_merge!r}; expected one of "
+            f"{KERNEL_MERGES}"
+        )
+    if bucket_rounds > 0:
+        # The preconditions the kernel used to check (and silently skip
+        # on) are wrapper-level contract violations now.
+        if kernel_merge != "legacy":
+            raise ValueError(
+                "bucket_rounds pre-reduction belongs to the legacy merge; "
+                f"got kernel_merge={kernel_merge!r} with "
+                f"bucket_rounds={bucket_rounds}"
+            )
+        if not packed:
+            raise ValueError("bucket_rounds requires packed=True keys")
+        if block_m % kd != 0 or block_m // kd < 2:
+            raise ValueError(
+                "bucket_rounds requires block_m % kd == 0 and "
+                f"block_m // kd >= 2; got block_m={block_m}, kd={kd}"
+            )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]
@@ -245,19 +341,21 @@ def digc_topk_pallas(
         raise ValueError("packed keys hold u16 indices: require M <= 65536")
     m_real = m_valid if m_valid is not None else m
     idx_bits = idx_bits_for(m_real) if packed else 16
+    kd_pad = next_pow2(kd)
     grid = (b, n // block_n, m // block_m)
 
     kernel = functools.partial(
         _digc_kernel,
         kd=kd,
+        kd_pad=kd_pad,
         m_total=m_valid if m_valid is not None else m,
         block_m=block_m,
         block_n=block_n,
-        nsteps_m=grid[2],
         has_pos=pos_bias is not None,
         causal=causal,
         packed=packed,
         mxu_bf16=mxu_bf16,
+        kernel_merge=kernel_merge,
         idx_bits=idx_bits,
         bucket_rounds=bucket_rounds,
     )
@@ -284,12 +382,22 @@ def digc_topk_pallas(
             jax.ShapeDtypeStruct((b, n, kd), jnp.int32),
         ]
         out_specs = [run_spec, run_spec]
+    scratch_shapes = []
+    if kernel_merge == "bitonic":
+        if packed:
+            scratch_shapes = [pltpu.VMEM((block_n, kd_pad), jnp.int32)]
+        else:
+            scratch_shapes = [
+                pltpu.VMEM((block_n, kd_pad), jnp.float32),
+                pltpu.VMEM((block_n, kd_pad), jnp.int32),
+            ]
     outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")

@@ -22,9 +22,16 @@ def _ceil_to(v: int, mult: int) -> int:
     return ((v + mult - 1) // mult) * mult
 
 
+def _auto_interpret(interpret):
+    """interpret=None -> compiled on a TPU backend, interpret elsewhere."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
 def mrconv(x: jax.Array, y: jax.Array, idx: jax.Array, *,
            block_n: int = 128, block_m: int = 512,
-           interpret: bool = True) -> jax.Array:
+           interpret: Optional[bool] = None) -> jax.Array:
     """Fused max-relative aggregation with automatic padding.
     x: (B, N, D) | (N, D), y: (B, M, D) | (M, D), idx: (B, N, k) | (N, k)
     -> aggregate of x's rank."""
@@ -46,7 +53,7 @@ def mrconv(x: jax.Array, y: jax.Array, idx: jax.Array, *,
     y_p = jnp.pad(y, ((0, 0), (0, m_pad - m), (0, 0)))
     idx_p = jnp.pad(idx, ((0, 0), (0, n_pad - n), (0, 0)))
     out = mrconv_pallas(x_p, y_p, idx_p, block_n=block_n, block_m=block_m,
-                        interpret=interpret)
+                        interpret=_auto_interpret(interpret))
     out = out[:, :n].astype(x.dtype)
     return out[0] if squeeze else out
 
@@ -60,12 +67,13 @@ def digc_topk(
     pos_bias: Optional[jax.Array] = None,
     block_n: Optional[int] = None,
     block_m: Optional[int] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     return_dists: bool = False,
     causal: bool = False,
     packed: bool = False,
     mxu_bf16: bool = False,
     bucket_rounds: int = 0,
+    kernel_merge: Optional[str] = None,
 ):
     """Fused-kernel DIGC with automatic padding and dilated selection.
 
@@ -73,6 +81,8 @@ def digc_topk(
     (B, N, M) | (N, M). Returns idx (B, N, k) [, dist] matching x's rank.
     Tile sizes default to the workload-adaptive VMEM-budgeted choice
     (``perfmodel.kernel_tile_defaults``) instead of one fixed shape.
+    ``kernel_merge`` selects the LSM/GMM realization ("bitonic" default,
+    "legacy" kd-pass); ``interpret=None`` is compiled-on-TPU auto.
     """
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
     _, n, feat = x3.shape
@@ -102,12 +112,13 @@ def digc_topk(
         kd=kd,
         block_n=block_n,
         block_m=block_m,
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
         m_valid=m,
         causal=causal,
         packed=packed,
         mxu_bf16=mxu_bf16,
         bucket_rounds=bucket_rounds,
+        kernel_merge=kernel_merge,
     )
     dist = dist[:, :n, ::dilation]
     idx = idx[:, :n, ::dilation]
@@ -128,10 +139,11 @@ def _build_pallas(x, y, pos_bias, spec: DigcSpec):
         causal=spec.causal, return_dists=True,
         block_n=spec.block_n,  # None = workload-adaptive VMEM-budgeted tiles
         block_m=spec.block_m,
-        interpret=spec.interpret if spec.interpret is not None else True,
+        interpret=spec.interpret,  # None = compiled on TPU, interpret off-TPU
         packed=bool(spec.packed),
         mxu_bf16=bool(spec.mxu_bf16),
         bucket_rounds=spec.bucket_rounds if spec.bucket_rounds is not None else 0,
+        kernel_merge=spec.kernel_merge,
     )
 
 
@@ -140,7 +152,7 @@ register(GraphBuilder(
     build=_build_pallas,
     knobs=frozenset({
         "block_n", "block_m", "interpret", "packed", "mxu_bf16",
-        "bucket_rounds",
+        "bucket_rounds", "kernel_merge",
     }),
     exact=True,  # packed / bucket_rounds knobs opt into approximation
     supports_pos_bias=True,

@@ -1,0 +1,207 @@
+"""Sorted two-level merge (LSM+GMM) inside the fused Pallas kernel.
+
+The bitonic merge is the kernel's default exact path; this suite pins
+its parity against the pure-jnp oracle across every kernel feature
+(pos_bias, causal, ragged co-node tails, dilation, packed keys, bf16
+MXU), its bit-equality with the legacy kd-pass merge, and the wrapper
+contract errors for invalid merge/bucketing combinations.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import BIG
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.digc_topk import KERNEL_MERGES, digc_topk_pallas
+
+
+def _rand(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _assert_exact(d_ref, i_ref, d_k, i_k):
+    valid = np.asarray(d_ref) < BIG / 2
+    np.testing.assert_array_equal(valid, np.asarray(d_k) < BIG / 2)
+    np.testing.assert_array_equal(
+        np.where(valid, np.asarray(i_ref), -1),
+        np.where(valid, np.asarray(i_k), -1))
+    np.testing.assert_allclose(
+        np.where(valid, np.asarray(d_ref), 0.0),
+        np.where(valid, np.asarray(d_k), 0.0), rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_merges_registry():
+    assert KERNEL_MERGES == ("bitonic", "legacy")
+
+
+@pytest.mark.parametrize("n,m,kd", [(16, 128, 4), (32, 300, 9), (8, 128, 16)])
+def test_bitonic_parity_basic(n, m, kd):
+    rng = np.random.default_rng(n + m)
+    x, y = _rand(rng, n, 24), _rand(rng, m, 24)
+    d_ref, i_ref = kref.digc_reference(x, y, kd=kd)
+    i_k, d_k = ops.digc_topk(x, y, k=kd, block_n=16, block_m=128,
+                             kernel_merge="bitonic", return_dists=True)
+    _assert_exact(d_ref, i_ref, d_k, i_k)
+
+
+def test_bitonic_parity_pos_bias():
+    rng = np.random.default_rng(7)
+    x, y = _rand(rng, 24, 16), _rand(rng, 200, 16)
+    p = _rand(rng, 24, 200)
+    d_ref, i_ref = kref.digc_reference(x, y, p, kd=6)
+    i_k, d_k = ops.digc_topk(x, y, k=6, pos_bias=p, block_n=8, block_m=128,
+                             kernel_merge="bitonic", return_dists=True)
+    _assert_exact(d_ref, i_ref, d_k, i_k)
+
+
+def test_bitonic_parity_causal():
+    rng = np.random.default_rng(8)
+    x = _rand(rng, 96, 12)
+    i_k, d_k = ops.digc_topk(x, x, k=5, causal=True, block_n=32,
+                             block_m=32, kernel_merge="bitonic",
+                             return_dists=True)
+    d_full = np.asarray(kref.pairwise_sq_dists(x, x))
+    for i in range(96):
+        allowed = d_full[i, : i + 1]
+        order = np.argsort(allowed, kind="stable")[:5]
+        got = np.asarray(i_k)[i]
+        valid = np.asarray(d_k)[i] < BIG / 2
+        assert valid.sum() == min(5, i + 1)
+        np.testing.assert_array_equal(got[valid], order[: valid.sum()])
+
+
+def test_bitonic_parity_ragged_tail():
+    """M not a multiple of block_m: padded columns masked inside the
+    kernel, never emitted."""
+    rng = np.random.default_rng(9)
+    x, y = _rand(rng, 20, 8), _rand(rng, 130, 8)
+    d_ref, i_ref = kref.digc_reference(x, y, kd=7)
+    i_k, d_k = ops.digc_topk(x, y, k=7, block_n=16, block_m=128,
+                             kernel_merge="bitonic", return_dists=True)
+    _assert_exact(d_ref, i_ref, d_k, i_k)
+    assert np.asarray(i_k).max() < 130
+
+
+def test_bitonic_parity_dilation():
+    rng = np.random.default_rng(10)
+    x, y = _rand(rng, 16, 8), _rand(rng, 256, 8)
+    d_ref, i_ref = kref.digc_reference(x, y, kd=8)
+    i_k = ops.digc_topk(x, y, k=4, dilation=2, block_n=16, block_m=128,
+                        kernel_merge="bitonic")
+    np.testing.assert_array_equal(np.asarray(i_k),
+                                  np.asarray(i_ref)[:, ::2])
+
+
+def test_bitonic_matches_legacy_exactly():
+    """Both exact merges implement the same selection (incl. the
+    lowest-index tie rule): identical indices, identical distances."""
+    rng = np.random.default_rng(11)
+    # integer-valued features => many exact distance ties
+    x = jnp.asarray(rng.integers(0, 3, (32, 8)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 3, (256, 8)), jnp.float32)
+    outs = {}
+    for km in KERNEL_MERGES:
+        d_k, i_k = digc_topk_pallas(x, y, kd=9, block_n=16, block_m=128,
+                                    kernel_merge=km)
+        outs[km] = (np.asarray(d_k), np.asarray(i_k))
+    np.testing.assert_array_equal(outs["bitonic"][1], outs["legacy"][1])
+    np.testing.assert_array_equal(outs["bitonic"][0], outs["legacy"][0])
+
+
+def test_bitonic_packed_recall():
+    rng = np.random.default_rng(12)
+    x, y = _rand(rng, 64, 32), _rand(rng, 512, 32)
+    _, i_ref = kref.digc_reference(x, y, kd=8)
+    i_k = ops.digc_topk(x, y, k=8, block_n=32, block_m=128,
+                        kernel_merge="bitonic", packed=True)
+    hits = sum(
+        len(set(np.asarray(i_k)[r]) & set(np.asarray(i_ref)[r]))
+        for r in range(64))
+    assert hits / (64 * 8) >= 0.99
+
+
+def test_bitonic_bf16_recall():
+    rng = np.random.default_rng(13)
+    x, y = _rand(rng, 48, 64), _rand(rng, 384, 64)
+    _, i_ref = kref.digc_reference(x, y, kd=6)
+    i_k = ops.digc_topk(x, y, k=6, block_n=16, block_m=128,
+                        kernel_merge="bitonic", mxu_bf16=True)
+    hits = sum(
+        len(set(np.asarray(i_k)[r]) & set(np.asarray(i_ref)[r]))
+        for r in range(48))
+    assert hits / (48 * 6) >= 0.95
+
+
+def test_bitonic_batched():
+    rng = np.random.default_rng(14)
+    x, y = _rand(rng, 3, 24, 8), _rand(rng, 3, 140, 8)
+    i_k, d_k = ops.digc_topk(x, y, k=5, block_n=8, block_m=128,
+                             kernel_merge="bitonic", return_dists=True)
+    for b in range(3):
+        d_ref, i_ref = kref.digc_reference(x[b], y[b], kd=5)
+        _assert_exact(d_ref, i_ref, d_k[b], i_k[b])
+
+
+# -- wrapper contract -------------------------------------------------------
+
+
+def _xy(rng=None, n=16, m=128, d=8):
+    rng = rng or np.random.default_rng(0)
+    return _rand(rng, n, d), _rand(rng, m, d)
+
+
+def test_unknown_kernel_merge_rejected():
+    x, y = _xy()
+    with pytest.raises(ValueError, match="unknown kernel_merge"):
+        digc_topk_pallas(x, y, kd=4, kernel_merge="heap")
+
+
+def test_bucket_rounds_requires_legacy():
+    x, y = _xy()
+    with pytest.raises(ValueError, match="legacy"):
+        digc_topk_pallas(x, y, kd=4, packed=True, bucket_rounds=2,
+                         kernel_merge="bitonic")
+
+
+def test_bucket_rounds_requires_packed():
+    x, y = _xy()
+    with pytest.raises(ValueError, match="packed"):
+        digc_topk_pallas(x, y, kd=4, bucket_rounds=2)
+
+
+def test_bucket_rounds_block_m_contract():
+    x, y = _xy(m=128)
+    # block_m % kd != 0
+    with pytest.raises(ValueError, match="block_m"):
+        digc_topk_pallas(x, y, kd=5, packed=True, bucket_rounds=1,
+                         block_m=128)
+    # block_m // kd < 2 buckets
+    with pytest.raises(ValueError, match="block_m"):
+        digc_topk_pallas(x, y, kd=64, packed=True, bucket_rounds=1,
+                         block_n=16, block_m=64)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(min_value=1, max_value=40),
+    m=st.integers(min_value=4, max_value=200),
+    kd=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_bitonic_exact_topk(n, m, kd, seed):
+    if not HAVE_HYPOTHESIS:  # pragma: no cover - shim path
+        pytest.skip("hypothesis not installed")
+    if kd > m:
+        kd = m
+    rng = np.random.default_rng(seed)
+    # few distinct values => dense ties exercise the tie rule
+    x = jnp.asarray(rng.integers(0, 4, (n, 6)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, (m, 6)), jnp.float32)
+    d_ref, i_ref = kref.digc_reference(x, y, kd=kd)
+    i_k, d_k = ops.digc_topk(x, y, k=kd, block_n=16, block_m=128,
+                             kernel_merge="bitonic", return_dists=True)
+    _assert_exact(d_ref, i_ref, d_k, i_k)
+    assert (np.diff(np.asarray(d_k), axis=-1) >= 0).all()

@@ -7,10 +7,15 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import DigcSpec, digc
-from repro.core.perfmodel import engine_cost_estimate, kernel_tile_defaults
+from repro.core.perfmodel import (
+    engine_cost_estimate,
+    kernel_cost_estimate,
+    kernel_tile_defaults,
+)
 from repro.core.tuner import (
     DigcTuner,
     TileConfig,
+    TuneResult,
     VigSchedule,
     autotune_spec,
     host_key,
@@ -44,9 +49,52 @@ def test_host_key_carries_backend_platform_and_jax():
 def test_candidates_exact_only_by_default():
     t = DigcTuner(backend="cpu")
     cands = t.candidates(1024, 1024)
-    assert cands and all(c.merge in ("select", "topk") for c in cands)
+    engine = [c for c in cands if c.impl == "blocked"]
+    assert engine and all(c.merge in ("select", "topk") for c in engine)
     approx = t.candidates(1024, 1024, allow_approx=True)
-    assert any(c.merge == "packed" for c in approx)
+    assert any(c.merge == "packed" for c in approx
+               if c.impl == "blocked")
+
+
+def test_candidates_include_kernel_configs():
+    """The fused kernel competes as a first-class exact candidate: both
+    LSM/GMM realizations, with the workload VMEM-budgeted tile when the
+    feature dims are known."""
+    t = DigcTuner(backend="cpu")
+    kern = [c for c in t.candidates(3136, 3136, d=96, kd=9)
+            if c.impl == "pallas"]
+    assert {c.kernel_merge for c in kern} == {"bitonic", "legacy"}
+    assert kernel_tile_defaults(3136, 3136, 96, 9) in {
+        (c.block_n, c.block_m) for c in kern
+    }
+    # without d/kd the fallback tiles still field kernel candidates
+    assert any(c.impl == "pallas" for c in t.candidates(1024, 1024))
+
+
+def test_kernel_prior_gates_interpret_off_tpu():
+    """Off-TPU the kernel runs in interpret mode: its prior must rank
+    below every plausible engine schedule so the measured top-N stays
+    engine-only on CPU — while the compiled-TPU prior is competitive."""
+    cpu = kernel_cost_estimate(3136, 3136, 96, 9, b=2, backend="cpu")
+    assert cpu["interpret"] and cpu["bound"] == "interpret"
+    eng = engine_cost_estimate(3136, 3136, 96, 9, b=2, block_m=512,
+                               merge="select", backend="cpu")
+    assert cpu["total_s"] > eng["total_s"]
+    tpu = kernel_cost_estimate(3136, 3136, 96, 9, b=2, backend="tpu",
+                               kernel_merge="bitonic")
+    assert not tpu["interpret"]
+    eng_tpu = engine_cost_estimate(3136, 3136, 96, 9, b=2, block_m=512,
+                                   merge="select", backend="tpu")
+    assert tpu["total_s"] < 100 * eng_tpu["total_s"]  # same ballpark
+
+
+def test_kernel_config_ranks_last_on_cpu():
+    t = DigcTuner(backend="cpu")
+    ranked = t.rank(t.candidates(1024, 1024, d=64, kd=8),
+                    b=1, n=1024, m=1024, d=64, kd=8)
+    n_kernel = sum(1 for c in ranked if c.impl == "pallas")
+    assert n_kernel > 0
+    assert all(c.impl == "pallas" for c in ranked[-n_kernel:])
 
 
 def test_prior_ranks_select_over_topk_at_scale():
@@ -102,6 +150,26 @@ def test_tune_measures_persists_and_caches(tmp_path):
     assert res2.source == "cached"
     assert (tuned2.block_n, tuned2.block_m, tuned2.merge) == (
         tuned.block_n, tuned.block_m, tuned.merge)
+
+
+def test_kernel_winner_persists_and_applies(tmp_path):
+    """A persisted kernel-tier winner round-trips through the JSON cache
+    and fills a spec as impl="pallas" with its LSM/GMM realization."""
+    path = tmp_path / "tune.json"
+    tuner = DigcTuner(path)
+    key = workload_key(2, 3136, 3136, 96, 18)
+    cfg = TileConfig(128, 256, "kernel", False, impl="pallas",
+                     kernel_merge="bitonic")
+    tuner.entries[key] = TuneResult(cfg, 123.0, True, "measured").as_dict()
+    tuner.save()
+    cached = DigcTuner(path).lookup(key)
+    assert cached is not None and cached.source == "cached"
+    assert cached.config == cfg
+    s = cached.config.apply(DigcSpec(impl="blocked", k=9, dilation=2))
+    assert s.impl == "pallas" and s.kernel_merge == "bitonic"
+    assert (s.block_n, s.block_m) == (128, 256)
+    assert s.merge is None and s.fuse_norms is None  # engine-only knobs
+    assert s.k == 9 and s.dilation == 2
 
 
 def test_tune_cache_not_shared_across_hosts(tmp_path):
