@@ -18,6 +18,11 @@ one program per distinct batch size). The cold rows include program
 compilation — exactly what the one-program-per-batch-size engine pays
 on a ragged stream — and the warm rows re-serve the same trace through
 the already-compiled programs (steady state).
+
+The ``serve/guarded_*`` rows price the fault-tolerance guards
+(DESIGN.md §11) on the fault-free path: the same ragged trace with
+the admission/state screening armed vs ``guards=False``, with the
+warm overhead ratio pinned by the acceptance bar (<= 1.05x).
 """
 
 import json
@@ -85,6 +90,7 @@ def run(smoke: bool = False, res: int = 224, batch: int = 2, iters: int = 3):
             "(>=1 means the jitted functional-state path wins)",
         )
     _run_multitenant(cfg, params, n, res, smoke)
+    _run_guarded(cfg, params, n, res, smoke)
     _run_sharded(smoke)
     return True
 
@@ -169,6 +175,68 @@ def _run_multitenant(cfg, params, n, res, smoke):
                 f"{policy}_programs={results[policy][2].compile_count};"
                 f"fixed_programs={results['fixed'][2].compile_count}",
             )
+
+
+def _run_guarded(cfg, params, n, res, smoke):
+    """Guard overhead on the fault-free path (DESIGN.md §11).
+
+    The same ragged trace as the multitenant rows, served with the
+    fault-tolerance guards armed (admission finiteness screen, per-row
+    integrity fingerprints, state finiteness checks — the engine
+    default) vs ``guards=False`` (the unguarded PR-6 path). The
+    guarded warm row is the number the acceptance bar pins: steady-
+    state overhead must stay within a few percent, since every healthy
+    tick pays the screening whether or not a fault ever occurs. No
+    fault plan is attached — injection costs nothing when absent; this
+    measures detection, not injection.
+    """
+    from repro.serve.engine import VigServeEngine
+
+    impl = "cluster"
+    if smoke:
+        wave_sizes, bconf, slots = (1, 3, 2, 4), (1, 2, 4), 4
+    else:
+        wave_sizes, bconf, slots = (1, 3, 8, 2, 5, 4, 7, 6), (1, 2, 4, 8), 8
+    waves = [
+        [(w + i) % slots for i in range(size)]
+        for w, size in enumerate(wave_sizes)
+    ]
+    total = sum(wave_sizes)
+    rng = np.random.default_rng(0)
+    images = [rng.standard_normal((res, res, 3)).astype(np.float32)
+              for _ in range(slots)]
+    engines, cold_s, warm_s = {}, {}, {}
+    for label, guards in (("unguarded", False), ("guarded", True)):
+        eng = VigServeEngine(cfg, params, digc_impl=impl, autotune=False,
+                             buckets=bconf, batch=slots, guards=guards)
+        engines[label] = eng
+        cold_s[label] = _serve_trace(eng, waves, images)  # incl. compiles
+        warm_s[label] = float("inf")
+    # Interleaved best-of-5 warm passes: the overhead row divides two
+    # small numbers, so back-to-back measurement (all passes of one
+    # engine, then the other) would bake clock/cache drift into the
+    # ratio; alternating engines cancels it.
+    for _ in range(5):
+        for label, eng in engines.items():
+            warm_s[label] = min(warm_s[label],
+                                _serve_trace(eng, waves, images))
+    for eng in engines.values():
+        assert eng.stats()["quarantines"] == 0  # fault-free by design
+    results = {label: (cold_s[label], warm_s[label]) for label in engines}
+    for phase, idx in (("cold", 0), ("warm", 1)):
+        emit(
+            f"serve/guarded_{phase}_us", results["guarded"][idx] / total * 1e6,
+            f"N={n};requests={total};guards on, no fault plan;"
+            f"unguarded_us={results['unguarded'][idx] / total * 1e6:.0f};"
+            + ("per-request incl. compiles" if phase == "cold"
+               else "steady state"),
+        )
+        emit(
+            f"serve/guarded_overhead_{phase}",
+            results["guarded"][idx] / results["unguarded"][idx],
+            f"N={n};requests={total};x_guarded_over_unguarded "
+            "(1.0 = free; acceptance bar: warm <= 1.05)",
+        )
 
 
 _SHARDED_SNIPPET = """

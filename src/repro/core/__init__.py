@@ -6,13 +6,22 @@
 # in, (B, N, k) out, with (N, D) promoted to B=1.
 
 from repro.core.builder import (
+    DEGRADATION_LADDER,
     DigcSpec,
     GraphBuilder,
     available_impls,
+    degraded_spec,
+    fallback_chain,
     get_builder,
     list_builders,
     register,
     resolve_spec,
+)
+from repro.core.faults import (
+    SITES,
+    FaultError,
+    FaultInfo,
+    FaultPlan,
 )
 from repro.core.digc import (
     BIG,
@@ -38,6 +47,8 @@ from repro.core.packedkey import (
 from repro.core.state import (
     DigcState,
     DigcStateEntry,
+    entry_row_fingerprint,
+    entry_row_finite,
     state_entry,
 )
 from repro.core.tuner import (

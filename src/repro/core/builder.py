@@ -259,6 +259,47 @@ def resolve_spec(
     return spec
 
 
+# -- degradation ladder (fault-tolerant serving, DESIGN.md §11) ------------
+#
+# The paper's tiers are interchangeable by construction (same contract,
+# "scales seamlessly across image resolutions, ViG layer types, and
+# model sizes") — which gives serving a principled degraded mode: when
+# a tier's program fails to build (a Pallas compile failure on an
+# untested shape) or blows its tick deadline, serve the *same* request
+# through the next-less-specialized tier instead of dying.
+#
+# Ordering rules: each rung must (1) accept the common spec fields
+# (k / dilation / causal) with no tier-specific knobs, (2) depend on
+# strictly less machinery than the rung above (pallas needs a working
+# Mosaic lowering; blocked needs only XLA; reference needs only
+# jnp.top_k and O(N*M) memory), and (3) never be *less* exact than the
+# rung above — degrading must trade speed, not correctness. Approximate
+# tiers (cluster, axial) and the distributed ring therefore degrade
+# *into* the exact chain (blocked -> reference), never out of it.
+
+DEGRADATION_LADDER: tuple[str, ...] = ("pallas", "blocked", "reference")
+
+
+def fallback_chain(impl: str) -> tuple[str, ...]:
+    """Ordered degraded impls to serve through when ``impl`` is
+    unhealthy; empty for the last-resort tier (reference)."""
+    if impl in DEGRADATION_LADDER:
+        return DEGRADATION_LADDER[DEGRADATION_LADDER.index(impl) + 1:]
+    # tiers outside the ladder (cluster / axial / ring) degrade into
+    # the exact single-device chain
+    return DEGRADATION_LADDER[1:]
+
+
+def degraded_spec(spec: DigcSpec, impl: str) -> DigcSpec:
+    """A clean spec serving ``spec``'s common fields through a
+    degraded impl: strategy knobs are dropped — they belong to the
+    tier that just failed, and the fallback must not inherit, say, a
+    Pallas tile shape as a blocked block size."""
+    return DigcSpec(
+        impl=impl, k=spec.k, dilation=spec.dilation, causal=spec.causal
+    )
+
+
 def promote_batch(x, y=None, pos_bias=None):
     """Lift (N, D) [+ (N, M) pos_bias] to B=1; pass (B, N, D) through.
 

@@ -215,6 +215,7 @@ def digc(
     cache_key=None,
     state=None,
     state_key=None,
+    fault_plan=None,
     **knobs,
 ):
     """Public DIGC API: a thin GraphBuilder-registry lookup.
@@ -240,12 +241,20 @@ def digc(
     name or a gallery version) are the legacy **eager shim** for the
     same reuse: host-side, bypassed entirely under tracing. Mutually
     exclusive with ``state``.
+
+    ``fault_plan`` (a ``repro.core.faults.FaultPlan``) is the
+    fault-injection hook (DESIGN.md §11): when set, the node features
+    pass through the plan's ``digc.x`` site before construction —
+    zero-overhead and a no-op when ``None``, and host-side only
+    (bypassed under tracing, like the eager cache).
     """
     spec = resolve_spec(
         spec, impl=impl, k=k, dilation=dilation, causal=causal, **knobs
     )
     builder = get_builder(spec.impl)
     builder.validate(spec, has_pos_bias=pos_bias is not None)
+    if fault_plan is not None and not isinstance(x, jax.core.Tracer):
+        x = jnp.asarray(fault_plan.fire("digc.x", value=x, impl=spec.impl))
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
     y_arg = None if y is None else y3
     if state is not None:

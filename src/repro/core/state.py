@@ -65,10 +65,12 @@ paper's on-chip residency.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _like_sharding(src, new):
@@ -173,6 +175,48 @@ class DigcStateEntry:
                 v, v.at[rows].set(jnp.zeros((), v.dtype))
             )
         return dataclasses.replace(self, **updates)
+
+
+# -- state-integrity guards (fault-tolerant serving, DESIGN.md §11) --------
+#
+# The serving engine trusts its slot rows because every write goes
+# through the sanctioned lifecycle above. A bit flip (host memory, a
+# buggy injector, a bad device) bypasses that lifecycle — so the engine
+# keeps a cheap per-row fingerprint of every slot row, recomputed after
+# each sanctioned write and checked before each read. These helpers are
+# host-side by construction (they hash concrete bytes); calling them on
+# tracers is an error the engine never commits.
+
+
+def entry_row_fingerprint(entry: DigcStateEntry, row: int) -> int:
+    """crc32 over one row's bytes across every per-row buffer.
+
+    Cheap (a few KB per row), deterministic, and sensitive to any bit
+    of ``centroids`` / ``sq_y`` / ``row_step`` — a mismatch against the
+    token recorded at the last sanctioned write means the row was
+    mutated outside the lifecycle and must be cold-reset.
+    """
+    h = 0
+    for f in entry._row_fields():
+        v = getattr(entry, f)
+        if v is None:
+            continue
+        h = zlib.crc32(np.ascontiguousarray(np.asarray(v[row])).tobytes(), h)
+    return h
+
+
+def entry_row_finite(entry: DigcStateEntry, row: int) -> bool:
+    """True when every float buffer of ``row`` is finite. A NaN/Inf in
+    a warm row poisons every later request of its tenant (warm starts
+    feed it back) — the engine screens served rows each tick."""
+    for f in entry._row_fields():
+        v = getattr(entry, f)
+        if v is None:
+            continue
+        host = np.asarray(v[row])
+        if np.issubdtype(host.dtype, np.floating) and not np.isfinite(host).all():
+            return False
+    return True
 
 
 def state_entry(
@@ -302,6 +346,46 @@ class DigcState:
         return DigcState(entries={
             k: e.reset_rows(rows) for k, e in self.entries.items()
         })
+
+    # -- integrity guards (fault-tolerant serving, DESIGN.md §11) -------
+
+    def row_fingerprints(self, rows) -> dict[str, dict[int, int]]:
+        """Per-entry integrity tokens for the given slot rows.
+
+        Batched variant of ``entry_row_fingerprint``: each per-row
+        buffer crosses to host ONCE per call, not once per row — the
+        engine checks/refreshes several lanes per tick, and the
+        device->host sync (not the crc) is the guard's real cost."""
+        out: dict[str, dict[int, int]] = {}
+        for k, e in self.entries.items():
+            tokens = {int(r): 0 for r in rows}
+            for f in e._row_fields():
+                v = getattr(e, f)
+                if v is None:
+                    continue
+                host = np.ascontiguousarray(np.asarray(v))
+                for r in tokens:
+                    tokens[r] = zlib.crc32(host[r].tobytes(), tokens[r])
+            out[k] = tokens
+        return out
+
+    def rows_finite(self, rows) -> dict[int, bool]:
+        """Which of the given slot rows are finite across every entry
+        (host-side, one transfer per buffer; per-row semantics of
+        ``entry_row_finite``)."""
+        finite = {int(r): True for r in rows}
+        for e in self.entries.values():
+            for f in e._row_fields():
+                v = getattr(e, f)
+                if v is None:
+                    continue
+                host = np.asarray(v)
+                if not np.issubdtype(host.dtype, np.floating):
+                    continue
+                for r in finite:
+                    if finite[r] and not np.isfinite(host[r]).all():
+                        finite[r] = False
+        return finite
 
     def __len__(self) -> int:
         return len(self.entries)

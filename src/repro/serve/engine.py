@@ -25,12 +25,14 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import FaultError, FaultInfo
 from repro.models.config import ModelConfig
 from repro.models import transformer as tr
 
@@ -201,6 +203,11 @@ class VigRequest:
     cluster tier warm-starts request N+1's k-means from request N's
     centroids — but only within the tenant. ``tenant=None`` marks a
     one-shot anonymous request (always a cold slot).
+
+    A quarantined request completes with ``done=True``,
+    ``logits=None`` and the detected fault in ``fault`` (DESIGN.md
+    §11) — failure is a typed per-request outcome, never an engine
+    crash.
     """
 
     uid: int
@@ -208,6 +215,7 @@ class VigRequest:
     tenant: Optional[Any] = None
     logits: Optional[np.ndarray] = None
     done: bool = False
+    fault: Optional[FaultInfo] = None
 
 
 DEFAULT_BUCKETS = (1, 2, 4, 8)
@@ -259,6 +267,19 @@ class VigServeEngine:
     explicit disconnect) still drops state entirely, and
     ``park_capacity=0`` restores the PR-4 evict-means-cold behavior.
 
+    **Fault tolerance** (``guards``/``fault_plan``/``deadline_ms``,
+    DESIGN.md §11): every picked lane passes an admission finiteness
+    screen and per-row state checks (integrity fingerprints + state
+    finiteness) before reaching a compiled program; a failing lane is
+    quarantined (request fails with a typed ``FaultInfo``, its slot
+    cold-resets) or recovered (silent corruption → cold re-serve)
+    without perturbing co-batched tenants. Program builds and parking
+    restores retry with backoff; persistent build failures and
+    repeated deadline misses walk the degradation ladder
+    (``core.builder.fallback_chain``). ``fault_plan`` injects
+    failures at the named sites for testing; ``guards=False`` keeps
+    the unguarded PR-6 fast path.
+
     **The direct path** (``infer``) runs one batched forward per call
     with one compiled program + state per exact batch size — the PR-3
     API, still the right call for offline fixed-batch workloads.
@@ -294,7 +315,11 @@ class VigServeEngine:
                  on_compile: Optional[Callable[[int], None]] = None,
                  mesh=None, mesh_axis: str = "data",
                  mesh_batch_axis: Optional[str] = None,
-                 park_capacity: int = 8):
+                 park_capacity: int = 8,
+                 fault_plan=None, guards: bool = True,
+                 deadline_ms: Optional[float] = None,
+                 deadline_strikes: int = 2,
+                 retry_attempts: int = 3, retry_backoff: float = 0.02):
         from repro.core.builder import get_builder
         from repro.core.engine import DigcCache
         from repro.models.vig import resolve_digc_spec
@@ -400,6 +425,30 @@ class VigServeEngine:
         self.last_resets: list[int] = []
         self.last_restores: list[int] = []
         self.last_bucket: Optional[int] = None
+        # -- fault tolerance (DESIGN.md §11) ----------------------------
+        # fault_plan injects failures at named sites (tests/chaos);
+        # guards=True arms the detection/recovery machinery — per-lane
+        # finiteness screening, state-integrity fingerprints, the
+        # deadline budget. guards=False keeps the PR-6 fast path (the
+        # serve/guarded_* bench rows measure the difference).
+        self.fault_plan = fault_plan
+        self.guards = bool(guards)
+        self.deadline_ms = deadline_ms
+        self.deadline_strikes = int(deadline_strikes)
+        self.retry_attempts = int(retry_attempts)
+        self.retry_backoff = float(retry_backoff)
+        self.quarantines = 0
+        self.state_resets = 0
+        self.deadline_misses = 0
+        self.park_losses = 0
+        self.retries = 0
+        self.requests_failed = 0
+        self.fallback_level = 0  # rungs descended on the ladder
+        self.fault_log: list[FaultInfo] = []  # detected (not injected)
+        self.last_quarantined: list[int] = []  # slots, last tick
+        self._row_tokens: dict[str, dict[int, int]] = {}
+        self._consecutive_misses = 0
+        self._program_ticks: dict[int, int] = {}  # bucket -> ticks served
 
     # -- tuning ---------------------------------------------------------
 
@@ -529,8 +578,132 @@ class VigServeEngine:
     # -- multi-tenant request path --------------------------------------
 
     def submit(self, req: VigRequest) -> None:
-        """Enqueue a request for the next engine tick."""
+        """Enqueue a request for the next engine tick.
+
+        Validates the image against the engine's model config up
+        front: a malformed request must fail here, at the submitter,
+        with a typed error naming the field — not as a shape error
+        deep inside a jitted program three ticks later (where it would
+        take co-batched tenants down with it).
+        """
+        img = np.asarray(req.image)
+        want = (self.cfg.image_size, self.cfg.image_size, self.cfg.in_chans)
+        if img.ndim != 3:
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): expected a 3-d "
+                f"(H, W, C) array, got ndim={img.ndim} shape={img.shape}"
+            )
+        if img.shape != want:
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): shape {img.shape} "
+                f"does not match the engine config {want} "
+                "(image_size, image_size, in_chans)"
+            )
+        if not np.issubdtype(img.dtype, np.floating):
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): dtype {img.dtype} is "
+                "not a float dtype; pass float32 pixel features"
+            )
         self.queue.append(req)
+
+    # -- fault tolerance (DESIGN.md §11) --------------------------------
+
+    def _fire(self, site: str, value=None, **ctx):
+        """Fault-injection hook: a no-op (returning ``value``
+        unchanged) unless a ``FaultPlan`` was supplied."""
+        if self.fault_plan is None:
+            return value
+        return self.fault_plan.fire(site, value=value, tick=self._tick, **ctx)
+
+    def _retry(self, fn, what: str):
+        """Bounded retry with exponential backoff for host-side
+        transients (parking restore, program build). Re-raises the
+        last error once the budget is spent."""
+        last = None
+        for attempt in range(self.retry_attempts):
+            try:
+                return fn()
+            except Exception as e:  # noqa: BLE001 — transient boundary
+                last = e
+                self.retries += 1
+                if attempt + 1 < self.retry_attempts:
+                    time.sleep(self.retry_backoff * (2 ** attempt))
+        raise last
+
+    def _refresh_tokens(self, slots) -> None:
+        """Re-fingerprint ``slots``' state rows after a *sanctioned*
+        write (admission reset, unpark restore, end-of-tick scatter).
+        Any later mismatch is an unsanctioned mutation."""
+        if not self.guards or self._slot_state is None:
+            return
+        fps = self._slot_state.row_fingerprints(list(slots))
+        for key, rows in fps.items():
+            self._row_tokens.setdefault(key, {}).update(rows)
+
+    def _row_intact(self, slot: int, fps=None) -> bool:
+        """Check ``slot``'s rows against their integrity tokens. Rows
+        never fingerprinted (no sanctioned write yet) are trusted.
+        ``fps`` passes precomputed fingerprints so one tick's lanes
+        share a single device->host pull."""
+        if self._slot_state is None:
+            return True
+        if fps is None:
+            fps = self._slot_state.row_fingerprints([slot])
+        for key, rows in fps.items():
+            want = self._row_tokens.get(key, {}).get(slot)
+            if want is not None and rows[slot] != want:
+                return False
+        return True
+
+    def _row_finite(self, slot: int, finite=None) -> bool:
+        if self._slot_state is None:
+            return True
+        if finite is None:
+            finite = self._slot_state.rows_finite([slot])
+        return finite[slot]
+
+    def _quarantine(self, slot: int, req: VigRequest,
+                    info: FaultInfo) -> None:
+        """Fail one request with a typed ``FaultInfo`` and cold-reset
+        its slot, leaving every co-batched tenant untouched: the faulty
+        lane simply never reaches the compiled program."""
+        req.fault = info
+        req.logits = None
+        req.done = True
+        self.quarantines += 1
+        self.requests_failed += 1
+        self.fault_log.append(info)
+        self.last_quarantined.append(slot)
+        if self._slot_state is not None:
+            self._slot_state = self._slot_state.reset_rows([slot])
+            self.state_resets += 1
+            self._refresh_tokens([slot])
+        self._slot_last_tick[slot] = self._tick
+        if req.tenant is None:
+            self.slot_tenant[slot] = None
+            self._tenant_slot.pop(("req", req.uid), None)
+
+    def _degrade(self, info: FaultInfo) -> bool:
+        """Descend one rung of the degradation ladder
+        (``core.builder.fallback_chain``): drop every compiled program
+        and rebuild at the next-simpler tier. Returns False when the
+        ladder is exhausted."""
+        from repro.core.builder import fallback_chain
+
+        chain = fallback_chain(self._ladder_base_impl())
+        if self.fallback_level >= len(chain):
+            return False
+        self.fallback_level += 1
+        self._programs.clear()
+        self._program_ticks.clear()
+        self._consecutive_misses = 0
+        self.fault_log.append(info)
+        return True
+
+    def _ladder_base_impl(self) -> str:
+        choice = self._impl_choice()
+        return (choice.spec_for(0).impl if hasattr(choice, "spec_for")
+                else choice.impl)
 
     def release(self, tenant: Any) -> None:
         """Tenant disconnect: free its slot and cold-reset the rows, so
@@ -544,6 +717,7 @@ class VigServeEngine:
         self.slot_tenant[slot] = None
         if self._slot_state is not None:
             self._slot_state = self._slot_state.reset_rows([slot])
+            self._refresh_tokens([slot])
 
     # -- LRU state parking (DESIGN.md §10) ------------------------------
 
@@ -565,9 +739,35 @@ class VigServeEngine:
         Returns False (caller cold-resets) when nothing is parked. Only
         the *row* fields are restored — the scalar ``step`` stays the
         canonical entry's (it is the engine-global call counter, not a
-        per-tenant value; per-row validity lives in ``row_step``)."""
+        per-tenant value; per-row validity lives in ``row_step``).
+
+        The restore passes the ``park.restore`` fault site: transient
+        errors are retried with backoff; a ``None`` coming back after a
+        parked copy existed is a parking-store **loss** — counted, and
+        the tenant re-admits cold (the caller resets the slot)."""
+        had_copy = tenant in self._parked
         host = self._parked.pop(tenant, None)
+        if host is not None:
+            try:
+                host = self._retry(
+                    lambda: self._fire("park.restore", value=host,
+                                       tenant=tenant),
+                    "park restore",
+                )
+            except FaultError:
+                host = None
         if host is None:
+            if had_copy:
+                # The parked rows existed but could not be restored —
+                # account the loss; the cold reset that follows is the
+                # recovery, not a silent fallback.
+                self.park_losses += 1
+                self.state_resets += 1  # the caller's cold reset is recovery
+                self.fault_log.append(FaultInfo(
+                    kind="parking_loss", site="park.restore",
+                    tenant=tenant, tick=self._tick,
+                    detail="parked rows unrecoverable; re-admitting cold",
+                ))
             return False
         state = self._ensure_slot_state()
         from repro.core.state import DigcState
@@ -579,6 +779,7 @@ class VigServeEngine:
             for k, e in state.entries.items()
         })
         self.park_hits += 1
+        self._refresh_tokens([slot])
         return True
 
     def bucket_for(self, active: int) -> int:
@@ -607,12 +808,29 @@ class VigServeEngine:
             )
         return self._slot_state
 
+    def _choice_for(self, bucket: int):
+        """Resolve the bucket's DIGC impl through the degradation
+        ladder: at fallback level 0 this is the tuned per-bucket
+        choice; each descended rung swaps in the next tier of
+        ``core.builder.fallback_chain`` (simpler machinery, never less
+        exact)."""
+        if self.fallback_level == 0:
+            return self._bucket_choice(bucket)
+        from repro.core.builder import degraded_spec, fallback_chain
+
+        chain = fallback_chain(self._ladder_base_impl())
+        return degraded_spec(self.spec, chain[self.fallback_level - 1])
+
     def _build_program(self, bucket: int) -> Callable:
         """Compile one bucket's donated forward. Split out so tests can
-        stub program construction and count compiles."""
+        stub program construction and count compiles. Passes the
+        ``program.build`` fault site (injected compile failures)."""
         from repro.models.vig import vig_forward
 
-        choice = self._bucket_choice(bucket)
+        choice = self._choice_for(bucket)
+        impl = (choice.spec_for(0).impl if hasattr(choice, "spec_for")
+                else choice.impl)
+        self._fire("program.build", bucket=bucket, impl=impl)
         return jax.jit(
             lambda p, im, st: vig_forward(
                 p, im, self.cfg, digc_impl=choice, state=st
@@ -621,8 +839,26 @@ class VigServeEngine:
         )
 
     def _program_for(self, bucket: int) -> Callable:
-        if bucket not in self._programs:
-            self._programs[bucket] = self._build_program(bucket)
+        """Bucket program lookup with recovery: a failing build is
+        retried (transient compile-service hiccups), and a
+        persistently failing tier walks the degradation ladder until a
+        rung builds — only an exhausted ladder re-raises."""
+        while bucket not in self._programs:
+            try:
+                prog = self._retry(lambda: self._build_program(bucket),
+                                   f"bucket {bucket} program build")
+            except Exception as e:  # noqa: BLE001 — ladder boundary
+                info = (e.info if isinstance(e, FaultError) else FaultInfo(
+                    kind="compile_failure", site="program.build",
+                    tick=self._tick, detail=repr(e),
+                ))
+                if not self._degrade(dataclasses.replace(
+                    info, kind="compile_degrade",
+                    detail=f"{info.detail}; descending ladder",
+                )):
+                    raise
+                continue
+            self._programs[bucket] = prog
             self.compile_count += 1
             if self.on_compile is not None:
                 self.on_compile(bucket)
@@ -655,6 +891,7 @@ class VigServeEngine:
         else:
             if self._slot_state is not None:
                 self._slot_state = self._slot_state.reset_rows([slot])
+                self._refresh_tokens([slot])
             self.last_resets.append(slot)
         return slot
 
@@ -672,6 +909,7 @@ class VigServeEngine:
         self._tick += 1
         self.last_resets = []
         self.last_restores = []
+        self.last_quarantined = []
         used: set[int] = set()
         assigned: dict[int, int] = {}  # id(request) -> slot
 
@@ -712,7 +950,76 @@ class VigServeEngine:
         self.queue = [r for r in self.queue if id(r) not in assigned]
         picked.sort(key=lambda sr: sr[0])
 
-        lanes = [slot for slot, _ in picked]
+        state = self._ensure_slot_state()
+        # Fault site: unsanctioned state mutation (bit corruption that
+        # bypassed put_rows/reset_rows). The replaced state is adopted
+        # WITHOUT refreshing the integrity tokens — detecting exactly
+        # this is what the tokens are for.
+        mutated = self._fire("state.rows", value=state)
+        if mutated is not state:
+            self._slot_state = state = mutated
+
+        # Guarded screening (DESIGN.md §11): each picked lane passes
+        # the admission finiteness screen and the state-row checks
+        # before it may reach a compiled program. A failing lane is
+        # handled per the fault taxonomy — co-batched healthy tenants
+        # are served exactly as if the faulty lane never existed.
+        healthy: list[tuple[int, VigRequest]] = []
+        imgs_list: list[np.ndarray] = []
+        # One batched device->host pull for all picked lanes' state
+        # checks — the sync, not the crc/isfinite, is the guard cost
+        # (the serve/guarded_* bench rows price exactly this).
+        finite = fps = None
+        if self.guards and picked:
+            slots_picked = [slot for slot, _ in picked]
+            finite = state.rows_finite(slots_picked)
+            fps = state.row_fingerprints(slots_picked)
+        for slot, req in picked:
+            img = np.asarray(req.image, np.float32)
+            fired = self._fire("admit.image", value=img, tenant=req.tenant)
+            if fired is not img:
+                img = np.asarray(fired, np.float32)
+            if self.guards and not np.isfinite(img).all():
+                self._quarantine(slot, req, FaultInfo(
+                    kind="nonfinite_input", site="admit.image",
+                    tenant=req.tenant, tick=self._tick,
+                    detail="non-finite values in submitted image",
+                ))
+                continue
+            if self.guards:
+                if not self._row_finite(slot, finite):
+                    # Non-finite state rows: the tenant's warm carry is
+                    # poisoned — fail this request, cold-reset the slot.
+                    self._quarantine(slot, req, FaultInfo(
+                        kind="nonfinite_state", site="state.rows",
+                        tenant=req.tenant, tick=self._tick,
+                        detail=f"non-finite state rows on slot {slot}",
+                    ))
+                    continue
+                if not self._row_intact(slot, fps):
+                    # Finite but token-mismatched rows (silent
+                    # corruption): recover by serving this request
+                    # COLD — reset, re-fingerprint, keep the lane.
+                    self._slot_state = self._slot_state.reset_rows([slot])
+                    state = self._slot_state
+                    self.state_resets += 1
+                    self.fault_log.append(FaultInfo(
+                        kind="state_corruption", site="state.rows",
+                        tenant=req.tenant, tick=self._tick,
+                        detail=(f"integrity token mismatch on slot "
+                                f"{slot}; cold reset"),
+                    ))
+                    self.last_resets.append(slot)
+                    self._refresh_tokens([slot])
+            healthy.append((slot, req))
+            imgs_list.append(img)
+
+        if not healthy:
+            self.last_lanes = []
+            self.last_bucket = None
+            return 0
+
+        lanes = [slot for slot, _ in healthy]
         a = len(lanes)
         bucket = self.bucket_for(a)
         self.last_lanes = list(lanes)
@@ -722,20 +1029,49 @@ class VigServeEngine:
         # whenever lane 0 is, so they never force the mixed warm/cold
         # path — and their outputs/state are simply dropped.
         rows = lanes + [lanes[0]] * (bucket - a)
-        imgs = np.stack(
-            [np.asarray(req.image, np.float32) for _, req in picked]
-            + [np.asarray(picked[0][1].image, np.float32)] * (bucket - a)
-        )
-        state = self._ensure_slot_state()
+        imgs = np.stack(imgs_list + [imgs_list[0]] * (bucket - a))
+        state = self._slot_state
         bucket_state = state.take_rows(rows)
         fwd = self._program_for(bucket)
+        # The timed serve section: dispatch + device compute + the
+        # host sync that materializes the logits. A per-engine
+        # deadline budget (deadline_ms) turns stragglers into counted
+        # misses; deadline_strikes consecutive misses descend the
+        # degradation ladder.
+        t0 = time.perf_counter()
+        self._fire("tick.serve", bucket=bucket)
         logits, new_bucket_state = fwd(
             self.params, jnp.asarray(imgs), bucket_state
         )
         # Scatter live lanes only: src rows >= a (padding) are dropped.
         self._slot_state = state.put_rows(new_bucket_state, lanes)
-        logits_np = np.asarray(logits)
-        for i, (slot, req) in enumerate(picked):
+        logits_np = np.asarray(logits)  # host sync closes the region
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+        first_tick = bucket not in self._program_ticks
+        self._program_ticks[bucket] = self._program_ticks.get(bucket, 0) + 1
+        if self.deadline_ms is not None and not first_tick:
+            # A bucket program's first served tick includes its jit
+            # compile — never a deadline signal.
+            if elapsed_ms > self.deadline_ms:
+                self.deadline_misses += 1
+                self._consecutive_misses += 1
+                info = FaultInfo(
+                    kind="deadline_miss", site="tick.serve",
+                    tick=self._tick,
+                    detail=(f"bucket {bucket} tick {elapsed_ms:.2f}ms > "
+                            f"budget {self.deadline_ms}ms"),
+                )
+                self.fault_log.append(info)
+                if self._consecutive_misses >= self.deadline_strikes:
+                    self._degrade(dataclasses.replace(
+                        info, kind="deadline_degrade",
+                        detail=(f"{self._consecutive_misses} consecutive "
+                                "misses; descending ladder"),
+                    ))
+            else:
+                self._consecutive_misses = 0
+        self._refresh_tokens(lanes)
+        for i, (slot, req) in enumerate(healthy):
             req.logits = logits_np[i]
             req.done = True
             self._slot_last_tick[slot] = self._tick
@@ -786,7 +1122,22 @@ class VigServeEngine:
                         else {k: int(v) for k, v in self.mesh.shape.items()}),
                "parked_tenants": list(self._parked),
                "park_hits": self.park_hits,
-               "park_evictions": self.park_evictions}
+               "park_evictions": self.park_evictions,
+               # fault tolerance (DESIGN.md §11)
+               "guards": self.guards,
+               "quarantines": self.quarantines,
+               "state_resets": self.state_resets,
+               "deadline_misses": self.deadline_misses,
+               "fallback_level": self.fallback_level,
+               "park_losses": self.park_losses,
+               "retries": self.retries,
+               "requests_failed": self.requests_failed,
+               "faults": [f.as_dict() for f in self.fault_log[-16:]]}
+        if self.fallback_level > 0:
+            from repro.core.builder import fallback_chain
+
+            chain = fallback_chain(self._ladder_base_impl())
+            out["fallback_impl"] = chain[self.fallback_level - 1]
         if self.schedule is not None:
             out["schedule"] = self.schedule.describe()
         if self.tuned is not None:

@@ -1,8 +1,10 @@
 """Multi-device tests (subprocess with 8 host devices): MoE expert
 parallelism vs dense reference, pipeline parallelism vs sequential,
-int8 ring all-reduce vs psum, FSDP sharding rules."""
+int8 ring all-reduce vs psum, FSDP sharding rules.
 
-import pytest
+Runs in the fast tier-1 job: with JAX_PLATFORMS=cpu pinned in the
+subprocess env the whole suite is seconds, not minutes (the old slow
+marker predated the pin, when device discovery alone took ~30s)."""
 
 from _subproc import run_snippet
 
@@ -11,7 +13,6 @@ def _run(snippet: str, devices: int = 8) -> str:
     return run_snippet(snippet, devices=devices, timeout=900).stdout
 
 
-@pytest.mark.slow
 def test_moe_expert_parallel_matches_dense():
     out = _run(
         """
@@ -40,7 +41,6 @@ def test_moe_expert_parallel_matches_dense():
     assert "MOE_EP_OK" in out
 
 
-@pytest.mark.slow
 def test_moe_capacity_drops_tokens():
     out = _run(
         """
@@ -66,7 +66,6 @@ def test_moe_capacity_drops_tokens():
     assert "MOE_DROP_OK" in out
 
 
-@pytest.mark.slow
 def test_pipeline_parallel_matches_sequential():
     out = _run(
         """
@@ -102,7 +101,6 @@ def test_pipeline_parallel_matches_sequential():
     assert "PIPELINE_OK" in out
 
 
-@pytest.mark.slow
 def test_int8_ring_allreduce_close_to_psum():
     out = _run(
         """
@@ -127,7 +125,6 @@ def test_int8_ring_allreduce_close_to_psum():
     assert "COMPRESS_OK" in out
 
 
-@pytest.mark.slow
 def test_fsdp_param_sharding_rules():
     out = _run(
         """
@@ -156,7 +153,6 @@ def test_fsdp_param_sharding_rules():
     assert "SHARDING_OK" in out
 
 
-@pytest.mark.slow
 def test_dryrun_smoke_cell():
     """End-to-end dry-run machinery on a small mesh + smoke config."""
     out = _run(

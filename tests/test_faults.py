@@ -1,0 +1,550 @@
+"""Fault injection, quarantine, recovery, and the degradation ladder
+(DESIGN.md §11).
+
+The centerpiece is the **fault matrix**: one shared fault-free trace
+(tenants A/B/C co-batched in a single bucket for four ticks) replayed
+against engines with one injector armed at tenant B. For every row the
+matrix asserts the full contract:
+
+* the injector actually fired (``FaultPlan.counts()``),
+* the engine detected it and reacted per the recovery state machine
+  (quarantine + typed ``VigRequest.fault`` / cold-reset recovery /
+  retry), with the counters in ``stats()`` to prove it,
+* every co-batched *healthy* tenant's logits are **bit-identical** on
+  CPU to the fault-free replay — a quarantined lane must vanish
+  without a trace for its neighbors,
+* the affected tenant's post-recovery requests match a cold B=1
+  replay — recovery means *cold*, not garbage.
+
+The single-bucket set ``(4,)`` keeps the compiled batch shape constant
+whether or not a lane is quarantined, so per-row compute independence
+makes the bitwise comparison meaningful.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import digc
+from repro.core.builder import (
+    DEGRADATION_LADDER,
+    degraded_spec,
+    fallback_chain,
+    resolve_spec,
+)
+from repro.core.faults import SITES, FaultError, FaultInfo, FaultPlan
+from repro.core.state import DigcState
+from repro.models import vig
+from repro.serve.engine import VigRequest, VigServeEngine
+
+from test_serve_multitenant import (
+    _StubProgramEngine,
+    _image,
+    _replay_tenant,
+    _tiny_vig,
+)
+
+TENANTS = ("A", "B", "C")
+TICKS = 4
+
+
+def _trace_images(seed=0):
+    rng = np.random.default_rng(seed)
+    return {(tick, t): _image(rng)
+            for tick in range(1, TICKS + 1) for t in TENANTS}
+
+
+IMAGES = _trace_images()
+
+
+def _run_trace(eng, images=IMAGES, ticks=TICKS, tenants=TENANTS):
+    """Submit one request per (tick, tenant) and step once per tick;
+    returns the request objects keyed by (tick, tenant)."""
+    reqs = {}
+    uid = 0
+    for tick in range(1, ticks + 1):
+        for t in tenants:
+            r = VigRequest(uid=uid, image=images[(tick, t)], tenant=t)
+            reqs[(tick, t)] = r
+            eng.submit(r)
+            uid += 1
+        eng.step()
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def cluster_model():
+    return _tiny_vig("cluster")
+
+
+@pytest.fixture(scope="module")
+def clean_trace(cluster_model):
+    """The fault-free reference run every matrix row compares against."""
+    cfg, params = cluster_model
+    eng = VigServeEngine(cfg, params, digc_impl="cluster", autotune=False,
+                         buckets=(4,))
+    reqs = _run_trace(eng)
+    return eng, reqs
+
+
+def _faulty_engine(cluster_model, plan, **kw):
+    cfg, params = cluster_model
+    return VigServeEngine(cfg, params, digc_impl="cluster", autotune=False,
+                          buckets=(4,), fault_plan=plan, **kw)
+
+
+def _assert_healthy_bitwise(reqs, clean_reqs, *, skip=()):
+    """Every (tick, tenant) outside ``skip`` matches the fault-free
+    replay bit-for-bit."""
+    for key, req in reqs.items():
+        if key in skip:
+            continue
+        assert req.done and req.fault is None, (key, req.fault)
+        np.testing.assert_array_equal(
+            req.logits, clean_reqs[key].logits,
+            err_msg=f"healthy lane {key} diverged from fault-free replay",
+        )
+
+
+def _assert_cold_replay(cfg, params, reqs, tenant, ticks):
+    """The affected tenant's post-recovery requests equal a cold B=1
+    replay (recovery restarts the warm carry, it does not corrupt it).
+    Engine-vs-replay crosses program shapes, so tolerances follow the
+    parity suite (bitwise is reserved for same-program comparisons)."""
+    chain = [reqs[(tick, tenant)] for tick in ticks]
+    replayed, _ = _replay_tenant(cfg, params, "cluster", chain)
+    for tick, want in zip(ticks, replayed):
+        np.testing.assert_allclose(
+            reqs[(tick, tenant)].logits, want, rtol=1e-5, atol=1e-5,
+            err_msg=f"tenant {tenant} tick {tick} is not a cold replay",
+        )
+
+
+# ---------------------------------------------------------------------------
+# The fault matrix
+
+
+def test_matrix_nonfinite_input_quarantines_tenant(cluster_model,
+                                                   clean_trace):
+    cfg, params = cluster_model
+    _, clean_reqs = clean_trace
+    plan = FaultPlan(seed=1).inject_nonfinite_input("B", tick=2)
+    eng = _faulty_engine(cluster_model, plan)
+    reqs = _run_trace(eng)
+
+    assert plan.counts() == {"nonfinite_input": 1}
+    bad = reqs[(2, "B")]
+    assert bad.done and bad.logits is None
+    assert bad.fault is not None and bad.fault.kind == "nonfinite_input"
+    assert bad.fault.site == "admit.image" and bad.fault.tenant == "B"
+    st = eng.stats()
+    assert st["quarantines"] == 1 and st["requests_failed"] == 1
+    assert st["state_resets"] >= 1
+    # Co-batched tenants never see the fault; B's ticks 1 and 3-4 are a
+    # warm tick then a cold restart.
+    _assert_healthy_bitwise(reqs, clean_reqs,
+                            skip={(2, "B"), (3, "B"), (4, "B")})
+    _assert_cold_replay(cfg, params, reqs, "B", ticks=(3, 4))
+
+
+def test_matrix_state_nan_quarantines_tenant(cluster_model, clean_trace):
+    cfg, params = cluster_model
+    _, clean_reqs = clean_trace
+    # Arrival order A,B,C binds slots 0,1,2 — row 1 is tenant B.
+    plan = FaultPlan(seed=2).inject_state_corruption(
+        field="centroids", row=1, tick=2, mode="nan",
+    )
+    eng = _faulty_engine(cluster_model, plan)
+    reqs = _run_trace(eng)
+
+    assert plan.counts() == {"state_corruption": 1}
+    bad = reqs[(2, "B")]
+    assert bad.done and bad.logits is None
+    assert bad.fault is not None and bad.fault.kind == "nonfinite_state"
+    st = eng.stats()
+    assert st["quarantines"] == 1 and st["state_resets"] >= 1
+    _assert_healthy_bitwise(reqs, clean_reqs,
+                            skip={(2, "B"), (3, "B"), (4, "B")})
+    _assert_cold_replay(cfg, params, reqs, "B", ticks=(3, 4))
+
+
+def test_matrix_state_bitflip_recovers_cold(cluster_model, clean_trace):
+    """A flipped bit yields *finite* wrong values — only the integrity
+    fingerprint can see it. Detection cold-resets the row and still
+    serves the request (recovery, not quarantine)."""
+    cfg, params = cluster_model
+    _, clean_reqs = clean_trace
+    plan = FaultPlan(seed=3).inject_state_corruption(
+        field="centroids", row=1, tick=2, mode="bitflip",
+    )
+    eng = _faulty_engine(cluster_model, plan)
+    reqs = _run_trace(eng)
+
+    assert plan.counts() == {"state_corruption": 1}
+    st = eng.stats()
+    assert st["quarantines"] == 0 and st["requests_failed"] == 0
+    assert st["state_resets"] >= 1
+    assert any(f["kind"] == "state_corruption" for f in st["faults"])
+    # Every request served; B restarts cold AT tick 2.
+    for req in reqs.values():
+        assert req.done and req.logits is not None and req.fault is None
+    _assert_healthy_bitwise(reqs, clean_reqs,
+                            skip={(2, "B"), (3, "B"), (4, "B")})
+    _assert_cold_replay(cfg, params, reqs, "B", ticks=(2, 3, 4))
+
+
+def test_matrix_transient_build_failure_retries_to_identical(
+        cluster_model, clean_trace):
+    """One injected compile failure is absorbed by the retry loop: no
+    degradation, and the whole trace — including the first tick that
+    triggered the build — is bit-identical to fault-free."""
+    _, clean_reqs = clean_trace
+    plan = FaultPlan(seed=4).inject_build_failure(times=1)
+    eng = _faulty_engine(cluster_model, plan)
+    reqs = _run_trace(eng)
+
+    assert plan.counts() == {"compile_failure": 1}
+    st = eng.stats()
+    assert st["retries"] >= 1
+    assert st["fallback_level"] == 0
+    assert st["quarantines"] == 0
+    _assert_healthy_bitwise(reqs, clean_reqs)
+
+
+def test_matrix_persistent_build_failure_walks_ladder(cluster_model):
+    """Every cluster-tier build fails: after the retry budget the
+    engine descends the ladder (cluster -> blocked) and keeps
+    serving."""
+    plan = FaultPlan(seed=5).inject_build_failure(impl="cluster",
+                                                 times=None)
+    eng = _faulty_engine(cluster_model, plan)
+    reqs = _run_trace(eng)
+
+    st = eng.stats()
+    assert st["fallback_level"] == 1
+    assert st["fallback_impl"] == "blocked"
+    assert st["retries"] >= eng.retry_attempts
+    assert any(f["kind"] == "compile_degrade" for f in st["faults"])
+    for req in reqs.values():
+        assert req.done and req.fault is None
+        assert np.isfinite(req.logits).all()
+
+
+def test_exhausted_ladder_reraises(cluster_model):
+    """When every rung fails to build, the engine stops absorbing: the
+    last build error propagates (a served-blind engine is worse than a
+    crashed one)."""
+    plan = FaultPlan(seed=6).inject_build_failure(times=None)
+    eng = _faulty_engine(cluster_model, plan, retry_attempts=1,
+                         retry_backoff=0.0)
+    eng.submit(VigRequest(uid=0, image=IMAGES[(1, "A")], tenant="A"))
+    with pytest.raises(FaultError):
+        eng.step()
+    assert eng.stats()["fallback_level"] == len(fallback_chain("cluster"))
+
+
+# ---------------------------------------------------------------------------
+# Deadline budget / slow ticks (stubbed programs: no compiles)
+
+
+def _stub_fault_engine(plan, **kw):
+    cfg, params = _tiny_vig("cluster")
+    return _StubProgramEngine(cfg, params, digc_impl="cluster",
+                              autotune=False, buckets=(2,),
+                              fault_plan=plan, **kw)
+
+
+def test_deadline_strikes_descend_ladder():
+    plan = FaultPlan(seed=7).inject_slow_tick(seconds=0.05, times=3)
+    eng = _stub_fault_engine(plan, deadline_ms=5.0, deadline_strikes=2)
+    for tick in range(1, 4):
+        eng.submit(VigRequest(uid=tick, image=IMAGES[(1, "A")], tenant="A"))
+        assert eng.step() == 1
+    st = eng.stats()
+    # Tick 1 is the bucket program's first (compile-bearing) tick —
+    # never a deadline signal; ticks 2 and 3 miss and degrade.
+    assert st["deadline_misses"] == 2
+    assert st["fallback_level"] == 1
+    assert any(f["kind"] == "deadline_degrade" for f in st["faults"])
+    assert plan.counts()["slow_tick"] == 3
+
+
+def test_fast_ticks_never_miss_deadline():
+    eng = _stub_fault_engine(None, deadline_ms=250.0)
+    for tick in range(1, 4):
+        eng.submit(VigRequest(uid=tick, image=IMAGES[(1, "A")], tenant="A"))
+        eng.step()
+    st = eng.stats()
+    assert st["deadline_misses"] == 0 and st["fallback_level"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Parking faults (satellite: eviction/parking under injected loss)
+
+
+def _parking_scenario(cluster_model, plan):
+    """slots=2: A,B bind; C evicts A (parked); A returns and restores
+    — unless the plan says its parked rows are gone."""
+    cfg, params = cluster_model
+    eng = VigServeEngine(cfg, params, digc_impl="cluster", autotune=False,
+                         buckets=(2,), fault_plan=plan)
+    rng = np.random.default_rng(11)
+    imgs = {k: _image(rng) for k in ("A1", "B1", "C2", "A3")}
+    r = {}
+    for uid, (key, tenant) in enumerate(
+            [("A1", "A"), ("B1", "B")]):
+        r[key] = VigRequest(uid=uid, image=imgs[key], tenant=tenant)
+        eng.submit(r[key])
+    eng.step()
+    r["C2"] = VigRequest(uid=2, image=imgs["C2"], tenant="C")
+    eng.submit(r["C2"])
+    eng.step()
+    assert "A" in eng.stats()["parked_tenants"]
+    r["A3"] = VigRequest(uid=3, image=imgs["A3"], tenant="A")
+    eng.submit(r["A3"])
+    eng.step()
+    return cfg, params, eng, r
+
+
+def test_injected_parking_loss_readmits_cold(cluster_model):
+    plan = FaultPlan(seed=8).inject_parking_loss("A")
+    cfg, params, eng, r = _parking_scenario(cluster_model, plan)
+
+    assert plan.counts() == {"parking_loss": 1}
+    st = eng.stats()
+    assert st["park_losses"] == 1
+    assert st["park_hits"] == 0
+    assert st["state_resets"] >= 1
+    assert any(f["kind"] == "parking_loss" and f["tenant"] == "A"
+               for f in st["faults"])
+    # The dropped-parked tenant re-admitted COLD: its slot shows in
+    # last_resets (not last_restores) and its logits are a cold replay.
+    slot = eng._tenant_slot["A"]
+    assert slot in eng.last_resets and slot not in eng.last_restores
+    want, _ = _replay_tenant(cfg, params, "cluster", [r["A3"]])
+    np.testing.assert_allclose(r["A3"].logits, want[0], rtol=1e-5,
+                               atol=1e-5)
+    assert r["A3"].fault is None  # loss is recovery, not request failure
+
+
+def test_transient_park_restore_error_retries_warm(cluster_model):
+    plan = FaultPlan(seed=9).inject_park_restore_error("A", times=1)
+    cfg, params, eng, r = _parking_scenario(cluster_model, plan)
+
+    assert plan.counts() == {"parking_transient": 1}
+    st = eng.stats()
+    assert st["retries"] >= 1
+    assert st["park_losses"] == 0
+    assert st["park_hits"] == 1  # the retry restored the rows warm
+    # Warm restore: A3 continues from A1's state, not from cold.
+    _, warm_state = _replay_tenant(cfg, params, "cluster", [r["A1"]])
+    want, _ = _replay_tenant(cfg, params, "cluster", [r["A3"]],
+                             state=warm_state)
+    np.testing.assert_allclose(r["A3"].logits, want[0], rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_capacity_park_eviction_accounting(cluster_model):
+    """park_capacity=1 drops the oldest parked copy (park_evictions);
+    the dropped tenant re-admits cold without any injected fault."""
+    cfg, params = cluster_model
+    eng = VigServeEngine(cfg, params, digc_impl="cluster", autotune=False,
+                         buckets=(1,), park_capacity=1)
+    rng = np.random.default_rng(12)
+    for uid, tenant in enumerate(["A", "B", "C"]):
+        eng.submit(VigRequest(uid=uid, image=_image(rng), tenant=tenant))
+        eng.step()  # each admission evicts + parks the previous tenant
+    st = eng.stats()
+    assert st["park_evictions"] >= 1  # A's copy dropped when B parked
+    assert "A" not in st["parked_tenants"]
+    req = VigRequest(uid=9, image=_image(rng), tenant="A")
+    eng.submit(req)
+    eng.step()
+    slot = eng._tenant_slot["A"]
+    assert slot in eng.last_resets  # no parked copy left: cold re-admit
+    assert eng.stats()["park_losses"] == 0  # capacity drop, not a fault
+
+
+# ---------------------------------------------------------------------------
+# submit() validation (satellite: typed errors naming the field)
+
+
+def _valid_engine():
+    cfg, params = _tiny_vig("reference")
+    return VigServeEngine(cfg, params, digc_impl="reference",
+                          autotune=False, buckets=(2,))
+
+
+def test_submit_rejects_wrong_ndim():
+    eng = _valid_engine()
+    with pytest.raises(ValueError, match=r"VigRequest\.image.*ndim"):
+        eng.submit(VigRequest(uid=1, image=np.zeros((16, 16), np.float32)))
+    assert not eng.queue
+
+
+def test_submit_rejects_wrong_shape():
+    eng = _valid_engine()
+    with pytest.raises(ValueError, match=r"VigRequest\.image.*shape"):
+        eng.submit(VigRequest(uid=2,
+                              image=np.zeros((8, 8, 3), np.float32)))
+
+
+def test_submit_rejects_non_float_dtype():
+    eng = _valid_engine()
+    with pytest.raises(ValueError, match=r"VigRequest\.image.*dtype"):
+        eng.submit(VigRequest(uid=3,
+                              image=np.zeros((16, 16, 3), np.int32)))
+
+
+def test_submit_error_names_the_uid():
+    eng = _valid_engine()
+    with pytest.raises(ValueError, match="uid=41"):
+        eng.submit(VigRequest(uid=41, image=np.zeros((1,), np.float32)))
+
+
+def test_submit_accepts_valid_request():
+    eng = _valid_engine()
+    eng.submit(VigRequest(uid=4, image=np.zeros((16, 16, 3), np.float32)))
+    assert len(eng.queue) == 1
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+
+
+def test_plan_rejects_unknown_site():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan()._add("no.such.site", lambda v, c: v, {}, 1)
+
+
+def test_plan_times_bounds_firing():
+    plan = FaultPlan(seed=0).inject_nonfinite_input(times=2)
+    img = np.zeros((4, 4), np.float32)
+    for _ in range(5):
+        plan.fire("admit.image", value=img, tenant="T")
+    assert plan.counts() == {"nonfinite_input": 2}
+
+
+def test_plan_criteria_scope_tenant_and_tick():
+    plan = FaultPlan(seed=0).inject_nonfinite_input("B", tick=3, times=None)
+    img = np.zeros((2, 2), np.float32)
+    out = plan.fire("admit.image", value=img, tenant="A", tick=3)
+    assert np.isfinite(out).all()  # wrong tenant
+    out = plan.fire("admit.image", value=img, tenant="B", tick=2)
+    assert np.isfinite(out).all()  # wrong tick
+    out = plan.fire("admit.image", value=img, tenant="B", tick=3)
+    assert not np.isfinite(out).all()
+    assert plan.counts() == {"nonfinite_input": 1}
+
+
+def test_plan_is_deterministic_across_instances():
+    img = np.zeros((8, 8), np.float32)
+    outs = []
+    for _ in range(2):
+        plan = FaultPlan(seed=17).inject_nonfinite_input(count=4)
+        outs.append(plan.fire("admit.image", value=img, tenant="T"))
+    np.testing.assert_array_equal(np.isnan(outs[0]), np.isnan(outs[1]))
+    assert np.isnan(outs[0]).sum() > 0
+
+
+def test_sites_registry_is_closed():
+    assert set(SITES) == {
+        "admit.image", "state.rows", "program.build", "park.restore",
+        "tick.serve", "digc.x",
+    }
+
+
+def test_fault_info_as_dict_stringifies_tenant():
+    info = FaultInfo(kind="k", site="admit.image", tenant=("t", 1), tick=2)
+    d = info.as_dict()
+    assert d["tenant"] == str(("t", 1)) and d["tick"] == 2
+
+
+# ---------------------------------------------------------------------------
+# digc.x — kernel-level injection
+
+
+def test_digc_x_site_corrupts_eager_features():
+    x = np.random.default_rng(0).standard_normal((2, 16, 8)).astype(
+        np.float32)
+    clean = np.asarray(digc(x, k=3, impl="reference"))
+    plan = FaultPlan(seed=20).inject_nonfinite_input(site="digc.x")
+    faulty = np.asarray(digc(x, k=3, impl="reference", fault_plan=plan))
+    assert plan.counts() == {"nonfinite_input": 1}
+    assert not np.array_equal(clean, faulty)
+
+
+def test_digc_without_plan_is_unchanged():
+    x = np.random.default_rng(1).standard_normal((16, 8)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(digc(x, k=3, impl="reference")),
+        np.asarray(digc(x, k=3, impl="reference", fault_plan=None)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder (core.builder)
+
+
+def test_fallback_chain_orderings():
+    assert DEGRADATION_LADDER == ("pallas", "blocked", "reference")
+    assert fallback_chain("pallas") == ("blocked", "reference")
+    assert fallback_chain("blocked") == ("reference",)
+    assert fallback_chain("reference") == ()
+    # approximate tiers degrade into the exact chain
+    for impl in ("cluster", "axial", "ring"):
+        assert fallback_chain(impl) == ("blocked", "reference")
+
+
+def test_degraded_spec_preserves_graph_semantics():
+    spec = resolve_spec(None, impl="cluster", k=5, dilation=2)
+    down = degraded_spec(spec, "blocked")
+    assert down.impl == "blocked"
+    assert (down.k, down.dilation, down.causal) == (5, 2, spec.causal)
+
+
+# ---------------------------------------------------------------------------
+# State integrity primitives (core.state)
+
+
+def test_row_fingerprint_sees_single_row_changes():
+    cfg, _ = _tiny_vig("cluster")
+    state = vig.init_vig_state(cfg, 4, "cluster", per_slot=True)
+    before = state.row_fingerprints([0, 1, 2, 3])
+    plan = FaultPlan(seed=21).inject_state_corruption(
+        field="centroids", row=2, mode="bitflip")
+    corrupted = plan.fire("state.rows", value=state)
+    after = corrupted.row_fingerprints([0, 1, 2, 3])
+    for key in before:
+        changed = [r for r in range(4) if before[key][r] != after[key][r]]
+        assert changed in ([], [2]), (key, changed)
+    assert any(before[key][2] != after[key][2] for key in before)
+
+
+def test_rows_finite_flags_nan_rows():
+    cfg, _ = _tiny_vig("cluster")
+    state = vig.init_vig_state(cfg, 4, "cluster", per_slot=True)
+    assert all(state.rows_finite([0, 1, 2, 3]).values())
+    plan = FaultPlan(seed=22).inject_state_corruption(
+        field="centroids", row=3, mode="nan")
+    corrupted = plan.fire("state.rows", value=state)
+    finite = corrupted.rows_finite([0, 1, 2, 3])
+    assert finite == {0: True, 1: True, 2: True, 3: False}
+
+
+def test_guards_off_restores_unguarded_path():
+    """guards=False must keep the PR-6 behavior: no fingerprinting, no
+    screening — an injected NaN image sails into the (stub) program."""
+    plan = FaultPlan(seed=23).inject_nonfinite_input("A")
+    eng = _stub_fault_engine(plan, guards=False)
+    req = VigRequest(uid=0, image=IMAGES[(1, "A")], tenant="A")
+    eng.submit(req)
+    assert eng.step() == 1
+    assert req.done and req.logits is not None and req.fault is None
+    assert plan.counts() == {"nonfinite_input": 1}
+    st = eng.stats()
+    assert st["quarantines"] == 0 and st["state_resets"] == 0
+    assert eng._row_tokens == {}

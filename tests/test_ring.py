@@ -9,7 +9,6 @@ run fast enough for the tier-1 job. The fast tests ride a degenerate
 """
 
 import numpy as np
-import pytest
 
 from _subproc import run_snippet
 
@@ -211,10 +210,9 @@ def test_ring_4dev_parity_warm_cold_and_sharded_state():
     assert "RING_4DEV_OK" in out
 
 
-# -- 8-device exhaustive (slow job) -----------------------------------------
+# -- 8-device exhaustive (fast tier since the CPU-platform pin) -------------
 
 
-@pytest.mark.slow
 def test_ring_digc_exact():
     out = _run(
         """
@@ -237,7 +235,6 @@ def test_ring_digc_exact():
     assert "RING_OK" in out
 
 
-@pytest.mark.slow
 def test_ring_digc_self_graph():
     out = _run(
         """
@@ -257,7 +254,6 @@ def test_ring_digc_self_graph():
     assert "RING_SELF_OK" in out
 
 
-@pytest.mark.slow
 def test_ring_digc_batched_registry():
     """(B, N, D) through the registry == stacked per-image reference —
     one shard_map program for the whole batch (the per-image unroll is

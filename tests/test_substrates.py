@@ -159,7 +159,6 @@ def test_grad_accumulation_equivalence():
 # serving
 
 
-@pytest.mark.slow
 def test_serve_engine_continuous_batching():
     from repro.serve.engine import Request, ServeEngine
 
