@@ -1,8 +1,12 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV
 # and dump the rows to BENCH_digc.json (perf trajectory record).
 import argparse
+import json
+import re
+import sys
+from pathlib import Path
 
-from benchmarks.common import dump_json, header
+from benchmarks.common import ROWS, dump_json, header
 from benchmarks import (
     bench_table1_cycles,
     bench_table2_resources,
@@ -38,6 +42,63 @@ SMOKE_ARGS = {
 }
 
 
+# Rows the regression gate watches: the guard-overhead ratio and every
+# stale-graph warm row (absolute us and speedup ratios alike).
+_REGRESS_RE = re.compile(
+    r"^serve/(guarded_overhead_warm$|stale_.*(_warm_us|_warm)$)"
+)
+_REGRESS_RATIO = 1.15
+
+
+def _workload_n(derived: str):
+    m = re.search(r"\bN=(\d+)", derived or "")
+    return m.group(1) if m else None
+
+
+def check_regress(baseline_path: str) -> list[str]:
+    """Compare this run's watched rows against the committed record.
+
+    A ``*_us`` row regresses when it got slower by more than
+    ``_REGRESS_RATIO``; a speedup/overhead ratio row regresses when the
+    speedup shrank (or overhead grew) past the same ratio. Rows only
+    compare against a baseline row at the *same workload* (the ``N=``
+    tag in the derived column) — smoke runs use toy shapes, so their
+    rows exercise the gate's mechanics without false alarms against
+    the committed full-resolution record."""
+    path = Path(baseline_path)
+    if not path.exists():
+        print(f"# check-regress: no baseline at {path}, skipped",
+              flush=True)
+        return []
+    base = {
+        r["name"]: r for r in
+        json.loads(path.read_text()).get("rows", [])
+    }
+    failures = []
+    for name, value, derived in ROWS:
+        if not _REGRESS_RE.match(name) or name not in base:
+            continue
+        ref = base[name]
+        if _workload_n(derived) != _workload_n(ref.get("derived", "")):
+            continue
+        want = float(ref["us_per_call"])
+        if name.endswith("_us"):
+            bad = value > want * _REGRESS_RATIO
+            direction = "slower"
+        elif "overhead" in name:
+            bad = value > want * _REGRESS_RATIO
+            direction = "more overhead"
+        else:  # speedup rows: smaller is worse
+            bad = value < want / _REGRESS_RATIO
+            direction = "less speedup"
+        if bad:
+            failures.append(
+                f"{name}: {value:.3f} vs baseline {want:.3f} "
+                f"({direction} than the {_REGRESS_RATIO}x gate)"
+            )
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=list(SUITES))
@@ -48,6 +109,11 @@ def main() -> None:
                          "(not a perf record)")
     ap.add_argument("--json", default="BENCH_digc.json",
                     help="output JSON path ('' disables)")
+    ap.add_argument("--check-regress", action="store_true",
+                    help="fail if serve/guarded_overhead_warm or any "
+                         "serve/stale_* warm row regresses >"
+                         f"{_REGRESS_RATIO}x vs the committed "
+                         "BENCH_digc.json (same-workload rows only)")
     args = ap.parse_args()
     if args.smoke and args.json == "BENCH_digc.json":
         args.json = ""  # never overwrite the perf record with smoke rows
@@ -62,6 +128,13 @@ def main() -> None:
             fn(resolutions=(256,))
         else:
             fn()
+    if args.check_regress:
+        failures = check_regress("BENCH_digc.json")
+        if failures:
+            for f in failures:
+                print(f"# REGRESSION {f}", flush=True)
+            sys.exit(1)
+        print("# check-regress: ok", flush=True)
     if args.json:
         path = dump_json(args.json, suites=args.only)
         print(f"# wrote {path}", flush=True)

@@ -73,6 +73,20 @@ class DigcSpec:
     # --- axial (GreedyViG family)
     grid_h: Optional[int] = None
     grid_w: Optional[int] = None
+    # --- stale-graph serving (DESIGN.md §12): drift-gated reuse of the
+    # cached graph carried in a DigcStateEntry. Policies:
+    #   "off"     — rebuild every call (the default; None means off)
+    #   "layer"   — every call may serve the cached graph when the
+    #               per-row feature drift is below drift_tau and the
+    #               graph is younger than max_stale gated calls
+    #   "tick"    — only the first call per forward (per stage) gates;
+    #               later layers of the same tick reuse unconditionally
+    #   "overlap" — always serve the cached (one-call-stale) graph and
+    #               issue the refresh build data-independently of the
+    #               convolution (pipelined double-buffer)
+    reuse: Optional[str] = None
+    drift_tau: Optional[float] = None
+    max_stale: Optional[int] = None
     # --- ring (distributed): mesh + co-node ring axis, plus an
     # optional second mesh axis sharding the batch rows data-parallel
     # (serving slot rows x ring-sharded co-nodes, DESIGN.md §10)
@@ -119,6 +133,32 @@ _COMMON_FIELDS = ("impl", "k", "dilation", "causal")
 KNOB_FIELDS: tuple[str, ...] = tuple(
     f.name for f in dataclasses.fields(DigcSpec) if f.name not in _COMMON_FIELDS
 )
+
+# -- stale-graph reuse policy (DESIGN.md §12) ------------------------------
+
+REUSE_POLICIES: tuple[str, ...] = ("off", "layer", "tick", "overlap")
+REUSE_KNOBS: frozenset = frozenset({"reuse", "drift_tau", "max_stale"})
+DEFAULT_DRIFT_TAU = 0.05
+DEFAULT_MAX_STALE = 4
+
+
+def reuse_params(spec: DigcSpec) -> tuple[Optional[str], float, int]:
+    """The spec's effective (policy, drift_tau, max_stale) triple.
+
+    Policy is None when reuse is off ("off" and unset collapse — both
+    mean every call rebuilds). Unset knobs take the serving defaults;
+    the values themselves are validated by ``GraphBuilder.validate``.
+    """
+    policy = spec.reuse if spec.reuse not in (None, "off") else None
+    tau = (
+        float(spec.drift_tau) if spec.drift_tau is not None
+        else DEFAULT_DRIFT_TAU
+    )
+    stale = (
+        int(spec.max_stale) if spec.max_stale is not None
+        else DEFAULT_MAX_STALE
+    )
+    return policy, tau, stale
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +210,35 @@ class GraphBuilder:
             raise ValueError(f"DIGC impl {self.name!r} does not support causal")
         if has_pos_bias and not self.supports_pos_bias:
             raise ValueError(f"DIGC impl {self.name!r} does not support pos_bias")
+        # Reuse-policy values (the knob *names* were screened above):
+        # malformed policies must fail at dispatch, not three ticks into
+        # a serving loop as a silent always-rebuild.
+        if spec.reuse is not None and spec.reuse not in REUSE_POLICIES:
+            raise ValueError(
+                f"DigcSpec.reuse={spec.reuse!r} is not a reuse policy; "
+                f"valid: {REUSE_POLICIES}"
+            )
+        if spec.drift_tau is not None:
+            if spec.drift_tau < 0:
+                raise ValueError(
+                    f"DigcSpec.drift_tau must be >= 0, got {spec.drift_tau}"
+                )
+            if spec.reuse in (None, "off"):
+                raise ValueError(
+                    "DigcSpec.drift_tau is set but reuse is off; pass "
+                    "reuse='layer'|'tick'|'overlap' (a gate threshold "
+                    "without a gate is a config error)"
+                )
+        if spec.max_stale is not None:
+            if spec.max_stale < 1:
+                raise ValueError(
+                    f"DigcSpec.max_stale must be >= 1, got {spec.max_stale}"
+                )
+            if spec.reuse in (None, "off"):
+                raise ValueError(
+                    "DigcSpec.max_stale is set but reuse is off; pass "
+                    "reuse='layer'|'tick'|'overlap'"
+                )
 
 
 _REGISTRY: dict[str, GraphBuilder] = {}
@@ -294,7 +363,9 @@ def degraded_spec(spec: DigcSpec, impl: str) -> DigcSpec:
     """A clean spec serving ``spec``'s common fields through a
     degraded impl: strategy knobs are dropped — they belong to the
     tier that just failed, and the fallback must not inherit, say, a
-    Pallas tile shape as a blocked block size."""
+    Pallas tile shape as a blocked block size. The stale-graph reuse
+    knobs drop too: a degraded engine rebuilds every graph — trading
+    speed is the ladder's contract, trading graph freshness is not."""
     return DigcSpec(
         impl=impl, k=spec.k, dilation=spec.dilation, causal=spec.causal
     )

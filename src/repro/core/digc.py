@@ -47,13 +47,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import dataclasses
+
 from repro.core.builder import (
+    REUSE_KNOBS,
     DigcSpec,
     GraphBuilder,
     get_builder,
     promote_batch,
     register,
     resolve_spec,
+    reuse_params,
 )
 
 # Large-but-finite sentinel: inf would produce nan under (inf - inf) when a
@@ -200,6 +204,158 @@ def digc_blocked(
     return idx
 
 
+# --------------------------------------------------------------------------
+# Drift-gated stale-graph reuse (DESIGN.md §12).
+#
+# The graph index is a cached, versioned artifact living in the
+# DigcStateEntry (graph_idx/graph_dist + the graph_snap drift snapshot
+# and graph_age staleness counter). The gate below is impl-agnostic: it
+# wraps any supports_state builder's build, so every stateful tier
+# (blocked, cluster, ring) serves through the same policy machinery.
+# Everything is a runtime lax.cond inside the one donated jit program —
+# warm serving stays a single dispatch — and per batch row, so
+# co-batched tenants gate independently.
+
+
+def drift_stat(x: Array) -> Array:
+    """The cheap per-row feature statistic the reuse gate compares:
+    mean |x|^2 over nodes and channels, (B, N, D) -> (B,) float32.
+    Vision GNN's observation that patch features evolve smoothly across
+    layers is what makes this scalar a usable drift proxy; the
+    recall-vs-drift_tau bench rows measure how far it can be trusted."""
+    return jnp.mean(jnp.square(x.astype(jnp.float32)), axis=(1, 2))
+
+
+def _mix_rows(sel_row, kept, built):
+    """Per-row select between two pytree-aligned buffers: ``sel_row``
+    (B,) True keeps ``kept``'s row. None passes ``built`` through."""
+    if kept is None or built is None:
+        return built
+    sel = sel_row.reshape(sel_row.shape + (1,) * (built.ndim - 1))
+    return jnp.where(sel, kept, built)
+
+
+def _stateful_build(builder, x3, y_arg, p3, spec, entry):
+    idx, dist, new_entry = builder.build(x3, y_arg, p3, spec,
+                                         state_entry=entry)
+    return idx, dist, new_entry
+
+
+def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first):
+    """The drift-gated reuse path around a stateful builder's build.
+
+    Returns (idx, dist, new_entry). Falls back to the plain stateful
+    build (bit-identical to ``reuse="off"``) whenever the policy cannot
+    engage *statically*: no cached-graph buffers in the entry, a cached
+    shape from another workload, or ``drift_tau == 0`` (the documented
+    "reuse disabled" verification setting — a zero threshold admits no
+    drift, including none at all).
+    """
+    policy, tau, max_stale = reuse_params(spec)
+    b, n, _ = x3.shape
+    if (
+        policy is None
+        or entry.graph_idx is None
+        or entry.graph_idx.shape != (b, n, spec.k)
+    ):
+        return _stateful_build(builder, x3, y_arg, p3, spec, entry)
+    if policy in ("layer", "tick") and tau == 0.0:
+        return _stateful_build(builder, x3, y_arg, p3, spec, entry)
+
+    valid = (
+        entry.row_warm if entry.row_step is not None
+        else jnp.broadcast_to(entry.warm, (b,))
+    )
+    stat = drift_stat(x3)
+
+    if policy == "overlap":
+        return _overlap_build(
+            builder, x3, y_arg, p3, spec, entry, valid=valid, stat=stat
+        )
+
+    drift = jnp.abs(stat - entry.graph_snap) / jnp.maximum(
+        jnp.abs(entry.graph_snap), 1e-9
+    )
+    if policy == "tick" and not reuse_first:
+        # Within a tick, layers after the stage's gated first call reuse
+        # whatever that call left (fresh or reused) unconditionally and
+        # without aging — the graph is per-tick in this policy, so
+        # staleness is counted in ticks, not layers.
+        reuse_row = valid
+        age_inc = 0
+    else:
+        reuse_row = valid & (entry.graph_age < max_stale) & (drift < tau)
+        age_inc = 1
+
+    def serve_cached():
+        return (
+            entry.graph_idx,
+            entry.graph_dist,
+            entry.bump(graph_age=entry.graph_age + age_inc),
+        )
+
+    def rebuild_mixed():
+        f_idx, f_dist, built = _stateful_build(
+            builder, x3, y_arg, p3, spec, entry
+        )
+        idx = _mix_rows(reuse_row, entry.graph_idx, f_idx)
+        dist = _mix_rows(reuse_row, entry.graph_dist, f_dist)
+        # Per-row independence: a reused row must carry exactly the
+        # builder state its solo replay (which never built) would —
+        # keep its centroids/norms, not the mixed batch's rebuild.
+        return idx, dist, dataclasses.replace(
+            built,
+            centroids=_mix_rows(reuse_row, entry.centroids, built.centroids),
+            sq_y=_mix_rows(reuse_row, entry.sq_y, built.sq_y),
+            graph_idx=idx,
+            graph_dist=dist,
+            graph_snap=jnp.where(reuse_row, entry.graph_snap, stat),
+            graph_age=jnp.where(
+                reuse_row, entry.graph_age + age_inc, jnp.int32(0)
+            ),
+        )
+
+    # All-reuse is the serving steady state: the cond's true branch
+    # touches no distance compute at all — the whole build is skipped,
+    # which is where the warm per-tick speedup comes from.
+    return lax.cond(jnp.all(reuse_row), serve_cached, rebuild_mixed)
+
+
+def _overlap_build(builder, x3, y_arg, p3, spec, entry, *, valid, stat):
+    """Double-buffered overlap (DESIGN.md §12): serve the cached
+    (one-call-stale) graph unconditionally for warm rows, and issue the
+    refresh build so that the *served* outputs never depend on it — the
+    fresh graph flows only into the returned entry (next call's cache),
+    so XLA's scheduler is free to run it concurrently with the MRConv/
+    FFN compute consuming the cached graph. Cold rows take a build
+    inside the mixed branch (a second build that tick — cold only)."""
+
+    def serve_cached():
+        return entry.graph_idx, entry.graph_dist
+
+    def serve_mixed():
+        f_idx, f_dist, _ = _stateful_build(
+            builder, x3, y_arg, p3, spec, entry
+        )
+        return (
+            _mix_rows(valid, entry.graph_idx, f_idx),
+            _mix_rows(valid, entry.graph_dist, f_dist),
+        )
+
+    idx, dist = lax.cond(jnp.all(valid), serve_cached, serve_mixed)
+    # The refresh build: data-independent of (idx, dist) by
+    # construction — it is captured only by the state update.
+    f_idx, f_dist, built = _stateful_build(builder, x3, y_arg, p3, spec, entry)
+    new_entry = dataclasses.replace(
+        built,
+        graph_idx=f_idx,
+        graph_dist=f_dist,
+        graph_snap=stat,
+        graph_age=jnp.zeros_like(entry.graph_age),
+    )
+    return idx, dist, new_entry
+
+
 def digc(
     x: Array,
     y: Optional[Array] = None,
@@ -215,6 +371,7 @@ def digc(
     cache_key=None,
     state=None,
     state_key=None,
+    reuse_first: bool = True,
     fault_plan=None,
     **knobs,
 ):
@@ -235,6 +392,11 @@ def digc(
     frozen-gallery norms) read their entry's buffers gated on its step
     counter and return an updated entry; builders without state (or a
     state with no entry for the key) pass the state through unchanged.
+    When the spec carries a ``reuse`` policy and the entry carries
+    cached-graph buffers, the call serves through the drift gate
+    (DESIGN.md §12); ``reuse_first=False`` marks a non-first call of
+    the same forward pass (the ``"tick"`` policy reuses those
+    unconditionally instead of re-gating).
 
     ``cache``/``cache_key`` (a ``repro.core.engine.DigcCache`` plus a
     caller-chosen identity for the reusable state, e.g. a model layer
@@ -265,8 +427,13 @@ def digc(
             )
         entry = state.get(state_key)
         if builder.supports_state and entry is not None:
-            idx, dist, new_entry = builder.build(
-                x3, y_arg, p3, spec, state_entry=entry
+            # The stale-graph reuse gate (DESIGN.md §12) wraps every
+            # stateful builder uniformly; with reuse off it *is* the
+            # plain build. ``reuse_first`` marks the first call of a
+            # forward pass for this entry (the tick-policy gate point).
+            idx, dist, new_entry = _reuse_build(
+                builder, x3, y_arg, p3, spec, entry,
+                reuse_first=reuse_first,
             )
             state = state.set(state_key, new_entry)
         else:
@@ -377,7 +544,7 @@ register(GraphBuilder(
     build=_build_blocked,
     knobs=frozenset({
         "block_n", "block_m", "merge", "fuse_norms", "mxu_bf16", "group_w",
-    }),
+    }) | REUSE_KNOBS,
     exact=True,  # merge="packed" / fuse_norms / mxu_bf16 opt into tie-tolerance
     supports_pos_bias=True,
     supports_causal=True,

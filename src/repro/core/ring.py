@@ -37,7 +37,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.builder import DigcSpec, GraphBuilder, promote_batch, register
+from repro.core.builder import (
+    REUSE_KNOBS, DigcSpec, GraphBuilder, promote_batch, register,
+)
 from repro.core.compat import shard_map as _shard_map
 from repro.core.digc import BIG, dilate, merge_topk
 
@@ -281,7 +283,7 @@ def _build_ring(x, y, pos_bias, spec: DigcSpec, state_entry=None):
 register(GraphBuilder(
     name="ring",
     build=_build_ring,
-    knobs=frozenset({"mesh", "axis_name", "batch_axis"}),
+    knobs=frozenset({"mesh", "axis_name", "batch_axis"}) | REUSE_KNOBS,
     exact=True,
     distributed=True,
     supports_state=True,  # sharded co-node norms via DigcState entries

@@ -31,6 +31,14 @@ stage name) to a ``DigcStateEntry``:
     one (row just reset on slot admission) without either leaking into
     the other. Absent (None) on single-tenant state: the scalar
     ``step`` gate applies to the whole batch, the PR-3 behavior.
+  * ``graph_idx`` / ``graph_dist`` / ``graph_snap`` / ``graph_age`` —
+    the stale-graph serving buffers (DESIGN.md §12): the cached
+    (B, N, k) graph last built for this entry, the (B,) per-row feature
+    statistic it was built from, and the (B,) staleness age in gated
+    calls. Allocated together via ``state_entry(graph_shape=)``; the
+    drift-gated reuse policies (``DigcSpec.reuse``) serve the cached
+    graph when drift stays under ``drift_tau`` and the age under
+    ``max_stale``, rebuilding otherwise.
 
 Invalidation rules (who may reuse what):
 
@@ -47,6 +55,11 @@ Invalidation rules (who may reuse what):
     ``sq_y`` must match the co-node *contents* exactly: an entry with
     ``sq_y`` asserts the gallery identified by its key is frozen — the
     caller must re-init the state when the gallery version changes.
+  * Cached graphs invalidate through three independent guards: a
+    *static* shape check (a workload change means the buffers never
+    engage), the *runtime* drift gate (``graph_snap`` vs the current
+    feature statistic), and the staleness bound (``graph_age`` vs
+    ``max_stale``). Only ``digc()``'s reuse path writes them.
   * Row reuse is **per tenant** (multi-tenant serving): a state row may
     only warm-start requests of the tenant that wrote it. The serving
     engine enforces this with ``take_rows`` / ``put_rows`` /
@@ -102,6 +115,17 @@ class DigcStateEntry:
     centroids: Optional[jax.Array] = None  # (B, C, D) | None
     sq_y: Optional[jax.Array] = None  # (B, M) | None
     row_step: Optional[jax.Array] = None  # (B,) int32 | None; 0 = cold row
+    # -- stale-graph serving buffers (DESIGN.md §12) --------------------
+    # The cached, versioned graph artifact the drift-gated reuse
+    # policies serve (``DigcSpec.reuse``): the last built (idx, dist)
+    # pair, the per-row feature statistic it was built from, and the
+    # per-row staleness age (gated calls since the last rebuild).
+    # Validity rides ``row_step``/``step`` like every other buffer: a
+    # cold row's cached graph is never read.
+    graph_idx: Optional[jax.Array] = None  # (B, N, k) int32 | None
+    graph_dist: Optional[jax.Array] = None  # (B, N, k) f32 | None
+    graph_snap: Optional[jax.Array] = None  # (B,) f32 drift snapshot | None
+    graph_age: Optional[jax.Array] = None  # (B,) int32; 0 = just built
 
     @property
     def warm(self) -> jax.Array:
@@ -128,7 +152,14 @@ class DigcStateEntry:
     # -- per-slot row lifecycle (multi-tenant serving, DESIGN.md §9) ----
 
     def _row_fields(self):
-        return ("centroids", "sq_y", "row_step")
+        # Every per-row buffer: the take/put/reset lifecycle, the crc32
+        # integrity fingerprints and the finiteness screen all iterate
+        # this tuple, so the cached-graph buffers get the same coverage
+        # as the warm-start buffers by construction (DESIGN.md §11/§12).
+        return (
+            "centroids", "sq_y", "row_step",
+            "graph_idx", "graph_dist", "graph_snap", "graph_age",
+        )
 
     def take_rows(self, rows) -> "DigcStateEntry":
         """Gather batch rows: entry over rows ``rows`` (any index array/
@@ -223,6 +254,7 @@ def state_entry(
     *,
     centroids_shape: Optional[tuple[int, ...]] = None,
     sq_y_shape: Optional[tuple[int, ...]] = None,
+    graph_shape: Optional[tuple[int, int, int]] = None,
     dtype=jnp.float32,
     rows: Optional[int] = None,
     mesh=None,
@@ -248,6 +280,7 @@ def state_entry(
     ``put_rows`` / ``reset_rows`` re-place their results with the
     source buffer's sharding.
     """
+    graph_b = None if graph_shape is None else graph_shape[0]
     entry = DigcStateEntry(
         step=jnp.zeros((), jnp.int32),
         centroids=(
@@ -256,6 +289,23 @@ def state_entry(
         ),
         sq_y=None if sq_y_shape is None else jnp.zeros(sq_y_shape, jnp.float32),
         row_step=None if rows is None else jnp.zeros((rows,), jnp.int32),
+        # ``graph_shape`` (B, N, k) allocates the stale-graph buffers
+        # (DESIGN.md §12): cached (idx, dist), the per-row drift
+        # snapshot and the staleness age. Like every other buffer the
+        # zeros are structure, not values — a cold row rebuilds.
+        graph_idx=(
+            None if graph_shape is None else jnp.zeros(graph_shape, jnp.int32)
+        ),
+        graph_dist=(
+            None if graph_shape is None
+            else jnp.zeros(graph_shape, jnp.float32)
+        ),
+        graph_snap=(
+            None if graph_shape is None else jnp.zeros((graph_b,), jnp.float32)
+        ),
+        graph_age=(
+            None if graph_shape is None else jnp.zeros((graph_b,), jnp.int32)
+        ),
     )
     if mesh is None:
         return entry
@@ -288,6 +338,13 @@ def state_entry(
         centroids=place(entry.centroids, PartitionSpec()),
         sq_y=place(entry.sq_y, sq_spec),
         row_step=place(entry.row_step, PartitionSpec()),
+        # Cached graphs are per-row values every device reads whole
+        # (the reuse gate selects per batch row, not per shard):
+        # replicate, like the centroids.
+        graph_idx=place(entry.graph_idx, PartitionSpec()),
+        graph_dist=place(entry.graph_dist, PartitionSpec()),
+        graph_snap=place(entry.graph_snap, PartitionSpec()),
+        graph_age=place(entry.graph_age, PartitionSpec()),
     )
 
 

@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.builder import DigcSpec, GraphBuilder, promote_batch, register
+from repro.core.builder import (
+    REUSE_KNOBS, DigcSpec, GraphBuilder, promote_batch, register,
+)
 from repro.core.digc import BIG, digc_blocked, dilate, pairwise_sq_dists
 from repro.core.engine import select_topkd
 
@@ -528,7 +530,8 @@ def _build_axial(x, y, pos_bias, spec: DigcSpec):
 register(GraphBuilder(
     name="cluster",
     build=_build_cluster,
-    knobs=frozenset({"n_clusters", "n_probe", "capacity_factor", "seed"}),
+    knobs=frozenset({"n_clusters", "n_probe", "capacity_factor", "seed"})
+    | REUSE_KNOBS,
     exact=False,
     supports_cache=True,
     supports_state=True,  # jit-native centroid warm starts via DigcState

@@ -430,6 +430,139 @@ class DigcTuner:
         return schedules, results
 
 
+@dataclasses.dataclass
+class ReuseTuneResult:
+    """One measured point of the reuse-policy search (DESIGN.md §12)."""
+
+    policy: str
+    drift_tau: float
+    max_stale: int
+    reuse_frac: float  # fraction of calls served from the cached graph
+    recall: float      # neighbor recall of served vs per-call exact
+    admitted: bool     # recall >= floor
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _served_recall(served: np.ndarray, exact: np.ndarray) -> float:
+    k = exact.shape[-1]
+    s = served.reshape(-1, k)
+    e = exact.reshape(-1, k)
+    hits = 0
+    for i in range(e.shape[0]):
+        hits += len(set(e[i]) & set(s[i]))
+    return hits / e.size
+
+
+def tune_reuse(
+    ticks: Sequence[Sequence[tuple]],
+    *,
+    spec: DigcSpec,
+    policy: str = "tick",
+    taus: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
+    max_stale: int = 4,
+    recall_floor: float = 0.95,
+) -> tuple[DigcSpec, list[ReuseTuneResult]]:
+    """Pick the widest drift gate that keeps served-graph recall above
+    ``recall_floor``, by replaying a captured feature trace through the
+    stale-graph gate (DESIGN.md §12).
+
+    ``ticks`` is a sequence of ``digc_capture`` lists — one per
+    consecutive ``models.vig.vig_forward`` call on the live request
+    stream, each holding ``(layer_key, h, cond)`` per DIGC call. The
+    replay mirrors ``core.digc._reuse_build`` exactly (same drift
+    statistic, same strict ``<`` gate, same staleness bound) but runs
+    host-side against per-call exact graphs, so every candidate tau's
+    *served* recall — cached rows scored against what a rebuild would
+    have returned — is measured, not estimated. Among candidates whose
+    mean recall clears the floor, the one skipping the most builds
+    wins; if none clears it, reuse stays off (the returned spec is
+    unchanged). A wider tau never lowers reuse, so this is the
+    recall-constrained maximum of the swept grid.
+    """
+    from repro.core.digc import digc, drift_stat
+
+    if policy not in ("layer", "tick", "overlap"):
+        raise ValueError(f"tune_reuse: unknown policy {policy!r}")
+    base = spec.replace(reuse=None, drift_tau=None, max_stale=None)
+
+    # Group the trace per graph-cache entry, preserving tick structure,
+    # and compute each call's exact graph + drift statistic once.
+    per_key: dict[str, list[list[dict]]] = {}
+    for tick in ticks:
+        seen_this_tick: dict[str, int] = {}
+        for layer_key, h, cond in tick:
+            x3 = h if h.ndim == 3 else h[None]
+            m = cond.shape[-2] if cond is not None else x3.shape[-2]
+            dil = max(base.dilation, 1)
+            k_eff = min(base.k, m // dil) or 1
+            if k_eff * dil > m:
+                dil = 1
+            call_spec = base.replace(k=k_eff, dilation=dil)
+            first = layer_key not in seen_this_tick
+            seen_this_tick[layer_key] = 1
+            rows = per_key.setdefault(layer_key, [])
+            if first:
+                rows.append([])
+            rows[-1].append({
+                "exact": np.asarray(digc(x3, cond, spec=call_spec)),
+                "stat": np.asarray(drift_stat(x3)),
+            })
+
+    results: list[ReuseTuneResult] = []
+    for tau in sorted(set(float(t) for t in taus)):
+        recalls: list[float] = []
+        reused = 0
+        total = 0
+        for calls_by_tick in per_key.values():
+            cached = snap = age = None
+            for calls in calls_by_tick:
+                for ci, call in enumerate(calls):
+                    stat, exact = call["stat"], call["exact"]
+                    total += stat.shape[0]
+                    if cached is None:
+                        reuse_row = np.zeros(stat.shape, bool)
+                    elif policy == "overlap":
+                        reuse_row = np.ones(stat.shape, bool)
+                    elif policy == "tick" and ci > 0:
+                        reuse_row = np.ones(stat.shape, bool)
+                    else:
+                        drift = (np.abs(stat - snap)
+                                 / np.maximum(np.abs(snap), 1e-9))
+                        reuse_row = (age < max_stale) & (drift < tau)
+                    reused += int(reuse_row.sum())
+                    if reuse_row.all() and policy != "overlap":
+                        served = cached
+                        age = age + (0 if policy == "tick" and ci > 0
+                                     else 1)
+                    else:
+                        sel = reuse_row.reshape(
+                            reuse_row.shape + (1,) * (exact.ndim - 1))
+                        served = (np.where(sel, cached, exact)
+                                  if cached is not None else exact)
+                        cached, snap = exact, stat
+                        age = np.where(reuse_row,
+                                       (age if age is not None else 0) + 1,
+                                       0)
+                    recalls.append(_served_recall(served, exact))
+        recall = float(np.mean(recalls)) if recalls else 1.0
+        frac = reused / total if total else 0.0
+        results.append(ReuseTuneResult(
+            policy, tau, max_stale, frac, recall,
+            bool(recall >= recall_floor),
+        ))
+        if policy == "overlap":
+            break  # tau does not enter the overlap gate
+
+    admitted = [r for r in results if r.admitted]
+    if not admitted:
+        return spec, results
+    best = max(admitted, key=lambda r: (r.reuse_frac, r.drift_tau))
+    return spec.replace(reuse=policy, drift_tau=best.drift_tau,
+                        max_stale=max_stale), results
+
+
 @dataclasses.dataclass(frozen=True)
 class VigSchedule:
     """Stage -> tuned ``DigcSpec`` map for a pyramid/isotropic model.
@@ -448,6 +581,32 @@ class VigSchedule:
             raise ValueError("empty VigSchedule")
         return self.stages[min(si, len(self.stages) - 1)]
 
+    def with_reuse(
+        self,
+        policy: Optional[str],
+        drift_tau: Optional[float] = None,
+        max_stale: Optional[int] = None,
+    ) -> "VigSchedule":
+        """Overlay a stale-graph reuse policy (DESIGN.md §12) on every
+        stage whose tier carries construction state. Stateless tiers
+        (e.g. the fused Pallas kernel) keep their tuned spec unchanged
+        — their builders have no cache to serve from, and the knobs
+        would be rejected by ``validate``. ``policy=None`` strips the
+        reuse knobs everywhere."""
+        from repro.core.builder import get_builder
+
+        stages = []
+        for s in self.stages:
+            if policy is None:
+                stages.append(s.replace(reuse=None, drift_tau=None,
+                                        max_stale=None))
+            elif get_builder(s.impl).supports_state:
+                stages.append(s.replace(reuse=policy, drift_tau=drift_tau,
+                                        max_stale=max_stale))
+            else:
+                stages.append(s)
+        return VigSchedule(stages=tuple(stages))
+
     def describe(self) -> list[dict]:
         return [
             {
@@ -458,6 +617,7 @@ class VigSchedule:
                 "merge": s.merge,
                 "fuse_norms": bool(s.fuse_norms),
                 "kernel_merge": s.kernel_merge,
+                "reuse": s.reuse,
             }
             for si, s in enumerate(self.stages)
         ]

@@ -175,6 +175,75 @@ def _dilation_for(cfg: VigConfig, global_block: int, m: int) -> int:
     return d
 
 
+# ---------------------------------------------------------------------------
+# Stage pipeline (DESIGN.md §12)
+#
+# The forward pass is an explicit pipeline of per-stage plans instead of
+# an implicit layer loop: every piece of stage geometry a DIGC call
+# depends on (grid, co-node pooling, per-block dilation and effective k)
+# is derived ONCE here, so the model forward, the functional state
+# allocator and the workload accounting all read the same plan — the
+# cached-graph buffers in ``DigcState`` are sized by exactly the
+# derivation that later writes them.
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One stage of the ViG pipeline: static geometry + resolved spec."""
+
+    index: int
+    depth: int
+    grid: int
+    r: int
+    m: int  # co-nodes per image (grid/r)^2
+    spec: DigcSpec  # stage spec, k/dilation still model-owned
+    dilations: tuple[int, ...]  # per block, after the m-feasibility clamp
+    k_effs: tuple[int, ...]  # per block effective neighbor count
+
+    @property
+    def key(self) -> str:
+        """The state key every block of this stage shares."""
+        return f"stage{self.index}"
+
+    @property
+    def n(self) -> int:
+        return self.grid * self.grid
+
+
+def _block_geometry(cfg: VigConfig, gb: int, m: int) -> tuple[int, int]:
+    """(dilation, k_eff) for global block ``gb`` against ``m`` co-nodes
+    — the single source of the k/dilation clamps the old layer loop
+    applied inline."""
+    dil = _dilation_for(cfg, gb, m)
+    k_eff = min(cfg.k, m // max(dil, 1)) or 1
+    if k_eff * dil > m:
+        dil = 1
+    return dil, k_eff
+
+
+def vig_stage_plans(cfg: VigConfig,
+                    digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
+                    ) -> tuple[StagePlan, ...]:
+    """Materialize the stage pipeline for a model + DIGC choice."""
+    plans = []
+    grid = cfg.base_grid
+    gb = 0
+    for si, depth in enumerate(cfg.depths):
+        spec = resolve_digc_spec(cfg, digc_impl, stage=si)
+        r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
+        m = (grid // max(r, 1)) ** 2
+        geo = tuple(_block_geometry(cfg, gb + bi, m) for bi in range(depth))
+        plans.append(StagePlan(
+            index=si, depth=depth, grid=grid, r=r, m=m, spec=spec,
+            dilations=tuple(g[0] for g in geo),
+            k_effs=tuple(g[1] for g in geo),
+        ))
+        gb += depth
+        if si + 1 < len(cfg.depths):
+            grid //= 2
+    return tuple(plans)
+
+
 def resolve_digc_spec(cfg: VigConfig,
                       digc_impl: Union[str, DigcSpec, None],
                       stage: int = 0) -> DigcSpec:
@@ -197,7 +266,9 @@ def resolve_digc_spec(cfg: VigConfig,
 def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
                   digc_spec: Optional[DigcSpec] = None,
                   cache=None, layer_key: Optional[str] = None,
-                  state: Optional[DigcState] = None):
+                  state: Optional[DigcState] = None,
+                  reuse_first: bool = True,
+                  digc_capture: Optional[list] = None):
     """x (B, N, D) -> ((B, N, D), state); one Grapher + FFN residual
     pair. The second return is the (possibly updated) ``DigcState`` —
     ``None`` when no state was passed.
@@ -210,9 +281,16 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     * ``state`` (a functional ``DigcState`` pytree, keyed by
       ``layer_key``) — the jit-native path: stateful builders read and
       return their entry *through* the trace, so warm starts work in
-      compiled serving.
+      compiled serving. ``reuse_first`` marks the first block of a
+      stage within a forward pass — the gate point of the ``"tick"``
+      stale-graph policy (DESIGN.md §12).
     * ``cache`` (a ``DigcCache``) — the legacy eager shim: host-side,
       bypassed under jit.
+
+    ``digc_capture`` (a list) collects ``(layer_key, h, cond)`` per
+    DIGC call — the probe hook the tuner's recall-floor verification
+    and the recall-vs-drift bench replay against; works under jit when
+    the caller returns the captured arrays as outputs.
     """
     dspec = digc_spec if digc_spec is not None else resolve_digc_spec(cfg, None)
     h = _ln(x, bp["ln_g"]["scale"])
@@ -227,12 +305,15 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     # downsample, so a fixed user grid would go stale).
     dspec = dspec.replace(k=k_eff, dilation=dilation).with_grid(grid, grid)
     builder = get_builder(dspec.impl)
+    if digc_capture is not None:
+        digc_capture.append((layer_key, h, cond))
     # Centroid warm starts are shared per stage (same co-node geometry):
     # layer l+1 starts from layer l's centroids, the next request from
     # this one's — features drift slowly, so 2 Lloyd iterations suffice.
     if state is not None:
         idx, state = digc(h, cond, spec=dspec, state=state,
-                          state_key=layer_key)  # (B, N, k)
+                          state_key=layer_key,
+                          reuse_first=reuse_first)  # (B, N, k)
     else:
         idx = digc(h, cond, spec=dspec, cache=cache,
                    cache_key=layer_key)  # (B, N, k)
@@ -246,15 +327,36 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     return x + f, state
 
 
+def run_stage(stage_params, x, cfg: VigConfig, plan: StagePlan, *,
+              cache=None, state: Optional[DigcState] = None,
+              digc_capture: Optional[list] = None):
+    """Run one pipeline stage: ``plan.depth`` Grapher+FFN blocks over a
+    fixed grid, sharing the stage's state key (layer l+1 warm-starts —
+    or, under a reuse policy, serves — layer l's graph artifact)."""
+    for bi in range(plan.depth):
+        x, state = grapher_block(
+            stage_params[f"block{bi}"], x, cfg, plan.grid, plan.r,
+            plan.dilations[bi], digc_spec=plan.spec, cache=cache,
+            layer_key=plan.key, state=state, reuse_first=(bi == 0),
+            digc_capture=digc_capture,
+        )
+    return x, state
+
+
 def vig_forward(params, images, cfg: VigConfig, *,
                 digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
                 cache=None,
-                state: Optional[DigcState] = None):
+                state: Optional[DigcState] = None,
+                digc_capture: Optional[list] = None):
     """images (B, H, W, C) -> class logits (B, num_classes).
 
     ``digc_impl`` may be a registered builder name, a full DigcSpec, or
-    a ``VigSchedule`` (per-stage tuned specs). Construction state
-    across blocks and requests comes in two forms:
+    a ``VigSchedule`` (per-stage tuned specs). The forward is an
+    explicit stage pipeline (``vig_stage_plans`` / ``run_stage``,
+    DESIGN.md §12): patchify → stem → per-stage Grapher blocks (with
+    the graph index treated as a cached, versioned state artifact when
+    the spec carries a ``reuse`` policy) → downsample → head.
+    Construction state across blocks and requests comes in two forms:
 
     * ``state`` — a functional ``DigcState`` (see ``init_vig_state``):
       the call returns ``(logits, new_state)`` and is fully
@@ -264,26 +366,20 @@ def vig_forward(params, images, cfg: VigConfig, *,
       compiled program.
     * ``cache`` — the legacy eager ``DigcCache`` shim (host-side,
       bypassed under jit); returns logits only.
+
+    ``digc_capture`` (a list) collects every DIGC call's
+    ``(layer_key, nodes, co_nodes)`` — the recall-verification probe
+    hook (see ``grapher_block``).
     """
     x = patchify(images, cfg.patch) @ params["stem"]
     x = x + params["pos"]
-    grid = cfg.base_grid
-    gb = 0
-    for si, depth in enumerate(cfg.depths):
-        spec = resolve_digc_spec(cfg, digc_impl, stage=si)
-        r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
-        m = (grid // max(r, 1)) ** 2
-        for bi in range(depth):
-            dil = _dilation_for(cfg, gb, m)
-            x, state = grapher_block(
-                params[f"stage{si}"][f"block{bi}"], x, cfg, grid, r, dil,
-                digc_spec=spec, cache=cache, layer_key=f"stage{si}",
-                state=state,
-            )
-            gb += 1
-        if si + 1 < len(cfg.depths):
-            x = _downsample(x, grid, params[f"down{si}"])
-            grid //= 2
+    for plan in vig_stage_plans(cfg, digc_impl):
+        x, state = run_stage(
+            params[plan.key], x, cfg, plan, cache=cache, state=state,
+            digc_capture=digc_capture,
+        )
+        if plan.index + 1 < len(cfg.depths):
+            x = _downsample(x, plan.grid, params[f"down{plan.index}"])
     pooled = jnp.mean(x, axis=1)
     logits = pooled @ params["head"]
     if state is not None:
@@ -321,32 +417,34 @@ def init_vig_state(cfg: VigConfig, batch: int,
     gallery), so ring/blocked stages carry counters only — placement
     matters the moment a caller allocates gallery norms or centroids.
     """
+    from repro.core.builder import reuse_params
     from repro.core.strategies import default_cluster_params
 
     rows = batch if per_slot else None
     entries = {}
-    grid = cfg.base_grid
-    for si in range(len(cfg.depths)):
-        spec = resolve_digc_spec(cfg, digc_impl, stage=si)
-        r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
-        m = (grid // max(r, 1)) ** 2
+    for plan in vig_stage_plans(cfg, digc_impl):
+        spec = plan.spec
         stage_mesh = spec.mesh if spec.mesh is not None else mesh
         stage_axis = (
             spec.axis_name if spec.axis_name is not None else mesh_axis
         )
-        placement = dict(mesh=stage_mesh, axis_name=stage_axis)
+        alloc = dict(mesh=stage_mesh, axis_name=stage_axis, rows=rows)
         if spec.impl == "cluster":
             n_clusters, _ = default_cluster_params(
-                m, spec.n_clusters, spec.n_probe
+                plan.m, spec.n_clusters, spec.n_probe
             )
-            entries[f"stage{si}"] = state_entry(
-                centroids_shape=(batch, n_clusters, cfg.embed_dims[si]),
-                rows=rows, **placement,
+            alloc["centroids_shape"] = (
+                batch, n_clusters, cfg.embed_dims[plan.index]
             )
-        else:
-            entries[f"stage{si}"] = state_entry(rows=rows, **placement)
-        if si + 1 < len(cfg.depths):
-            grid //= 2
+        policy, _, _ = reuse_params(spec)
+        if policy is not None:
+            # Cached-graph buffers (DESIGN.md §12), sized by the
+            # stage's FIRST block — the same derivation grapher_block
+            # applies, so the shapes line up; a later block whose
+            # clamped k_eff differs (tiny co-node counts) simply never
+            # engages the cache (static shape check in the gate).
+            alloc["graph_shape"] = (batch, plan.n, plan.k_effs[0])
+        entries[plan.key] = state_entry(**alloc)
     return DigcState.init(entries)
 
 
@@ -359,20 +457,14 @@ def vig_loss_fn(params, batch, cfg: VigConfig):
 
 def count_digc_work(cfg: VigConfig):
     """Per-image DIGC workload (N, M, D, k, dilation) per block — feeds
-    the paper-table benchmarks."""
+    the paper-table benchmarks. Reads the same ``vig_stage_plans`` the
+    forward executes, so the accounting can never drift from the model."""
     out = []
-    grid = cfg.base_grid
-    gb = 0
-    for si, depth in enumerate(cfg.depths):
-        r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
-        n = grid * grid
-        m = (grid // max(r, 1)) ** 2
-        d = cfg.embed_dims[si]
-        for _ in range(depth):
-            dil = _dilation_for(cfg, gb, m)
-            out.append({"stage": si, "N": n, "M": m, "D": d, "k": cfg.k,
-                        "dilation": dil})
-            gb += 1
-        if si + 1 < len(cfg.depths):
-            grid //= 2
+    for plan in vig_stage_plans(cfg):
+        d = cfg.embed_dims[plan.index]
+        for bi in range(plan.depth):
+            out.append({
+                "stage": plan.index, "N": plan.n, "M": plan.m, "D": d,
+                "k": cfg.k, "dilation": plan.dilations[bi],
+            })
     return out

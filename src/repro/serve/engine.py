@@ -449,6 +449,16 @@ class VigServeEngine:
         self._row_tokens: dict[str, dict[int, int]] = {}
         self._consecutive_misses = 0
         self._program_ticks: dict[int, int] = {}  # bucket -> ticks served
+        # -- stale-graph serving (DESIGN.md §12) ------------------------
+        # Lane-granular reuse accounting, reconstructed host-side from
+        # graph_age deltas after each tick (age resets to 0 on rebuild,
+        # grows monotonically under reuse) — no extra device sync, the
+        # logits pull already closed the tick.
+        self.graph_reuses = 0
+        self.graph_rebuilds = 0
+        self._drift_sum = 0.0
+        self._drift_n = 0
+        self.last_drift: dict[str, float] = {}  # entry key -> mean drift
 
     # -- tuning ---------------------------------------------------------
 
@@ -639,6 +649,48 @@ class VigServeEngine:
         fps = self._slot_state.row_fingerprints(list(slots))
         for key, rows in fps.items():
             self._row_tokens.setdefault(key, {}).update(rows)
+
+    def _graph_stats_update(self, old_state, new_state, lanes) -> None:
+        """Reconcile per-lane graph reuse/rebuild counters from one
+        tick's state delta (stale-graph serving, DESIGN.md §12).
+
+        ``graph_age`` is authoritative: the reuse gate in core/digc
+        resets a row's age to 0 whenever its graph was rebuilt this
+        call chain and grows it otherwise, so ``new_age == 0`` after a
+        served tick means the lane paid a DIGC build and anything else
+        means it rode the cached graph. Drift is recovered from the
+        snapshot statistic the gate itself uses: on a rebuild the entry
+        adopts the fresh ``graph_snap``, so the relative delta vs the
+        previous snapshot is (approximately) the drift that tripped
+        the gate. Both states are read at slot granularity — the
+        bucket-shaped tick arrays are donated into the jit program and
+        gone by the time this runs."""
+        rows = np.asarray(lanes, dtype=np.int64)
+        for key, new_e in new_state.entries.items():
+            if new_e.graph_age is None:
+                continue
+            old_e = old_state.entries.get(key)
+            if old_e is None or old_e.graph_age is None:
+                continue
+            new_age = np.asarray(new_e.graph_age)[rows]
+            rebuilt = new_age == 0
+            self.graph_rebuilds += int(rebuilt.sum())
+            self.graph_reuses += int((~rebuilt).sum())
+            old_snap = np.asarray(old_e.graph_snap)[rows]
+            new_snap = np.asarray(new_e.graph_snap)[rows]
+            # cold lanes carry the zero-initialized snapshot — their
+            # first build is an admission, not drift
+            warm = np.abs(old_snap) > 0
+            drift = np.where(
+                warm,
+                np.abs(new_snap - old_snap) / np.maximum(np.abs(old_snap),
+                                                         1e-9),
+                0.0,
+            )[warm]
+            if drift.size:
+                self.last_drift[key] = float(drift.mean())
+                self._drift_sum += float(drift.sum())
+                self._drift_n += int(drift.size)
 
     def _row_intact(self, slot: int, fps=None) -> bool:
         """Check ``slot``'s rows against their integrity tokens. Rows
@@ -1046,6 +1098,7 @@ class VigServeEngine:
         # Scatter live lanes only: src rows >= a (padding) are dropped.
         self._slot_state = state.put_rows(new_bucket_state, lanes)
         logits_np = np.asarray(logits)  # host sync closes the region
+        self._graph_stats_update(state, self._slot_state, lanes)
         elapsed_ms = (time.perf_counter() - t0) * 1e3
         first_tick = bucket not in self._program_ticks
         self._program_ticks[bucket] = self._program_ticks.get(bucket, 0) + 1
@@ -1132,6 +1185,14 @@ class VigServeEngine:
                "park_losses": self.park_losses,
                "retries": self.retries,
                "requests_failed": self.requests_failed,
+               # stale-graph serving (DESIGN.md §12)
+               "graph_reuses": self.graph_reuses,
+               "graph_rebuilds": self.graph_rebuilds,
+               "drift": {
+                   "mean": (self._drift_sum / self._drift_n
+                            if self._drift_n else 0.0),
+                   "last": dict(self.last_drift),
+               },
                "faults": [f.as_dict() for f in self.fault_log[-16:]]}
         if self.fallback_level > 0:
             from repro.core.builder import fallback_chain

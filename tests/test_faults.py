@@ -548,3 +548,138 @@ def test_guards_off_restores_unguarded_path():
     st = eng.stats()
     assert st["quarantines"] == 0 and st["state_resets"] == 0
     assert eng._row_tokens == {}
+
+
+# ---------------------------------------------------------------------------
+# Stale-graph serving under faults (DESIGN.md §12): the cached graph
+# and its gate metadata are state rows like any other — integrity
+# tokens must see their corruption, recovery must cold-reset them, and
+# a quarantined lane's cache must never survive into the slot's next
+# occupant or its own post-reset stream.
+
+
+def _reuse_spec():
+    from repro.core.builder import DigcSpec
+
+    return DigcSpec(impl="cluster", k=3, n_clusters=4, n_probe=4,
+                    capacity_factor=8.0, reuse="tick", drift_tau=0.05,
+                    max_stale=16)
+
+
+@pytest.fixture(scope="module")
+def reuse_model():
+    cfg, params = _tiny_vig("cluster")
+    return cfg, params, _reuse_spec()
+
+
+@pytest.fixture(scope="module")
+def reuse_clean_trace(reuse_model):
+    cfg, params, spec = reuse_model
+    eng = VigServeEngine(cfg, params, digc_impl=spec, autotune=False,
+                         buckets=(4,))
+    reqs = _run_trace(eng)
+    return eng, reqs
+
+
+def _reuse_engine(reuse_model, plan, **kw):
+    cfg, params, spec = reuse_model
+    return VigServeEngine(cfg, params, digc_impl=spec, autotune=False,
+                          buckets=(4,), fault_plan=plan, **kw)
+
+
+def _assert_reuse_cold_replay(reuse_model, reqs, tenant, ticks):
+    cfg, params, spec = reuse_model
+    chain = [reqs[(tick, tenant)] for tick in ticks]
+    replayed, _ = _replay_tenant(cfg, params, spec, chain)
+    for tick, want in zip(ticks, replayed):
+        np.testing.assert_allclose(
+            reqs[(tick, tenant)].logits, want, rtol=1e-5, atol=1e-5,
+            err_msg=f"tenant {tenant} tick {tick} is not a cold replay",
+        )
+
+
+def test_cached_graph_bitflip_trips_integrity_and_recovers(
+        reuse_model, reuse_clean_trace):
+    """A flipped bit in the *cached graph* is finite garbage — only the
+    crc32 row token can see it. Detection cold-resets the row (cache
+    included) and still serves the request."""
+    _, clean_reqs = reuse_clean_trace
+    plan = FaultPlan(seed=31).inject_state_corruption(
+        field="graph_idx", row=1, tick=2, mode="bitflip",
+    )
+    eng = _reuse_engine(reuse_model, plan)
+    reqs = _run_trace(eng)
+
+    assert plan.counts() == {"state_corruption": 1}
+    st = eng.stats()
+    assert st["quarantines"] == 0 and st["requests_failed"] == 0
+    assert st["state_resets"] >= 1
+    assert any(f["kind"] == "state_corruption" for f in st["faults"])
+    for req in reqs.values():
+        assert req.done and req.logits is not None and req.fault is None
+    _assert_healthy_bitwise(reqs, clean_reqs,
+                            skip={(2, "B"), (3, "B"), (4, "B")})
+    _assert_reuse_cold_replay(reuse_model, reqs, "B", ticks=(2, 3, 4))
+
+
+def test_cached_snapshot_nan_quarantines_and_resets(
+        reuse_model, reuse_clean_trace):
+    """A non-finite drift snapshot would poison every later gate
+    decision: the finiteness screen quarantines the lane before it
+    serves."""
+    _, clean_reqs = reuse_clean_trace
+    plan = FaultPlan(seed=32).inject_state_corruption(
+        field="graph_snap", row=1, tick=2, mode="nan",
+    )
+    eng = _reuse_engine(reuse_model, plan)
+    reqs = _run_trace(eng)
+
+    assert plan.counts() == {"state_corruption": 1}
+    bad = reqs[(2, "B")]
+    assert bad.done and bad.logits is None
+    assert bad.fault is not None and bad.fault.kind == "nonfinite_state"
+    st = eng.stats()
+    assert st["quarantines"] == 1 and st["state_resets"] >= 1
+    _assert_healthy_bitwise(reqs, clean_reqs,
+                            skip={(2, "B"), (3, "B"), (4, "B")})
+    _assert_reuse_cold_replay(reuse_model, reqs, "B", ticks=(3, 4))
+
+
+def test_quarantined_lane_never_leaks_stale_graph(reuse_model):
+    """After a quarantine, the lane's cached graph must be *zeroed* —
+    the next occupant of the slot (here: the same tenant, re-admitted
+    cold) gates against an empty cache, never the pre-fault graph."""
+    cfg, params, spec = reuse_model
+    plan = FaultPlan(seed=33).inject_state_corruption(
+        field="graph_snap", row=1, tick=2, mode="nan",
+    )
+    eng = _reuse_engine(reuse_model, plan)
+
+    reqs = {}
+    uid = 0
+    for tick in range(1, 3):
+        for t in TENANTS:
+            r = VigRequest(uid=uid, image=IMAGES[(tick, t)], tenant=t)
+            reqs[(tick, t)] = r
+            eng.submit(r)
+            uid += 1
+        eng.step()
+    assert eng.stats()["quarantines"] == 1
+    slot = eng._tenant_slot[("tenant", "B")] \
+        if ("tenant", "B") in getattr(eng, "_tenant_slot", {}) \
+        else eng.slot_tenant.index("B")
+    entry = next(e for e in eng._slot_state.entries.values()
+                 if e.graph_idx is not None)
+    # the reset wiped the cache row: no stale neighbors, age 0
+    assert np.all(np.asarray(entry.graph_idx)[slot] == 0)
+    assert np.asarray(entry.graph_age)[slot] == 0
+    assert np.asarray(entry.graph_snap)[slot] == 0.0
+
+    # the slot's next stream (B re-served post-reset) is a cold replay:
+    # nothing of the pre-fault graph reaches it
+    r3 = VigRequest(uid=uid, image=IMAGES[(3, "B")], tenant="B")
+    eng.submit(r3)
+    eng.step()
+    replayed, _ = _replay_tenant(cfg, params, spec, [r3])
+    np.testing.assert_allclose(r3.logits, replayed[0],
+                               rtol=1e-5, atol=1e-5)

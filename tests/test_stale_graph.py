@@ -1,0 +1,418 @@
+"""Stale-graph serving: drift-gated graph reuse (DESIGN.md §12).
+
+The reuse gate serves a *cached* k-NN graph instead of rebuilding when
+per-row feature drift is small, staleness is bounded, and the cache
+geometry matches. These tests pin the contract from four sides:
+
+* **Identity**: ``drift_tau=0`` is bit-identical to ``reuse`` off on
+  every stateful tier — the gate's strict ``<`` plus the static
+  short-circuit mean a zero gate can never fire.
+* **Engagement proofs** (stale-norms style): a warm entry seeded with a
+  deliberately *corrupted* cached graph must change the result when the
+  gate reuses (the rebuild path would recompute and hide it), and must
+  NOT change it when drift or staleness forces a rebuild.
+* **Per-row independence**: co-batched rows gate independently — a
+  drifting row rebuilds while its neighbors ride the cache, and every
+  row matches its own B=1 solo replay bitwise.
+* **Lifecycle**: eviction -> parking -> re-admit carries the cached
+  graph (the buffers live in ``_row_fields``); a hypothesis sweep holds
+  the ``graph_age <= max_stale`` staleness invariant under arbitrary
+  drift sequences.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.builder import DigcSpec, get_builder
+from repro.core.digc import digc, drift_stat
+from repro.core.state import DigcState, DigcStateEntry, state_entry
+from repro.core.tuner import VigSchedule, tune_reuse
+from repro.models import vig
+from repro.models.module import init_params
+from repro.serve.engine import VigRequest, VigServeEngine
+
+STATEFUL_TIERS = ("blocked", "cluster")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _spec(impl, **kw):
+    extra = {"n_clusters": 4, "n_probe": 4, "capacity_factor": 8.0} \
+        if impl == "cluster" else {}
+    return DigcSpec(impl=impl, k=3, **extra, **kw)
+
+
+def _entry(impl, b, n, d, k=3, rows=None):
+    kw = {"graph_shape": (b, n, k)}
+    if impl == "cluster":
+        kw["centroids_shape"] = (b, 4, d)
+    if rows is not None:
+        kw["rows"] = rows
+    return state_entry(**kw)
+
+
+def _stream(spec, xs, entry):
+    """Jitted stateful digc over a list of inputs; returns per-call
+    indices plus the final state."""
+    st_ = DigcState.init({"g": entry})
+    fn = jax.jit(lambda a, s: digc(a, spec=spec, state=s, state_key="g"))
+    outs = []
+    for x in xs:
+        idx, st_ = fn(x, st_)
+        outs.append(np.asarray(idx))
+    return outs, st_
+
+
+# ---------------------------------------------------------------------------
+# Validation
+
+
+def test_validate_rejects_bad_reuse_knobs():
+    x = jnp.zeros((1, 8, 4))
+    with pytest.raises(ValueError):
+        digc(x, spec=_spec("blocked", reuse="sometimes"))
+    with pytest.raises(ValueError):
+        digc(x, spec=_spec("blocked", reuse="layer", drift_tau=-0.1))
+    with pytest.raises(ValueError):
+        digc(x, spec=_spec("blocked", reuse="layer", max_stale=0))
+    # gate knobs without a policy are dead configuration — rejected
+    with pytest.raises(ValueError):
+        digc(x, spec=_spec("blocked", drift_tau=0.05))
+    with pytest.raises(ValueError):
+        digc(x, spec=_spec("blocked", reuse="off", max_stale=4))
+    # the stateless kernel tier has no cache to serve from
+    with pytest.raises(ValueError):
+        digc(x, spec=DigcSpec(impl="pallas", k=3, reuse="layer"))
+
+
+def test_reuse_knobs_dropped_on_degradation():
+    from repro.core.builder import degraded_spec
+
+    spec = _spec("cluster", reuse="tick", drift_tau=0.1, max_stale=2)
+    deg = degraded_spec(spec, "blocked")
+    assert deg.reuse is None and deg.drift_tau is None
+    assert deg.max_stale is None
+
+
+# ---------------------------------------------------------------------------
+# Identity: drift_tau=0 == reuse off, bit for bit, per stateful tier
+
+
+@pytest.mark.parametrize("impl", STATEFUL_TIERS)
+def test_tau_zero_bit_identical_to_off(impl):
+    rng = np.random.default_rng(0)
+    b, n, d = 2, 24, 8
+    xs = [_rand(rng, b, n, d)]
+    for _ in range(3):
+        xs.append(xs[-1] + 0.05 * _rand(rng, b, n, d))
+
+    off, _ = _stream(_spec(impl), xs, _entry(impl, b, n, d))
+    for policy in ("layer", "tick"):
+        gated, _ = _stream(_spec(impl, reuse=policy, drift_tau=0.0),
+                           xs, _entry(impl, b, n, d))
+        for a, c in zip(off, gated):
+            np.testing.assert_array_equal(a, c)
+
+
+def test_tau_zero_bit_identical_at_model_level():
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=16, patch=4, embed_dims=(16,), depths=(2,),
+        num_classes=3, k=3,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    imgs = [_rand(rng, 1, 16, 16, 3) for _ in range(2)]
+
+    def run(spec):
+        state = vig.init_vig_state(cfg, 1, spec)
+        outs = []
+        for im in imgs:
+            logits, state = vig.vig_forward(params, im, cfg,
+                                            digc_impl=spec, state=state)
+            outs.append(np.asarray(logits))
+        return outs
+
+    off = run(_spec("blocked"))
+    zero = run(_spec("blocked", reuse="layer", drift_tau=0.0))
+    for a, c in zip(off, zero):
+        np.testing.assert_array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# Engagement proofs: the gate provably serves / provably rebuilds
+
+
+def _warm_corrupt_entry(x, exact_idx, k, *, snap, age):
+    """A warm entry whose cached graph is a deliberate corruption of
+    the exact one (neighbors rolled by one): any output equal to it
+    proves the cache was served; equal to exact proves a rebuild."""
+    corrupt = jnp.roll(jnp.asarray(exact_idx), 1, axis=-1)
+    b = x.shape[0]
+    return DigcStateEntry(
+        step=jnp.ones((), jnp.int32),
+        graph_idx=corrupt.astype(jnp.int32),
+        graph_dist=jnp.zeros(corrupt.shape, jnp.float32),
+        graph_snap=jnp.asarray(snap, jnp.float32),
+        graph_age=jnp.full((b,), age, jnp.int32),
+    ), np.asarray(corrupt)
+
+
+def test_gate_serves_cache_and_rebuilds_on_drift_and_expiry():
+    rng = np.random.default_rng(2)
+    b, n, d = 2, 24, 8
+    x = _rand(rng, b, n, d)
+    spec = _spec("blocked", reuse="layer", drift_tau=0.05, max_stale=4)
+    exact = np.asarray(digc(x, spec=_spec("blocked")))
+    stat = np.asarray(drift_stat(x))
+
+    # (a) zero drift, fresh age -> the corrupted cache is served
+    entry, corrupt = _warm_corrupt_entry(x, exact, 3, snap=stat, age=0)
+    idx, _ = digc(x, spec=spec, state=DigcState.init({"g": entry}),
+                  state_key="g")
+    np.testing.assert_array_equal(np.asarray(idx), corrupt)
+
+    # (b) forced drift (snapshot far from the live statistic) -> rebuild
+    entry, _ = _warm_corrupt_entry(x, exact, 3, snap=stat * 10.0, age=0)
+    idx, st2 = digc(x, spec=spec, state=DigcState.init({"g": entry}),
+                    state_key="g")
+    np.testing.assert_array_equal(np.asarray(idx), exact)
+    # ...and the rebuild repaired the cache + reset age
+    np.testing.assert_array_equal(
+        np.asarray(st2.entries["g"].graph_idx), exact)
+    assert np.all(np.asarray(st2.entries["g"].graph_age) == 0)
+
+    # (c) staleness expiry: zero drift but age at the bound -> rebuild
+    entry, _ = _warm_corrupt_entry(x, exact, 3, snap=stat, age=4)
+    idx, _ = digc(x, spec=spec, state=DigcState.init({"g": entry}),
+                  state_key="g")
+    np.testing.assert_array_equal(np.asarray(idx), exact)
+
+
+def test_max_stale_expiry_cycles_age():
+    """Identical inputs, max_stale=2: builds at t0, reuses twice, then
+    the staleness bound forces a rebuild — age cycles 0,1,2,0,..."""
+    rng = np.random.default_rng(3)
+    b, n, d = 1, 24, 8
+    x = _rand(rng, b, n, d)
+    spec = _spec("blocked", reuse="layer", drift_tau=0.05, max_stale=2)
+    st_ = DigcState.init({"g": _entry("blocked", b, n, d)})
+    fn = jax.jit(lambda a, s: digc(a, spec=spec, state=s, state_key="g"))
+    ages = []
+    for _ in range(6):
+        _, st_ = fn(x, st_)
+        ages.append(int(np.asarray(st_.entries["g"].graph_age)[0]))
+    assert ages == [0, 1, 2, 0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Per-row independence
+
+
+def test_per_row_gate_matches_solo_replay():
+    """Row 2's features churn every tick while rows 0/1 hold still: the
+    co-batched stream must serve rows 0/1 from cache and rebuild row 2,
+    each bitwise equal to that row's own B=1 replay."""
+    rng = np.random.default_rng(4)
+    n, d = 24, 8
+    hold = _rand(rng, 2, n, d)
+    spec = _spec("blocked", reuse="layer", drift_tau=0.05, max_stale=8)
+    xs = []
+    for _ in range(4):
+        churn = _rand(rng, 1, n, d)  # fresh content -> large drift
+        xs.append(jnp.concatenate([hold, churn], axis=0))
+
+    batched, st_b = _stream(spec, xs, _entry("blocked", 3, n, d, rows=3))
+    for row in range(3):
+        solo, _ = _stream(spec, [x[row:row + 1] for x in xs],
+                          _entry("blocked", 1, n, d, rows=1))
+        for t in range(4):
+            np.testing.assert_array_equal(batched[t][row], solo[t][0])
+
+    ages = np.asarray(st_b.entries["g"].graph_age)
+    assert ages[0] == ages[1] == 3  # held rows rode the cache
+    assert ages[2] == 0             # churning row rebuilt every tick
+
+
+# ---------------------------------------------------------------------------
+# Serving lifecycle: parking carries the cached graph; stats counters
+
+
+def _tiny_cfg():
+    return vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=16, patch=4, embed_dims=(16,), depths=(2,),
+        num_classes=3, k=3,
+    )
+
+
+def _mk(rng, tenant, img):
+    return VigRequest(uid=int(rng.integers(1 << 30)),
+                      image=img, tenant=tenant)
+
+
+def test_engine_reuse_counters_and_drift_stats():
+    cfg = _tiny_cfg()
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    spec = _spec("blocked", reuse="tick", drift_tau=0.05, max_stale=8)
+    eng = VigServeEngine(cfg, params, digc_impl=spec, autotune=False,
+                         buckets=(1, 2))
+    rng = np.random.default_rng(5)
+    imgs = {t: np.asarray(_rand(rng, 16, 16, 3)) for t in "AB"}
+    ticks = 4
+    for _ in range(ticks):
+        eng.submit(_mk(rng, "A", imgs["A"]))
+        eng.submit(_mk(rng, "B", imgs["B"]))
+        eng.step()
+    s = eng.stats()
+    # every (lane, entry) event is classified exactly once
+    assert s["graph_reuses"] + s["graph_rebuilds"] == ticks * 2
+    assert s["graph_rebuilds"] == 2   # one cold build per tenant
+    assert s["graph_reuses"] == (ticks - 1) * 2
+    assert s["drift"]["mean"] == pytest.approx(0.0, abs=1e-6)
+    assert "stage0" in s["drift"]["last"]
+
+
+def test_engine_off_policy_keeps_counters_zero():
+    cfg = _tiny_cfg()
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    eng = VigServeEngine(cfg, params, digc_impl="blocked", autotune=False,
+                         buckets=(1,))
+    rng = np.random.default_rng(6)
+    img = np.asarray(_rand(rng, 16, 16, 3))
+    for _ in range(2):
+        eng.submit(_mk(rng, "A", img))
+        eng.step()
+    s = eng.stats()
+    assert s["graph_reuses"] == 0 and s["graph_rebuilds"] == 0
+    assert s["drift"] == {"mean": 0.0, "last": {}}
+
+
+def test_park_readmit_carries_cached_graph():
+    """Evict a warm reuse-tier tenant (parks its rows), re-admit it:
+    the restored lane must *reuse* on its first tick back — the cached
+    graph and its age/snapshot traveled through the park — and its
+    logits must match an uninterrupted B=1 replay."""
+    cfg = _tiny_cfg()
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    spec = _spec("blocked", reuse="tick", drift_tau=0.05, max_stale=16)
+    eng = VigServeEngine(cfg, params, digc_impl=spec, autotune=False,
+                         buckets=(1, 2))
+    rng = np.random.default_rng(7)
+    imgs = {t: np.asarray(_rand(rng, 16, 16, 3)) for t in "ABC"}
+
+    history = []
+    for _ in range(2):  # warm A and B
+        ra = _mk(rng, "A", imgs["A"])
+        eng.submit(ra), eng.submit(_mk(rng, "B", imgs["B"]))
+        eng.step()
+        history.append(ra)
+    # C evicts the LRU tenant; both A and B predate C equally, so pin
+    # the evictee by touching B first (A becomes LRU)
+    eng.submit(_mk(rng, "B", imgs["B"])), eng.step()
+    eng.submit(_mk(rng, "C", imgs["C"])), eng.step()
+    assert "A" in eng._parked
+
+    rebuilds_before = eng.stats()["graph_rebuilds"]
+    r_back = _mk(rng, "A", imgs["A"])
+    eng.submit(r_back), eng.step()
+    s = eng.stats()
+    assert eng.park_hits == 1
+    # the re-admitted lane served from cache: no new rebuild was paid
+    assert s["graph_rebuilds"] == rebuilds_before
+    lane = eng._tenant_slot.get("A", eng._tenant_slot.get(("tenant", "A")))
+
+    # bitwise parity with an uninterrupted solo replay of A's stream
+    state = vig.init_vig_state(cfg, 1, spec, per_slot=True)
+    fwd = jax.jit(lambda p, im, s_: vig.vig_forward(
+        p, im, cfg, digc_impl=spec, state=s_))
+    for r in history + [r_back]:
+        logits, state = fwd(params, jnp.asarray(r.image)[None], state)
+    np.testing.assert_allclose(r_back.logits, np.asarray(logits)[0],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Staleness invariant (property)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), max_stale=st.integers(1, 3),
+       ticks=st.integers(2, 5))
+def test_reuse_never_serves_older_than_max_stale(seed, max_stale, ticks):
+    """After any drift sequence, no row's cached graph has been served
+    past the staleness bound: ``graph_age <= max_stale`` always (the
+    gate requires ``age < max_stale`` *before* serving, so post-serve
+    age can touch the bound but never cross it)."""
+    rng = np.random.default_rng(seed)
+    b, n, d = 2, 16, 4
+    spec = _spec("blocked", reuse="layer", drift_tau=0.1,
+                 max_stale=max_stale)
+    st_ = DigcState.init({"g": _entry("blocked", b, n, d)})
+    fn = jax.jit(lambda a, s: digc(a, spec=spec, state=s, state_key="g"))
+    x = _rand(rng, b, n, d)
+    for _ in range(ticks):
+        # random per-tick drift: sometimes tiny (reuse), sometimes large
+        x = x + float(rng.choice([0.0, 0.01, 1.0])) * _rand(rng, b, n, d)
+        _, st_ = fn(x, st_)
+        assert np.all(np.asarray(st_.entries["g"].graph_age) <= max_stale)
+
+
+# ---------------------------------------------------------------------------
+# Tuner: reuse joins the schedule space under a recall floor
+
+
+def _fake_ticks(rng, n_ticks, *, drift):
+    h0 = rng.standard_normal((1, 24, 8)).astype(np.float32)
+    ticks = []
+    h = h0
+    for _ in range(n_ticks):
+        h = h + drift * rng.standard_normal(h.shape).astype(np.float32)
+        ticks.append([("s0", jnp.asarray(h), None)])
+    return ticks
+
+
+def test_tune_reuse_static_stream_admits_widest_tau():
+    rng = np.random.default_rng(8)
+    ticks = _fake_ticks(rng, 5, drift=0.0)
+    tuned, results = tune_reuse(ticks, spec=_spec("blocked"),
+                                policy="layer", taus=(0.02, 0.1),
+                                max_stale=8, recall_floor=0.95)
+    assert tuned.reuse == "layer" and tuned.drift_tau == 0.1
+    assert all(r.recall == 1.0 and r.admitted for r in results)
+    assert results[-1].reuse_frac > 0
+
+
+def test_tune_reuse_rejects_below_recall_floor():
+    rng = np.random.default_rng(9)
+    ticks = _fake_ticks(rng, 5, drift=2.0)  # graph churns every tick
+    tuned, results = tune_reuse(ticks, spec=_spec("blocked"),
+                                policy="layer", taus=(10.0,),
+                                recall_floor=0.99)
+    # tau=10 reuses through heavy churn -> recall collapses -> refused
+    assert not results[0].admitted
+    assert tuned.reuse is None  # spec returned unchanged
+
+    with pytest.raises(ValueError):
+        tune_reuse(ticks, spec=_spec("blocked"), policy="always")
+
+
+def test_schedule_with_reuse_skips_stateless_tiers():
+    sched = VigSchedule(stages=(
+        DigcSpec(impl="blocked", k=3),
+        DigcSpec(impl="pallas", k=3),
+    ))
+    assert not get_builder("pallas").supports_state
+    out = sched.with_reuse("tick", 0.05, 4)
+    assert out.stages[0].reuse == "tick"
+    assert out.stages[0].drift_tau == 0.05
+    assert out.stages[1].reuse is None  # kernel tier untouched
+    stripped = out.with_reuse(None)
+    assert all(s.reuse is None for s in stripped.stages)
+    assert [d["reuse"] for d in out.describe()] == ["tick", None]
