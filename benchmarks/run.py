@@ -43,9 +43,11 @@ SMOKE_ARGS = {
 
 
 # Rows the regression gate watches: the guard-overhead ratio and every
-# stale-graph warm row (absolute us and speedup ratios alike).
+# stale-graph and multi-resolution warm row (absolute us and speedup
+# ratios alike).
 _REGRESS_RE = re.compile(
-    r"^serve/(guarded_overhead_warm$|stale_.*(_warm_us|_warm)$)"
+    r"^serve/(guarded_overhead_warm$"
+    r"|(stale|multires)(_.*)?(_warm_us|_warm)$)"
 )
 _REGRESS_RATIO = 1.15
 

@@ -189,6 +189,12 @@ class GraphBuilder:
     # build(..., state_entry=) and return (idx, dist, new_entry); for
     # everyone else digc() passes the state through unchanged.
     supports_state: bool = False
+    # Builders that accept build(..., m_valid=) — a (M,) or (B, M) bool
+    # mask marking live co-nodes. Masked co-nodes take the ring tier's
+    # BIG-norm treatment (distance >= BIG/2, can never enter a top-k),
+    # which is what lets serving pad ragged patch counts up to a static
+    # N-bucket with inert pad nodes (DESIGN.md §13).
+    supports_pad: bool = False
     # Optional fused neighbor aggregation (x, y, idx) -> (B, N, D);
     # None means the consumer uses the generic mr_aggregate.
     aggregate: Optional[Callable] = None

@@ -100,13 +100,16 @@ def digc_reference(
     pos_bias: Optional[Array] = None,
     return_dists: bool = False,
     causal: bool = False,
+    m_valid: Optional[Array] = None,
 ):
     """Algorithm 1, verbatim (materializes the full distance matrix).
 
     Accepts (N, D) or (B, N, D). Entries reported with distance >=
     BIG/2 are invalid placeholders (causally excluded / padding); their
     indices are unspecified and consumers must mask on the distance.
-    This matches the blocked and Pallas tiers.
+    This matches the blocked and Pallas tiers. ``m_valid`` ((M,) or
+    (B, M) bool) BIG-masks pad co-node columns — the ring tier's pad
+    idiom, so live rows' top-k is exactly the top-k over live co-nodes.
     """
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
     kd = k * dilation
@@ -115,6 +118,10 @@ def digc_reference(
     if kd > m:
         raise ValueError(f"k*dilation={kd} exceeds number of co-nodes M={m}")
     d_xy = pairwise_sq_dists(x3, y3, p3)
+    if m_valid is not None:
+        mask = jnp.asarray(m_valid, bool)
+        mask = mask[None, None, :] if mask.ndim == 1 else mask[:, None, :]
+        d_xy = jnp.where(mask, d_xy, BIG)
     if causal:
         keep = jnp.arange(m)[None, :] <= jnp.arange(n)[:, None]
         d_xy = jnp.where(keep[None], d_xy, BIG)
@@ -163,6 +170,7 @@ def digc_blocked(
     return_dists: bool = False,
     causal: bool = False,
     group_w: Optional[int] = None,
+    m_valid: Optional[Array] = None,
 ):
     """Streaming DIGC through the unified engine (``core/engine.py``).
 
@@ -194,6 +202,7 @@ def digc_blocked(
         causal=causal,
         sq_y=sq_y,
         group_w=group_w,
+        m_valid=m_valid,
     )
     idx = dilate(idx, dilation)
     dist = dilate(dist, dilation)
@@ -235,13 +244,15 @@ def _mix_rows(sel_row, kept, built):
     return jnp.where(sel, kept, built)
 
 
-def _stateful_build(builder, x3, y_arg, p3, spec, entry):
+def _stateful_build(builder, x3, y_arg, p3, spec, entry, m_valid=None):
+    kw = {} if m_valid is None else {"m_valid": m_valid}
     idx, dist, new_entry = builder.build(x3, y_arg, p3, spec,
-                                         state_entry=entry)
+                                         state_entry=entry, **kw)
     return idx, dist, new_entry
 
 
-def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first):
+def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first,
+                 m_valid=None):
     """The drift-gated reuse path around a stateful builder's build.
 
     Returns (idx, dist, new_entry). Falls back to the plain stateful
@@ -258,9 +269,9 @@ def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first):
         or entry.graph_idx is None
         or entry.graph_idx.shape != (b, n, spec.k)
     ):
-        return _stateful_build(builder, x3, y_arg, p3, spec, entry)
+        return _stateful_build(builder, x3, y_arg, p3, spec, entry, m_valid)
     if policy in ("layer", "tick") and tau == 0.0:
-        return _stateful_build(builder, x3, y_arg, p3, spec, entry)
+        return _stateful_build(builder, x3, y_arg, p3, spec, entry, m_valid)
 
     valid = (
         entry.row_warm if entry.row_step is not None
@@ -270,7 +281,8 @@ def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first):
 
     if policy == "overlap":
         return _overlap_build(
-            builder, x3, y_arg, p3, spec, entry, valid=valid, stat=stat
+            builder, x3, y_arg, p3, spec, entry, valid=valid, stat=stat,
+            m_valid=m_valid,
         )
 
     drift = jnp.abs(stat - entry.graph_snap) / jnp.maximum(
@@ -296,7 +308,7 @@ def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first):
 
     def rebuild_mixed():
         f_idx, f_dist, built = _stateful_build(
-            builder, x3, y_arg, p3, spec, entry
+            builder, x3, y_arg, p3, spec, entry, m_valid
         )
         idx = _mix_rows(reuse_row, entry.graph_idx, f_idx)
         dist = _mix_rows(reuse_row, entry.graph_dist, f_dist)
@@ -321,7 +333,8 @@ def _reuse_build(builder, x3, y_arg, p3, spec, entry, *, reuse_first):
     return lax.cond(jnp.all(reuse_row), serve_cached, rebuild_mixed)
 
 
-def _overlap_build(builder, x3, y_arg, p3, spec, entry, *, valid, stat):
+def _overlap_build(builder, x3, y_arg, p3, spec, entry, *, valid, stat,
+                   m_valid=None):
     """Double-buffered overlap (DESIGN.md §12): serve the cached
     (one-call-stale) graph unconditionally for warm rows, and issue the
     refresh build so that the *served* outputs never depend on it — the
@@ -335,7 +348,7 @@ def _overlap_build(builder, x3, y_arg, p3, spec, entry, *, valid, stat):
 
     def serve_mixed():
         f_idx, f_dist, _ = _stateful_build(
-            builder, x3, y_arg, p3, spec, entry
+            builder, x3, y_arg, p3, spec, entry, m_valid
         )
         return (
             _mix_rows(valid, entry.graph_idx, f_idx),
@@ -345,7 +358,9 @@ def _overlap_build(builder, x3, y_arg, p3, spec, entry, *, valid, stat):
     idx, dist = lax.cond(jnp.all(valid), serve_cached, serve_mixed)
     # The refresh build: data-independent of (idx, dist) by
     # construction — it is captured only by the state update.
-    f_idx, f_dist, built = _stateful_build(builder, x3, y_arg, p3, spec, entry)
+    f_idx, f_dist, built = _stateful_build(
+        builder, x3, y_arg, p3, spec, entry, m_valid
+    )
     new_entry = dataclasses.replace(
         built,
         graph_idx=f_idx,
@@ -373,6 +388,7 @@ def digc(
     state_key=None,
     reuse_first: bool = True,
     fault_plan=None,
+    m_valid: Optional[Array] = None,
     **knobs,
 ):
     """Public DIGC API: a thin GraphBuilder-registry lookup.
@@ -409,12 +425,23 @@ def digc(
     pass through the plan's ``digc.x`` site before construction —
     zero-overhead and a no-op when ``None``, and host-side only
     (bypassed under tracing, like the eager cache).
+
+    ``m_valid`` ((M,) or (B, M) bool) marks live co-nodes; pad columns
+    are BIG-norm-masked so they can never enter a live row's top-k
+    (the multi-resolution pad-node contract, DESIGN.md §13). Raises for
+    builders without the ``supports_pad`` capability.
     """
     spec = resolve_spec(
         spec, impl=impl, k=k, dilation=dilation, causal=causal, **knobs
     )
     builder = get_builder(spec.impl)
     builder.validate(spec, has_pos_bias=pos_bias is not None)
+    if m_valid is not None and not builder.supports_pad:
+        raise ValueError(
+            f"DIGC impl {spec.impl!r} does not support pad-node masking "
+            f"(m_valid); pad-capable impls: "
+            f"{[b.name for b in _pad_capable()]}"
+        )
     if fault_plan is not None and not isinstance(x, jax.core.Tracer):
         x = jnp.asarray(fault_plan.fire("digc.x", value=x, impl=spec.impl))
     x3, y3, p3, squeeze = promote_batch(x, y, pos_bias)
@@ -433,11 +460,11 @@ def digc(
             # forward pass for this entry (the tick-policy gate point).
             idx, dist, new_entry = _reuse_build(
                 builder, x3, y_arg, p3, spec, entry,
-                reuse_first=reuse_first,
+                reuse_first=reuse_first, m_valid=m_valid,
             )
             state = state.set(state_key, new_entry)
         else:
-            idx, dist = builder.build(x3, y_arg, p3, spec)
+            idx, dist = builder.build(x3, y_arg, p3, spec, **_pad_kw(m_valid))
         if squeeze:
             idx, dist = idx[0], dist[0]
         if return_dists:
@@ -446,14 +473,35 @@ def digc(
     if cache is not None and builder.supports_cache:
         idx, dist = builder.build(
             x3, y_arg, p3, spec, cache=cache, cache_key=cache_key,
+            **_pad_kw(m_valid),
         )
     else:
-        idx, dist = builder.build(x3, y_arg, p3, spec)
+        idx, dist = builder.build(x3, y_arg, p3, spec, **_pad_kw(m_valid))
     if squeeze:
         idx, dist = idx[0], dist[0]
     if return_dists:
         return idx, dist
     return idx
+
+
+def _pad_kw(m_valid):
+    """Keyword dict for a build call: empty when unmasked so builders
+    without the ``m_valid`` keyword keep their signatures."""
+    return {} if m_valid is None else {"m_valid": m_valid}
+
+
+def _pad_capable():
+    from repro.core.builder import available_impls
+
+    out = []
+    for name in available_impls():
+        try:
+            b = get_builder(name)
+        except Exception:
+            continue
+        if b.supports_pad:
+            out.append(b)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("k", "dilation"))
@@ -466,14 +514,15 @@ def digc_blocked_jit(x, y, k: int, dilation: int = 1):
 # (B, M, D) / (B, N, M) and return ((B, N, k) idx, (B, N, k) dist).
 
 
-def _build_reference(x, y, pos_bias, spec: DigcSpec):
+def _build_reference(x, y, pos_bias, spec: DigcSpec, m_valid=None):
     return digc_reference(
         x, y, k=spec.k, dilation=spec.dilation, pos_bias=pos_bias,
-        causal=spec.causal, return_dists=True,
+        causal=spec.causal, return_dists=True, m_valid=m_valid,
     )
 
 
-def _build_blocked(x, y, pos_bias, spec: DigcSpec, state_entry=None):
+def _build_blocked(x, y, pos_bias, spec: DigcSpec, state_entry=None,
+                   m_valid=None):
     # Exact tier: no implicit cache reads. Per-call norm reuse
     # (self-graph ||x||^2 == ||y||^2) happens inside the engine; a
     # caller serving a *fixed* co-node gallery passes precomputed norms
@@ -523,6 +572,7 @@ def _build_blocked(x, y, pos_bias, spec: DigcSpec, state_entry=None):
         mxu_bf16=bool(spec.mxu_bf16),
         sq_y=sq_y,
         group_w=spec.group_w,
+        m_valid=m_valid,
     )
     if state_entry is not None:
         return (*out, new_entry)
@@ -536,6 +586,7 @@ register(GraphBuilder(
     exact=True,
     supports_pos_bias=True,
     supports_causal=True,
+    supports_pad=True,  # BIG-masked pad co-node columns (m_valid)
     doc="Algorithm 1 verbatim; full distance matrix (oracle tier)",
 ))
 
@@ -549,6 +600,7 @@ register(GraphBuilder(
     supports_pos_bias=True,
     supports_causal=True,
     supports_state=True,  # frozen-gallery norms via DigcState entries
+    supports_pad=True,  # BIG-norm pad masking folded into sq_y
     doc="streaming XLA engine: two-level (block_n x block_m) tiling + "
         "pluggable LSM/GMM merge (select | topk | packed)",
 ))

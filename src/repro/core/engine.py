@@ -215,6 +215,7 @@ def stream_topk(
     causal: bool = False,
     sq_y: Optional[jax.Array] = None,
     group_w: Optional[int] = None,
+    m_valid: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming top-kd over a (block_n x block_m) tile grid.
 
@@ -226,6 +227,13 @@ def stream_topk(
     ``block_n=None`` disables query tiling (PR-1 behavior). ``sq_y``
     accepts precomputed co-node squared norms (B, M) — the
     ``DigcCache`` hook for serving a fixed co-node gallery.
+
+    ``m_valid`` is an (M,) or (B, M) bool mask of *live* co-nodes: pad
+    co-nodes take the same BIG-norm masking the internal tile padding
+    already uses (the ring tier's pad idiom lifted engine-wide), so a
+    pad node's distance is >= BIG/2 from every query and can never
+    displace a live neighbor — serving pads ragged patch counts to a
+    static N-bucket with exact results on the live rows (DESIGN.md §13).
     """
     if merge is None:
         merge = "select"
@@ -253,6 +261,19 @@ def stream_topk(
         sq_y = sq_x if self_graph else jnp.sum(y3 * y3, axis=-1)
     else:
         sq_y = sq_y.astype(jnp.float32)
+    if m_valid is not None:
+        # Live-node mask rides the norm term: every merge strategy and
+        # the fuse_norms operand packing consume sq_y, so one mask site
+        # covers them all. The query-side sq_x stays unmasked — pad
+        # *rows* still compute (garbage) neighbors; only pad *columns*
+        # are unselectable.
+        mask = jnp.asarray(m_valid, bool)
+        mask = mask[None, :] if mask.ndim == 1 else mask
+        if mask.shape[-1] != m:
+            raise ValueError(
+                f"m_valid has {mask.shape[-1]} co-node lanes, expected M={m}"
+            )
+        sq_y = jnp.where(mask, sq_y, BIG)
 
     block_m = m if block_m is None else max(1, min(block_m, m))
     m_pad = _ceil_to(m, block_m)

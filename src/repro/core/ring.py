@@ -89,13 +89,16 @@ def _ring_hops(x_loc, y_loc, sq_loc, *, kd, axis_name, n_dev):
     return run_d, run_i
 
 
-def _local_norms(y_loc, sq_loc, valid_loc, *, m, axis_name):
+def _local_norms(y_loc, sq_loc, valid_loc, *, m, axis_name, live_loc=None):
     """Select this device's co-node norm shard: carried (warm rows) or
     a fresh shard-local pass (cold rows), then BIG-mask padded co-nodes
     so they can never be selected. Runs inside shard_map — the global
     (B, M) norm array is only ever touched one shard at a time, which
     is what lets a ``DigcStateEntry.sq_y`` placed with a
-    ``PartitionSpec`` stay resident on its device across requests."""
+    ``PartitionSpec`` stay resident on its device across requests.
+    ``live_loc`` (b, m_loc) extends the same BIG-norm treatment to
+    caller-declared pad co-nodes (``m_valid``) — serving's N-bucket pad
+    nodes ride the exact masking the ring's own device padding uses."""
     m_loc = y_loc.shape[-2]
     my = lax.axis_index(axis_name)
     gid = my.astype(jnp.int32) * m_loc + jnp.arange(m_loc, dtype=jnp.int32)
@@ -105,6 +108,8 @@ def _local_norms(y_loc, sq_loc, valid_loc, *, m, axis_name):
         sq = fresh
     else:
         sq = jnp.where(valid_loc[:, None], sq_loc, fresh)
+    if live_loc is not None:
+        sq = jnp.where(live_loc, sq, jnp.float32(BIG))
     return jnp.where(pad[None, :], jnp.float32(BIG), sq)
 
 
@@ -121,6 +126,7 @@ def ring_digc(
     sq_valid: Optional[jax.Array] = None,
     return_dists: bool = False,
     return_norms: bool = False,
+    m_valid: Optional[jax.Array] = None,
 ):
     """Distributed DIGC over a device ring.
 
@@ -139,6 +145,11 @@ def ring_digc(
     (per batch row with a vector — multi-tenant serving mixes warm and
     cold rows). ``return_norms`` appends the selected (B, M) norms so
     a stateful caller can carry them into its ``DigcStateEntry``.
+    ``m_valid`` ((M,) or (B, M) bool) marks live co-nodes: pad lanes
+    take the same BIG-norm masking as the ring's internal device
+    padding, so serving's N-bucket pad nodes can never enter a top-k
+    (carried norms at masked lanes come back BIG — self-consistent for
+    a frozen gallery, whose pad set never changes).
     """
     if mesh is None:
         raise ValueError("ring_digc requires an explicit mesh")
@@ -176,23 +187,37 @@ def ring_digc(
         valid = sq_valid if sq_valid is not None else jnp.bool_(True)
         valid = jnp.broadcast_to(jnp.asarray(valid, bool), (b,))
 
+    live_p = None
+    if m_valid is not None:
+        live = jnp.asarray(m_valid, bool)
+        live = live[None, :] if live.ndim == 1 else live
+        live = jnp.broadcast_to(live, (b, m))
+        # Pad lanes beyond M are already gid-masked inside the body;
+        # padding the caller mask with False keeps the two consistent.
+        live_p = jnp.pad(live, ((0, 0), (0, m_pad - m)))
+
     bspec = batch_axis  # None = batch rows replicated along the ring
 
-    def body_stateless(x_loc, y_loc):
-        sq = _local_norms(y_loc, None, None, m=m, axis_name=axis_name)
+    def body_stateless(x_loc, y_loc, live_loc=None):
+        sq = _local_norms(
+            y_loc, None, None, m=m, axis_name=axis_name, live_loc=live_loc
+        )
         return _ring_hops(
             x_loc, y_loc, sq, kd=kd, axis_name=axis_name, n_dev=n_dev
         )
 
-    def body_stateful(x_loc, y_loc, sq_loc, valid_loc):
+    def body_stateful(x_loc, y_loc, sq_loc, valid_loc, live_loc=None):
         sq = _local_norms(
-            y_loc, sq_loc, valid_loc, m=m, axis_name=axis_name
+            y_loc, sq_loc, valid_loc, m=m, axis_name=axis_name,
+            live_loc=live_loc,
         )
         run_d, run_i = _ring_hops(
             x_loc, y_loc, sq, kd=kd, axis_name=axis_name, n_dev=n_dev
         )
         return run_d, run_i, sq
 
+    mask_specs = () if live_p is None else (P(bspec, axis_name),)
+    mask_args = () if live_p is None else (live_p,)
     if stateful:
         mapped = _shard_map(
             body_stateful,
@@ -202,22 +227,25 @@ def ring_digc(
                 P(bspec, axis_name, None),
                 P(bspec, axis_name),
                 P(bspec),
-            ),
+            ) + mask_specs,
             out_specs=(
                 P(bspec, axis_name, None),
                 P(bspec, axis_name, None),
                 P(bspec, axis_name),
             ),
         )
-        run_d, run_i, sq_out = mapped(x_p, y_p, sq_p, valid)
+        run_d, run_i, sq_out = mapped(x_p, y_p, sq_p, valid, *mask_args)
     else:
         mapped = _shard_map(
             body_stateless,
             mesh,
-            in_specs=(P(bspec, axis_name, None), P(bspec, axis_name, None)),
+            in_specs=(
+                P(bspec, axis_name, None),
+                P(bspec, axis_name, None),
+            ) + mask_specs,
             out_specs=(P(bspec, axis_name, None), P(bspec, axis_name, None)),
         )
-        run_d, run_i = mapped(x_p, y_p)
+        run_d, run_i = mapped(x_p, y_p, *mask_args)
         sq_out = None
 
     run_d = run_d[:, :n]
@@ -244,13 +272,15 @@ def _ceil_to(v: int, mult: int) -> int:
 # Registry entry (DESIGN.md §4, §10).
 
 
-def _build_ring(x, y, pos_bias, spec: DigcSpec, state_entry=None):
+def _build_ring(x, y, pos_bias, spec: DigcSpec, state_entry=None,
+                m_valid=None):
     del pos_bias  # validated unsupported upstream
     common = dict(
         k=spec.k, dilation=spec.dilation, mesh=spec.mesh,
         axis_name=spec.axis_name if spec.axis_name is not None else "data",
         batch_axis=spec.batch_axis,
         return_dists=True,
+        m_valid=m_valid,
     )
     if state_entry is None:
         return ring_digc(x, y, **common)
@@ -287,6 +317,7 @@ register(GraphBuilder(
     exact=True,
     distributed=True,
     supports_state=True,  # sharded co-node norms via DigcState entries
+    supports_pad=True,  # m_valid rides the same BIG-norm mask as device pads
     doc="pod-level GMM: co-node shards rotate a device ring "
         "(requires mesh= knob; batch_axis= shards rows data-parallel; "
         "stateful — carries sharded frozen-gallery norms)",

@@ -352,7 +352,14 @@ def state_entry(
 @dataclasses.dataclass(frozen=True)
 class DigcState:
     """Keyed collection of ``DigcStateEntry`` — the value threaded
-    through ``digc()`` / ``vig_forward`` / ``VigServeEngine``."""
+    through ``digc()`` / ``vig_forward`` / ``VigServeEngine``.
+
+    Entry row buffers have one static N (node count), so the
+    multi-resolution engine (DESIGN.md §13) keeps one ``DigcState``
+    per N-bucket and keys the §9-§12 row lifecycle — take/put/reset
+    rows, parking, quarantine, cached graphs — by (slot, N-bucket):
+    a slot's 224-cell rows and 448-cell rows are independent carries
+    of the same tenant."""
 
     entries: dict[str, DigcStateEntry]
 

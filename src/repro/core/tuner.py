@@ -440,9 +440,26 @@ class ReuseTuneResult:
     reuse_frac: float  # fraction of calls served from the cached graph
     recall: float      # neighbor recall of served vs per-call exact
     admitted: bool     # recall >= floor
+    n: Optional[int] = None  # node count, when the trace is single-N
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def scale_tau(tau: float, n_ref: int, n: int) -> float:
+    """Normalize a drift gate across N-buckets (DESIGN.md §13).
+
+    ``drift_stat`` is a per-row mean of |x|^2 over the N nodes, so its
+    tick-to-tick relative fluctuation shrinks ~1/sqrt(N): a tau
+    admitted at the reference bucket ``n_ref`` under-gates (spurious
+    rebuilds) at a smaller N and over-gates at a larger one. Widening
+    by sqrt(n_ref / n) keeps the false-rebuild rate comparable across
+    buckets; tau=0 stays exactly 0 (the bit-identity contract), and
+    the statistic itself is untouched — the serving gate's formula is
+    pinned by the stale-graph tests."""
+    if tau == 0.0:
+        return 0.0
+    return float(tau) * float(np.sqrt(n_ref / max(n, 1)))
 
 
 def _served_recall(served: np.ndarray, exact: np.ndarray) -> float:
@@ -480,6 +497,18 @@ def tune_reuse(
     wins; if none clears it, reuse stays off (the returned spec is
     unchanged). A wider tau never lowers reuse, so this is the
     recall-constrained maximum of the swept grid.
+
+    **Mixed resolutions** (DESIGN.md §13): ``drift_stat`` is a mean
+    |x|^2 over the N nodes, so a trace that interleaves N-buckets
+    under one layer key would (a) compare snapshots across unrelated
+    resolutions and (b) mis-gate a tau admitted at one N when applied
+    at another. The replay therefore groups per (layer_key, N) — its
+    own cache stream per N-bucket, exactly how the lattice engine
+    keys per-size state — and evaluates each group at the per-N
+    effective gate ``scale_tau(tau, n_ref, n)`` (n_ref = the largest
+    N in the trace, whose gate is the nominal tau). tau=0 scales to
+    exactly 0 in every bucket — the bit-identity contract holds
+    per-bucket.
     """
     from repro.core.digc import digc, drift_stat
 
@@ -487,11 +516,12 @@ def tune_reuse(
         raise ValueError(f"tune_reuse: unknown policy {policy!r}")
     base = spec.replace(reuse=None, drift_tau=None, max_stale=None)
 
-    # Group the trace per graph-cache entry, preserving tick structure,
-    # and compute each call's exact graph + drift statistic once.
-    per_key: dict[str, list[list[dict]]] = {}
+    # Group the trace per (graph-cache entry, N-bucket), preserving
+    # tick structure, and compute each call's exact graph + drift
+    # statistic once.
+    per_key: dict[tuple, list[list[dict]]] = {}
     for tick in ticks:
-        seen_this_tick: dict[str, int] = {}
+        seen_this_tick: dict[tuple, int] = {}
         for layer_key, h, cond in tick:
             x3 = h if h.ndim == 3 else h[None]
             m = cond.shape[-2] if cond is not None else x3.shape[-2]
@@ -500,9 +530,10 @@ def tune_reuse(
             if k_eff * dil > m:
                 dil = 1
             call_spec = base.replace(k=k_eff, dilation=dil)
-            first = layer_key not in seen_this_tick
-            seen_this_tick[layer_key] = 1
-            rows = per_key.setdefault(layer_key, [])
+            gkey = (layer_key, int(x3.shape[-2]))
+            first = gkey not in seen_this_tick
+            seen_this_tick[gkey] = 1
+            rows = per_key.setdefault(gkey, [])
             if first:
                 rows.append([])
             rows[-1].append({
@@ -510,12 +541,16 @@ def tune_reuse(
                 "stat": np.asarray(drift_stat(x3)),
             })
 
+    ns = sorted({n for _, n in per_key})
+    n_ref = ns[-1] if ns else 1
+    single_n = ns[0] if len(ns) == 1 else None
     results: list[ReuseTuneResult] = []
     for tau in sorted(set(float(t) for t in taus)):
         recalls: list[float] = []
         reused = 0
         total = 0
-        for calls_by_tick in per_key.values():
+        for (_, n), calls_by_tick in per_key.items():
+            tau_n = scale_tau(tau, n_ref, n)
             cached = snap = age = None
             for calls in calls_by_tick:
                 for ci, call in enumerate(calls):
@@ -530,7 +565,7 @@ def tune_reuse(
                     else:
                         drift = (np.abs(stat - snap)
                                  / np.maximum(np.abs(snap), 1e-9))
-                        reuse_row = (age < max_stale) & (drift < tau)
+                        reuse_row = (age < max_stale) & (drift < tau_n)
                     reused += int(reuse_row.sum())
                     if reuse_row.all() and policy != "overlap":
                         served = cached
@@ -550,7 +585,7 @@ def tune_reuse(
         frac = reused / total if total else 0.0
         results.append(ReuseTuneResult(
             policy, tau, max_stale, frac, recall,
-            bool(recall >= recall_floor),
+            bool(recall >= recall_floor), n=single_n,
         ))
         if policy == "overlap":
             break  # tau does not enter the overlap gate

@@ -33,6 +33,13 @@ from repro.core.tuner import VigSchedule
 from repro.models.module import spec
 
 
+class VigGridError(ValueError):
+    """Typed config-time error for grid geometry a model cannot run:
+    non-square / non-patch-aligned inputs, or a pyramid stage whose
+    grid is not divisible by its reduce ratio or by the 2x downsample
+    (the old failure mode was a bare reshape TypeError mid-forward)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class VigConfig:
     name: str
@@ -151,6 +158,11 @@ def _pool_conodes(x: jax.Array, grid: int, r: int) -> Optional[jax.Array]:
     """
     if r <= 1:
         return None
+    if grid % r:
+        raise VigGridError(
+            f"co-node pooling needs grid divisible by r={r}; got "
+            f"grid={grid} (vig_stage_plans screens this at config time)"
+        )
     b, n, d = x.shape
     g2 = grid // r
     xg = x.reshape(b, g2, r, g2, r, d)
@@ -159,6 +171,11 @@ def _pool_conodes(x: jax.Array, grid: int, r: int) -> Optional[jax.Array]:
 
 def _downsample(x: jax.Array, grid: int, w: jax.Array) -> jax.Array:
     """2x2 patch-merge + linear projection."""
+    if grid % 2:
+        raise VigGridError(
+            f"2x2 downsample needs an even grid; got grid={grid} "
+            f"(vig_stage_plans screens this at config time)"
+        )
     b, n, d = x.shape
     g2 = grid // 2
     xg = x.reshape(b, g2, 2, g2, 2, d).transpose(0, 1, 3, 2, 4, 5)
@@ -166,13 +183,43 @@ def _downsample(x: jax.Array, grid: int, w: jax.Array) -> jax.Array:
     return xg @ w
 
 
-def _dilation_for(cfg: VigConfig, global_block: int, m: int) -> int:
+def _dilation_for(cfg: VigConfig, global_block: int, m: int,
+                  k: Optional[int] = None) -> int:
     if not cfg.use_dilation:
         return 1
+    k = cfg.k if k is None else k
     d = min(global_block // 4 + 1, cfg.max_dilation)
-    while cfg.k * d > m and d > 1:
+    while k * d > m and d > 1:
         d -= 1
     return d
+
+
+def _resolution_k(k: int, grid: int, base_grid: int) -> int:
+    """The resolution-scaled neighbor count: ``n_knn = linspace(k, 2k)``
+    in the resolution dimension (the ViG / PVG-DET idiom — more pixels
+    per object means each node needs proportionally more neighbors to
+    cover the same receptive field). k at the model's native grid,
+    ramping linearly to 2k at twice the native grid, clamped to
+    [k, 2k]; grids at or below native keep the model's k, so native
+    forwards are byte-identical to the pre-multires behavior."""
+    if grid <= base_grid:
+        return k
+    frac = min(1.0, (grid - base_grid) / base_grid)
+    return int(round(k * (1.0 + frac)))
+
+
+def _pos_for_grid(pos: jax.Array, base_grid: int, grid: int) -> jax.Array:
+    """Resample the learned (base_grid^2, D) positional embedding to a
+    serving grid: reshape to 2D, bilinear-resize, flatten — the
+    standard ViT/ViG practice for off-native resolutions. Deterministic
+    (no RNG, no data dependence), so an engine forward and its B=1
+    replay see bit-identical embeddings; a no-op at the native grid."""
+    if grid == base_grid:
+        return pos
+    d = pos.shape[-1]
+    pos2d = pos.reshape(base_grid, base_grid, d)
+    out = jax.image.resize(pos2d, (grid, grid, d), method="bilinear")
+    return out.reshape(grid * grid, d).astype(pos.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -210,12 +257,15 @@ class StagePlan:
         return self.grid * self.grid
 
 
-def _block_geometry(cfg: VigConfig, gb: int, m: int) -> tuple[int, int]:
+def _block_geometry(cfg: VigConfig, gb: int, m: int,
+                    k: Optional[int] = None) -> tuple[int, int]:
     """(dilation, k_eff) for global block ``gb`` against ``m`` co-nodes
     — the single source of the k/dilation clamps the old layer loop
-    applied inline."""
-    dil = _dilation_for(cfg, gb, m)
-    k_eff = min(cfg.k, m // max(dil, 1)) or 1
+    applied inline. ``k`` overrides cfg.k (the resolution-scaled
+    schedule feeds the stage's scaled k here)."""
+    k = cfg.k if k is None else k
+    dil = _dilation_for(cfg, gb, m, k)
+    k_eff = min(k, m // max(dil, 1)) or 1
     if k_eff * dil > m:
         dil = 1
     return dil, k_eff
@@ -223,16 +273,49 @@ def _block_geometry(cfg: VigConfig, gb: int, m: int) -> tuple[int, int]:
 
 def vig_stage_plans(cfg: VigConfig,
                     digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
+                    *, grid: Optional[int] = None,
                     ) -> tuple[StagePlan, ...]:
-    """Materialize the stage pipeline for a model + DIGC choice."""
+    """Materialize the stage pipeline for a model + DIGC choice.
+
+    ``grid`` is the serving patch grid (default: the config's native
+    ``base_grid``) — the resolution-parametric hook: stage grids, m,
+    the per-block (dilation, k_eff) clamps and the resolution-scaled k
+    schedule (``_resolution_k``) all derive from it, so one config
+    serves any square input whose grid passes the divisibility screen.
+
+    Raises ``VigGridError`` at config time (here, not mid-forward) when
+    a stage's grid is not divisible by its reduce ratio or, for any
+    stage but the last, by the 2x downsample — naming the stage and
+    grid (e.g. 800^2 / patch 16 -> grid 50 -> 25 breaks the second
+    downsample of a 4-stage pyramid).
+    """
     plans = []
-    grid = cfg.base_grid
+    grid = cfg.base_grid if grid is None else int(grid)
+    if grid < 1:
+        raise VigGridError(f"serving grid must be >= 1; got {grid}")
     gb = 0
     for si, depth in enumerate(cfg.depths):
         spec = resolve_digc_spec(cfg, digc_impl, stage=si)
         r = cfg.reduce_ratios[si] if si < len(cfg.reduce_ratios) else 1
+        if r > 1 and grid % r:
+            raise VigGridError(
+                f"stage{si}: grid {grid} is not divisible by its "
+                f"reduce ratio r={r} (model {cfg.name!r}); serve a "
+                f"resolution whose stage grids divide, or drop the "
+                f"pooling ratio"
+            )
+        if si + 1 < len(cfg.depths) and grid % 2:
+            raise VigGridError(
+                f"stage{si}: grid {grid} is odd but stage{si + 1} "
+                f"needs the 2x2 downsample (model {cfg.name!r}); "
+                f"serve a resolution divisible through every stage"
+            )
+        k_s = _resolution_k(spec.k, grid, cfg.grid_at_stage(si))
+        spec = spec.replace(k=k_s)
         m = (grid // max(r, 1)) ** 2
-        geo = tuple(_block_geometry(cfg, gb + bi, m) for bi in range(depth))
+        geo = tuple(
+            _block_geometry(cfg, gb + bi, m, k_s) for bi in range(depth)
+        )
         plans.append(StagePlan(
             index=si, depth=depth, grid=grid, r=r, m=m, spec=spec,
             dilations=tuple(g[0] for g in geo),
@@ -268,7 +351,8 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
                   cache=None, layer_key: Optional[str] = None,
                   state: Optional[DigcState] = None,
                   reuse_first: bool = True,
-                  digc_capture: Optional[list] = None):
+                  digc_capture: Optional[list] = None,
+                  m_valid: Optional[jax.Array] = None):
     """x (B, N, D) -> ((B, N, D), state); one Grapher + FFN residual
     pair. The second return is the (possibly updated) ``DigcState`` —
     ``None`` when no state was passed.
@@ -291,6 +375,12 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     DIGC call — the probe hook the tuner's recall-floor verification
     and the recall-vs-drift bench replay against; works under jit when
     the caller returns the captured arrays as outputs.
+
+    ``m_valid`` ((N,) or (B, N) bool) marks live nodes when the batch
+    carries N-bucket pad nodes (DESIGN.md §13): pad co-node columns are
+    BIG-norm-masked inside DIGC so they never enter a live row's top-k.
+    Only meaningful for self-graph stages (r == 1 — pooling would mix
+    pad and live nodes); the caller (``vig_forward``) screens that.
     """
     dspec = digc_spec if digc_spec is not None else resolve_digc_spec(cfg, None)
     h = _ln(x, bp["ln_g"]["scale"])
@@ -313,10 +403,11 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
     if state is not None:
         idx, state = digc(h, cond, spec=dspec, state=state,
                           state_key=layer_key,
-                          reuse_first=reuse_first)  # (B, N, k)
+                          reuse_first=reuse_first,
+                          m_valid=m_valid)  # (B, N, k)
     else:
         idx = digc(h, cond, spec=dspec, cache=cache,
-                   cache_key=layer_key)  # (B, N, k)
+                   cache_key=layer_key, m_valid=m_valid)  # (B, N, k)
     aggregate = builder.aggregate if builder.aggregate is not None else mr_aggregate
     agg = aggregate(h, cond if cond is not None else h, idx)
     h = jnp.concatenate([h, agg], axis=-1) @ bp["fc_graph"]
@@ -329,7 +420,8 @@ def grapher_block(bp, x, cfg: VigConfig, grid: int, r: int, dilation: int,
 
 def run_stage(stage_params, x, cfg: VigConfig, plan: StagePlan, *,
               cache=None, state: Optional[DigcState] = None,
-              digc_capture: Optional[list] = None):
+              digc_capture: Optional[list] = None,
+              m_valid: Optional[jax.Array] = None):
     """Run one pipeline stage: ``plan.depth`` Grapher+FFN blocks over a
     fixed grid, sharing the stage's state key (layer l+1 warm-starts —
     or, under a reuse policy, serves — layer l's graph artifact)."""
@@ -338,7 +430,7 @@ def run_stage(stage_params, x, cfg: VigConfig, plan: StagePlan, *,
             stage_params[f"block{bi}"], x, cfg, plan.grid, plan.r,
             plan.dilations[bi], digc_spec=plan.spec, cache=cache,
             layer_key=plan.key, state=state, reuse_first=(bi == 0),
-            digc_capture=digc_capture,
+            digc_capture=digc_capture, m_valid=m_valid,
         )
     return x, state
 
@@ -347,7 +439,8 @@ def vig_forward(params, images, cfg: VigConfig, *,
                 digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
                 cache=None,
                 state: Optional[DigcState] = None,
-                digc_capture: Optional[list] = None):
+                digc_capture: Optional[list] = None,
+                valid_mask: Optional[jax.Array] = None):
     """images (B, H, W, C) -> class logits (B, num_classes).
 
     ``digc_impl`` may be a registered builder name, a full DigcSpec, or
@@ -370,17 +463,61 @@ def vig_forward(params, images, cfg: VigConfig, *,
     ``digc_capture`` (a list) collects every DIGC call's
     ``(layer_key, nodes, co_nodes)`` — the recall-verification probe
     hook (see ``grapher_block``).
+
+    **Resolution-parametric** (DESIGN.md §13): the serving grid is
+    inferred from the image shape — H == W, divisible by ``cfg.patch``
+    (``VigGridError`` otherwise) — so one config + param set serves any
+    square resolution whose grid passes ``vig_stage_plans``'s screen.
+    Off-native grids bilinear-resample the positional embedding
+    (``_pos_for_grid``) and scale k per stage (``_resolution_k``); the
+    native grid runs byte-identical to the pre-multires forward.
+
+    ``valid_mask`` ((N,) or (B, N) bool) marks live nodes when images
+    were zero-padded up to an N-bucket: pad nodes are BIG-norm-masked
+    out of every DIGC top-k and excluded from the mean pooling (all
+    other compute is node-local). Supported only for single-stage
+    models with r == 1 — pooling/downsampling would mix pad and live
+    rows — enforced here with a ``VigGridError``.
     """
+    b, hh, ww, _ = images.shape
+    if hh != ww:
+        raise VigGridError(
+            f"vig_forward needs square inputs; got H={hh}, W={ww} "
+            f"(pad to a square N-bucket upstream)"
+        )
+    if hh % cfg.patch:
+        raise VigGridError(
+            f"image size {hh} is not divisible by patch={cfg.patch}"
+        )
+    grid0 = hh // cfg.patch
+    plans = vig_stage_plans(cfg, digc_impl, grid=grid0)
+    if valid_mask is not None and (
+        len(cfg.depths) > 1 or any(p.r > 1 for p in plans)
+    ):
+        raise VigGridError(
+            f"valid_mask (N-bucket pad nodes) requires a single-stage "
+            f"model with r=1 — pooling/downsampling mixes pad and live "
+            f"rows; model {cfg.name!r} has depths={cfg.depths}, "
+            f"reduce_ratios={cfg.reduce_ratios}"
+        )
     x = patchify(images, cfg.patch) @ params["stem"]
-    x = x + params["pos"]
-    for plan in vig_stage_plans(cfg, digc_impl):
+    x = x + _pos_for_grid(params["pos"], cfg.base_grid, grid0)
+    for plan in plans:
         x, state = run_stage(
             params[plan.key], x, cfg, plan, cache=cache, state=state,
-            digc_capture=digc_capture,
+            digc_capture=digc_capture, m_valid=valid_mask,
         )
         if plan.index + 1 < len(cfg.depths):
             x = _downsample(x, plan.grid, params[f"down{plan.index}"])
-    pooled = jnp.mean(x, axis=1)
+    if valid_mask is None:
+        pooled = jnp.mean(x, axis=1)
+    else:
+        mask = jnp.asarray(valid_mask, bool)
+        mask = mask[None, :] if mask.ndim == 1 else mask
+        w = mask.astype(x.dtype)[..., None]
+        pooled = jnp.sum(x * w, axis=1) / jnp.sum(
+            w, axis=1
+        ).clip(1.0)
     logits = pooled @ params["head"]
     if state is not None:
         return logits, state
@@ -390,7 +527,8 @@ def vig_forward(params, images, cfg: VigConfig, *,
 def init_vig_state(cfg: VigConfig, batch: int,
                    digc_impl: Union[str, DigcSpec, "VigSchedule", None] = None,
                    *, per_slot: bool = False, mesh=None,
-                   mesh_axis: str = "data") -> DigcState:
+                   mesh_axis: str = "data",
+                   grid: Optional[int] = None) -> DigcState:
     """Allocate the functional DIGC state for a model + batch size.
 
     One entry per stage (the key ``grapher_block`` passes): a cold
@@ -416,13 +554,17 @@ def init_vig_state(cfg: VigConfig, batch: int,
     forward the co-nodes are this call's own features (never a frozen
     gallery), so ring/blocked stages carry counters only — placement
     matters the moment a caller allocates gallery norms or centroids.
+
+    ``grid`` sizes the state for an off-native serving resolution
+    (DESIGN.md §13): the multi-resolution engine allocates one state
+    per N-bucket, each sized by the plans that bucket's forward runs.
     """
     from repro.core.builder import reuse_params
     from repro.core.strategies import default_cluster_params
 
     rows = batch if per_slot else None
     entries = {}
-    for plan in vig_stage_plans(cfg, digc_impl):
+    for plan in vig_stage_plans(cfg, digc_impl, grid=grid):
         spec = plan.spec
         stage_mesh = spec.mesh if spec.mesh is not None else mesh
         stage_axis = (
@@ -455,16 +597,18 @@ def vig_loss_fn(params, batch, cfg: VigConfig):
     return jnp.mean(logz - gold), {}
 
 
-def count_digc_work(cfg: VigConfig):
+def count_digc_work(cfg: VigConfig, *, grid: Optional[int] = None):
     """Per-image DIGC workload (N, M, D, k, dilation) per block — feeds
     the paper-table benchmarks. Reads the same ``vig_stage_plans`` the
-    forward executes, so the accounting can never drift from the model."""
+    forward executes (including, with ``grid=``, an off-native serving
+    resolution and its scaled k), so the accounting can never drift
+    from the model."""
     out = []
-    for plan in vig_stage_plans(cfg):
+    for plan in vig_stage_plans(cfg, grid=grid):
         d = cfg.embed_dims[plan.index]
         for bi in range(plan.depth):
             out.append({
                 "stage": plan.index, "N": plan.n, "M": plan.m, "D": d,
-                "k": cfg.k, "dilation": plan.dilations[bi],
+                "k": plan.spec.k, "dilation": plan.dilations[bi],
             })
     return out

@@ -247,6 +247,22 @@ class VigServeEngine:
     the exact active-batch size (the PR-3 one-program-per-batch-size
     behavior, kept as the benchmark baseline).
 
+    **The multi-resolution lattice** (``image_sizes=``, DESIGN.md
+    §13): the bucket grid gains an N dimension — each configured image
+    size is an N-bucket whose patch count sizes its own per-slot state
+    (``_slot_states[size]``) and programs. Admission resolves every
+    request to the smallest cell that fits: an exact configured size
+    serves unmasked (its program trace is byte-identical to a
+    single-size engine's), a ragged size is zero-padded up to its cell
+    with the pad nodes BIG-norm-masked out of every DIGC top-k and the
+    mean pooling (single-stage r=1 models only — typed submit error
+    otherwise). A tick serves ONE (size, pad-variant) cell — the
+    head-of-queue's — so a mixed 224/448/800 trace compiles at most
+    |buckets| x |image_sizes| programs and every served row still
+    matches its own same-resolution B=1 replay bit-for-bit on CPU.
+    Without an explicit ``image_sizes`` the engine is single-size and
+    keeps the strict exact-shape submit contract.
+
     **Sharded mode** (``mesh=``, DESIGN.md §10): the engine goes
     mesh-native — the construction spec is threaded with the mesh
     (``mesh_axis`` names the co-node ring axis, ``mesh_batch_axis``
@@ -312,6 +328,7 @@ class VigServeEngine:
     def __init__(self, cfg, params, *, digc_impl=None, batch: int = 8,
                  autotune: bool = True, tuner_path=None, mode: str = "jit",
                  buckets: Optional[tuple] = DEFAULT_BUCKETS,
+                 image_sizes: Optional[tuple] = None,
                  on_compile: Optional[Callable[[int], None]] = None,
                  mesh=None, mesh_axis: str = "data",
                  mesh_batch_axis: Optional[str] = None,
@@ -322,7 +339,7 @@ class VigServeEngine:
                  retry_attempts: int = 3, retry_backoff: float = 0.02):
         from repro.core.builder import get_builder
         from repro.core.engine import DigcCache
-        from repro.models.vig import resolve_digc_spec
+        from repro.models.vig import resolve_digc_spec, vig_stage_plans
 
         from repro.core.tuner import VigSchedule
 
@@ -337,6 +354,33 @@ class VigServeEngine:
         self.batch = batch
         self.spec = resolve_digc_spec(cfg, digc_impl)
         self.mode = mode
+        # -- multi-resolution lattice (DESIGN.md §13): the bucket grid
+        # gains an N dimension. Each configured image size is an
+        # N-bucket (N = (size/patch)^2 patch nodes); admission resolves
+        # every request to the smallest size that fits and the engine
+        # serves at most |buckets| x |image_sizes| compiled programs.
+        # Each size's pyramid is screened here, at construction — an
+        # odd-grid config must fail with the typed VigGridError naming
+        # the stage and grid, not three ticks later inside a jit trace.
+        # Lattice admission (ragged sizes padded up to a cell) is
+        # opt-in via an explicit image_sizes; the default engine keeps
+        # the strict exact-shape submit contract.
+        self._lattice = image_sizes is not None
+        if image_sizes is None:
+            image_sizes = (cfg.image_size,)
+        sizes = tuple(sorted(set(int(s) for s in image_sizes)))
+        if not sizes or sizes[0] < cfg.patch:
+            raise ValueError(
+                f"image_sizes must be >= patch={cfg.patch}: {image_sizes!r}"
+            )
+        for s in sizes:
+            if s % cfg.patch:
+                raise ValueError(
+                    f"image_sizes: {s} is not divisible by the model "
+                    f"patch size {cfg.patch}"
+                )
+            vig_stage_plans(cfg, grid=s // cfg.patch)  # VigGridError here
+        self.image_sizes = sizes
         # -- sharded mode (DESIGN.md §10): thread the mesh into the
         # construction spec, so every bucket program and the slot state
         # allocation see the same placement. mesh_axis names the
@@ -372,11 +416,20 @@ class VigServeEngine:
                         "divide a sharded batch axis"
                     )
                 dsz = int(mesh.shape[mesh_batch_axis])
-                bad = [v for v in buckets if v % dsz]
+                bad = [v for v in buckets if v < dsz]
                 if bad:
+                    # A bucket below the axis size cannot give every
+                    # device a live row even after padding — that is a
+                    # config error. Buckets that merely fail to *divide*
+                    # the axis are fine: step() pads the tick to the
+                    # next axis multiple (padding lanes replicate lane
+                    # 0, exactly like bucket padding) instead of
+                    # refusing at construction.
                     raise ValueError(
-                        f"bucket sizes {bad} do not divide the "
-                        f"{mesh_batch_axis!r} mesh axis ({dsz} devices)"
+                        f"bucket sizes {bad} are smaller than the "
+                        f"{mesh_batch_axis!r} mesh axis ({dsz} devices); "
+                        "configure buckets >= the axis size (non-"
+                        "dividing buckets are padded per tick)"
                     )
             self.spec = self.spec.replace(
                 mesh=mesh, axis_name=mesh_axis, batch_axis=mesh_batch_axis
@@ -407,11 +460,22 @@ class VigServeEngine:
         self._tenant_slot: dict[Any, int] = {}
         self._slot_last_tick = [0] * self.slots
         self._tick = 0
-        self._slot_state = None  # canonical per-slot DigcState (lazy)
-        self._programs: dict[int, Callable] = {}  # bucket -> compiled fwd
-        self._bucket_schedules: dict[int, Any] = {}
-        self._bucket_tuned: dict[int, list] = {}
+        # canonical per-slot DigcState, one per N-bucket (lazy): row
+        # buffers are sized by the size's stage plans, and the §9-§12
+        # row lifecycle (gather/scatter, parking, quarantine, cached
+        # graphs) is keyed (slot, N-bucket). ``_slot_state`` (below)
+        # aliases the primary size — single-size engines see the
+        # pre-multires attribute unchanged.
+        self._slot_states: dict[int, Any] = {}  # size -> DigcState
+        # programs/schedules key by ``_program_key``: the bare bucket
+        # for a single-size engine (the pre-multires contract the
+        # on_compile tests pin), (size, bucket) on the lattice, plus a
+        # "pad" tag for the mask-threading variant.
+        self._programs: dict[Any, Callable] = {}  # cell key -> compiled fwd
+        self._bucket_schedules: dict[Any, Any] = {}
+        self._bucket_tuned: dict[Any, list] = {}
         self.bucket_ticks: dict[int, int] = {}
+        self.cell_ticks: dict[tuple, int] = {}  # (size, bucket) -> ticks
         # -- LRU state parking (DESIGN.md §10): host-side copies of
         # evicted tenants' state rows, restored on re-admit so hot
         # tenants survive slot churn warm. Bounded; park_capacity=0
@@ -425,6 +489,7 @@ class VigServeEngine:
         self.last_resets: list[int] = []
         self.last_restores: list[int] = []
         self.last_bucket: Optional[int] = None
+        self.last_cell: Optional[tuple] = None  # (size, bucket) last tick
         # -- fault tolerance (DESIGN.md §11) ----------------------------
         # fault_plan injects failures at named sites (tests/chaos);
         # guards=True arms the detection/recovery machinery — per-lane
@@ -448,7 +513,7 @@ class VigServeEngine:
         self.last_quarantined: list[int] = []  # slots, last tick
         self._row_tokens: dict[str, dict[int, int]] = {}
         self._consecutive_misses = 0
-        self._program_ticks: dict[int, int] = {}  # bucket -> ticks served
+        self._program_ticks: dict[Any, int] = {}  # cell key -> ticks served
         # -- stale-graph serving (DESIGN.md §12) ------------------------
         # Lane-granular reuse accounting, reconstructed host-side from
         # graph_age deltas after each tick (age resets to 0 on rebuild,
@@ -460,15 +525,75 @@ class VigServeEngine:
         self._drift_n = 0
         self.last_drift: dict[str, float] = {}  # entry key -> mean drift
 
+    # -- multi-resolution lattice plumbing (DESIGN.md §13) --------------
+
+    @property
+    def _slot_state(self):
+        """The primary size's canonical slot state — the pre-multires
+        attribute, kept as an alias so single-size callers (and the
+        serve tests) keep reading/assigning one state object."""
+        return self._slot_states.get(self.image_sizes[0])
+
+    @_slot_state.setter
+    def _slot_state(self, value):
+        if value is None:
+            self._slot_states.pop(self.image_sizes[0], None)
+        else:
+            self._slot_states[self.image_sizes[0]] = value
+
+    def _multi_size(self) -> bool:
+        return len(self.image_sizes) > 1
+
+    def _req_size(self, req) -> int:
+        return getattr(req, "_serve_size", self.image_sizes[0])
+
+    def _req_mask(self, req):
+        return getattr(req, "_serve_mask", None)
+
+    def _program_key(self, bucket: int, size: Optional[int] = None,
+                     masked: bool = False):
+        """Cell key for programs/ticks/on_compile: the bare bucket on a
+        single-size engine (the pre-multires contract), (size, bucket)
+        on the lattice, with a "pad" tag for the mask variant."""
+        size = self.image_sizes[0] if size is None else size
+        if masked:
+            return (size, bucket, "pad")
+        if not self._multi_size():
+            return bucket
+        return (size, bucket)
+
+    def _tick_width(self, bucket: int) -> int:
+        """Static batch width of one tick's program: the bucket, padded
+        up to the next ``mesh_batch_axis`` multiple when the rows are
+        sharded data-parallel — a non-dividing bucket pads its tick
+        (replicating lane 0) instead of failing at construction."""
+        if self.mesh is None or self.mesh_batch_axis is None:
+            return bucket
+        dsz = int(self.mesh.shape[self.mesh_batch_axis])
+        return -(-bucket // dsz) * dsz
+
+    def _reset_rows_all(self, slots) -> None:
+        """Cold-reset ``slots``' rows in every allocated N-bucket state
+        (quarantine/release/admission: a slot's occupancy changes for
+        all resolutions at once, so stale warm rows at *any* size must
+        not survive into the next tenant)."""
+        for size, st in self._slot_states.items():
+            self._slot_states[size] = st.reset_rows(list(slots))
+        self._refresh_tokens(slots)
+
     # -- tuning ---------------------------------------------------------
 
-    def _stage_rows(self) -> list[dict]:
+    def _stage_rows(self, size: Optional[int] = None) -> list[dict]:
         """One workload row per stage: pooled stages tune the real
-        (N, M) pair, later pyramid stages get their own entries."""
+        (N, M) pair, later pyramid stages get their own entries.
+        ``size`` selects the N-bucket (default: the native pyramid) —
+        the rows carry that bucket's (N, M, k), so the tuner's workload
+        key covers both lattice dimensions."""
         from repro.models.vig import count_digc_work
 
+        grid = None if size is None else size // self.cfg.patch
         rows: dict[int, dict] = {}
-        for row in count_digc_work(self.cfg):
+        for row in count_digc_work(self.cfg, grid=grid):
             rows.setdefault(row["stage"], row)
         return [rows[si] for si in sorted(rows)]
 
@@ -499,34 +624,46 @@ class VigServeEngine:
     def _impl_choice(self):
         return self.schedule if self.schedule is not None else self.spec
 
-    def _bucket_choice(self, bucket: int):
-        """Resolve the DIGC impl/schedule for one bucket's program.
+    def _bucket_choice(self, bucket: int, size: Optional[int] = None):
+        """Resolve the DIGC impl/schedule for one (B, N) cell's program.
 
-        The tuner's workload key includes the batch size, so bucketed
-        serving tunes **per bucket** (``tune_bucket_schedules``), never
-        reusing a schedule measured at a different batch — including
-        the one ``warmup()`` measured at ``self.batch`` for the direct
-        path (a warmup-tuned B=8 tile must not bake into the B=1
-        program; only a user-provided schedule applies everywhere).
+        The tuner's workload key includes the batch size AND the node
+        counts (``_stage_rows(size)`` feeds the cell's own N/M), so
+        lattice serving tunes **per cell** (``tune_bucket_schedules``),
+        never reusing a schedule measured at a different batch or
+        resolution — including the one ``warmup()`` measured at
+        ``self.batch`` for the direct path (a warmup-tuned B=8 tile
+        must not bake into the B=1 program; only a user-provided
+        schedule applies everywhere).
         """
         if self._user_schedule:
             return self.schedule
         if self.spec.impl != "blocked" or not self.autotune:
             return self.spec
-        if bucket not in self._bucket_schedules:
+        size = self.image_sizes[0] if size is None else size
+
+        def _skey(b):
+            return b if not self._multi_size() else (size, b)
+
+        if _skey(bucket) not in self._bucket_schedules:
             from repro.core.tuner import DigcTuner
 
-            # First miss tunes every configured bucket at once: a
-            # serving replica will compile them all anyway, and the
-            # tuner's JSON cache makes later engines free.
+            # First miss tunes every configured bucket at once (for
+            # this size): a serving replica will compile them all
+            # anyway, and the tuner's JSON cache makes later engines
+            # free.
             targets = self.buckets if self.buckets is not None else (bucket,)
             tuner = DigcTuner(self.tuner_path)
             schedules, tuned = tuner.tune_bucket_schedules(
-                self._stage_rows(), spec=self.spec, buckets=targets,
+                self._stage_rows(size), spec=self.spec, buckets=targets,
             )
-            self._bucket_schedules.update(schedules)
-            self._bucket_tuned.update(tuned)
-        return self._bucket_schedules[bucket]
+            self._bucket_schedules.update(
+                {_skey(b): s for b, s in schedules.items()}
+            )
+            self._bucket_tuned.update(
+                {_skey(b): t for b, t in tuned.items()}
+            )
+        return self._bucket_schedules[_skey(bucket)]
 
     # -- direct fixed-batch path (PR-3 API) -----------------------------
 
@@ -597,24 +734,93 @@ class VigServeEngine:
         take co-batched tenants down with it).
         """
         img = np.asarray(req.image)
-        want = (self.cfg.image_size, self.cfg.image_size, self.cfg.in_chans)
         if img.ndim != 3:
             raise ValueError(
                 f"VigRequest.image (uid={req.uid}): expected a 3-d "
                 f"(H, W, C) array, got ndim={img.ndim} shape={img.shape}"
             )
-        if img.shape != want:
+        h, w, c = img.shape
+        if c != self.cfg.in_chans:
             raise ValueError(
-                f"VigRequest.image (uid={req.uid}): shape {img.shape} "
-                f"does not match the engine config {want} "
-                "(image_size, image_size, in_chans)"
+                f"VigRequest.image (uid={req.uid}): {c} channels does "
+                f"not match the engine config in_chans={self.cfg.in_chans}"
+            )
+        if h != w:
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): non-square image "
+                f"{img.shape}; the patch lattice needs H == W"
             )
         if not np.issubdtype(img.dtype, np.floating):
             raise ValueError(
                 f"VigRequest.image (uid={req.uid}): dtype {img.dtype} is "
                 "not a float dtype; pass float32 pixel features"
             )
+        # -- N-bucket resolution (DESIGN.md §13): an exact configured
+        # size serves its own cell unmasked; a ragged size pads up to
+        # the smallest cell that fits, carrying a per-node live mask so
+        # DIGC BIG-norm-masks the pad nodes out of every top-k.
+        if h in self.image_sizes:
+            req._serve_size, req._serve_mask = h, None
+            self.queue.append(req)
+            return
+        if not self._lattice:
+            want = (self.cfg.image_size, self.cfg.image_size,
+                    self.cfg.in_chans)
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): shape {img.shape} "
+                f"does not match the engine config {want} "
+                "(image_size, image_size, in_chans); construct the "
+                "engine with image_sizes= to serve ragged resolutions"
+            )
+        if h % self.cfg.patch:
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): size {h} is not "
+                f"divisible by the model patch size {self.cfg.patch}"
+            )
+        fits = [s for s in self.image_sizes if s >= h]
+        if not fits:
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): size {h} exceeds "
+                f"the largest configured image size "
+                f"{self.image_sizes[-1]} (image_sizes={self.image_sizes})"
+            )
+        size = fits[0]
+        self._check_pad_capable(req, h)
+        g, g0 = size // self.cfg.patch, h // self.cfg.patch
+        mask2d = np.zeros((g, g), bool)
+        mask2d[:g0, :g0] = True
+        req._serve_size, req._serve_mask = size, mask2d.reshape(-1)
         self.queue.append(req)
+
+    def _check_pad_capable(self, req, h: int) -> None:
+        """Typed submit-time screen for the padded (masked) path: pad
+        nodes require a single-stage r=1 model (pooling/downsampling
+        would mix pad and live rows) and a pad-capable DIGC tier
+        (``GraphBuilder.supports_pad`` — the BIG-norm masking)."""
+        from repro.core.builder import get_builder
+
+        cfg = self.cfg
+        if len(cfg.depths) > 1 or any(
+            r > 1 for r in cfg.reduce_ratios[:len(cfg.depths)]
+        ):
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): size {h} needs "
+                f"pad nodes to reach the {self.image_sizes} cell set, "
+                f"but model {cfg.name!r} has a multi-stage/pooled "
+                f"pyramid (depths={cfg.depths}, "
+                f"reduce_ratios={cfg.reduce_ratios}) that would mix pad "
+                "and live rows — submit an exact configured size, or "
+                "add this size to image_sizes"
+            )
+        impl = (self.schedule.spec_for(0).impl if self._user_schedule
+                else self.spec.impl)
+        if not get_builder(impl).supports_pad:
+            raise ValueError(
+                f"VigRequest.image (uid={req.uid}): size {h} needs pad "
+                f"nodes, but DIGC impl {impl!r} does not support "
+                "pad-node masking (m_valid); submit an exact configured "
+                "size, or serve a pad-capable tier"
+            )
 
     # -- fault tolerance (DESIGN.md §11) --------------------------------
 
@@ -640,15 +846,29 @@ class VigServeEngine:
                     time.sleep(self.retry_backoff * (2 ** attempt))
         raise last
 
-    def _refresh_tokens(self, slots) -> None:
+    def _token_key(self, size: int, key: str) -> str:
+        """Integrity-token namespace: per (N-bucket, entry) on the
+        lattice; the bare entry key on a single-size engine."""
+        return key if not self._multi_size() else f"{size}:{key}"
+
+    def _refresh_tokens(self, slots, size: Optional[int] = None) -> None:
         """Re-fingerprint ``slots``' state rows after a *sanctioned*
         write (admission reset, unpark restore, end-of-tick scatter).
-        Any later mismatch is an unsanctioned mutation."""
-        if not self.guards or self._slot_state is None:
+        Any later mismatch is an unsanctioned mutation. ``size``
+        restricts the refresh to one N-bucket's state (the per-tick
+        scatter); ``None`` re-fingerprints every allocated bucket
+        (slot-lifecycle writes touch them all)."""
+        if not self.guards or not self._slot_states:
             return
-        fps = self._slot_state.row_fingerprints(list(slots))
-        for key, rows in fps.items():
-            self._row_tokens.setdefault(key, {}).update(rows)
+        targets = (self._slot_states.items() if size is None
+                   else [(size, self._slot_states[size])]
+                   if size in self._slot_states else [])
+        for sz, st in targets:
+            fps = st.row_fingerprints(list(slots))
+            for key, rows in fps.items():
+                self._row_tokens.setdefault(
+                    self._token_key(sz, key), {}
+                ).update(rows)
 
     def _graph_stats_update(self, old_state, new_state, lanes) -> None:
         """Reconcile per-lane graph reuse/rebuild counters from one
@@ -692,26 +912,35 @@ class VigServeEngine:
                 self._drift_sum += float(drift.sum())
                 self._drift_n += int(drift.size)
 
-    def _row_intact(self, slot: int, fps=None) -> bool:
-        """Check ``slot``'s rows against their integrity tokens. Rows
-        never fingerprinted (no sanctioned write yet) are trusted.
-        ``fps`` passes precomputed fingerprints so one tick's lanes
-        share a single device->host pull."""
-        if self._slot_state is None:
+    def _row_intact(self, slot: int, fps=None,
+                    size: Optional[int] = None) -> bool:
+        """Check ``slot``'s rows against their integrity tokens (for
+        the ``size`` N-bucket being served). Rows never fingerprinted
+        (no sanctioned write yet) are trusted. ``fps`` passes
+        precomputed fingerprints so one tick's lanes share a single
+        device->host pull."""
+        size = self.image_sizes[0] if size is None else size
+        st = self._slot_states.get(size)
+        if st is None:
             return True
         if fps is None:
-            fps = self._slot_state.row_fingerprints([slot])
+            fps = st.row_fingerprints([slot])
         for key, rows in fps.items():
-            want = self._row_tokens.get(key, {}).get(slot)
+            want = self._row_tokens.get(
+                self._token_key(size, key), {}
+            ).get(slot)
             if want is not None and rows[slot] != want:
                 return False
         return True
 
-    def _row_finite(self, slot: int, finite=None) -> bool:
-        if self._slot_state is None:
+    def _row_finite(self, slot: int, finite=None,
+                    size: Optional[int] = None) -> bool:
+        size = self.image_sizes[0] if size is None else size
+        st = self._slot_states.get(size)
+        if st is None:
             return True
         if finite is None:
-            finite = self._slot_state.rows_finite([slot])
+            finite = st.rows_finite([slot])
         return finite[slot]
 
     def _quarantine(self, slot: int, req: VigRequest,
@@ -726,10 +955,11 @@ class VigServeEngine:
         self.requests_failed += 1
         self.fault_log.append(info)
         self.last_quarantined.append(slot)
-        if self._slot_state is not None:
-            self._slot_state = self._slot_state.reset_rows([slot])
+        if self._slot_states:
+            # A poisoned carry is suspect at every resolution the slot
+            # holds rows for — reset them all (one counted reset).
+            self._reset_rows_all([slot])
             self.state_resets += 1
-            self._refresh_tokens([slot])
         self._slot_last_tick[slot] = self._tick
         if req.tenant is None:
             self.slot_tenant[slot] = None
@@ -767,20 +997,30 @@ class VigServeEngine:
         if slot is None:
             return
         self.slot_tenant[slot] = None
-        if self._slot_state is not None:
-            self._slot_state = self._slot_state.reset_rows([slot])
-            self._refresh_tokens([slot])
+        if self._slot_states:
+            self._reset_rows_all([slot])
 
     # -- LRU state parking (DESIGN.md §10) ------------------------------
 
     def _park(self, tenant: Any, slot: int) -> None:
         """Copy an evicted tenant's state rows to host memory (bounded,
-        LRU-dropped) so a later re-admit restores them warm."""
-        if self.park_capacity <= 0 or self._slot_state is None:
+        LRU-dropped) so a later re-admit restores them warm. On the
+        multi-resolution lattice the parked copy holds the slot's rows
+        for **every** allocated N-bucket (``{size: rows}``) — a tenant
+        re-admitted after serving at two resolutions gets both carries
+        back; single-size engines park the bare rows (the pre-multires
+        layout the parking tests read)."""
+        if self.park_capacity <= 0 or not self._slot_states:
             return
-        rows = self._slot_state.take_rows([slot])
+        host = {
+            size: jax.tree_util.tree_map(
+                np.asarray, st.take_rows([slot])
+            )
+            for size, st in self._slot_states.items()
+        }
         self._parked.pop(tenant, None)  # re-insert = most recent
-        self._parked[tenant] = jax.tree_util.tree_map(np.asarray, rows)
+        self._parked[tenant] = (host if self._multi_size()
+                                else host[self.image_sizes[0]])
         while len(self._parked) > self.park_capacity:
             oldest = next(iter(self._parked))
             del self._parked[oldest]
@@ -821,15 +1061,24 @@ class VigServeEngine:
                     detail="parked rows unrecoverable; re-admitting cold",
                 ))
             return False
-        state = self._ensure_slot_state()
         from repro.core.state import DigcState
 
-        self._slot_state = DigcState(entries={
-            k: dataclasses.replace(
-                e.put_rows(host.entries[k], [slot]), step=e.step
-            )
-            for k, e in state.entries.items()
-        })
+        per_size = (host if self._multi_size()
+                    else {self.image_sizes[0]: host})
+        # N-buckets allocated since the park (no rows in the copy) must
+        # not keep the *previous* occupant's rows: reset first, then
+        # lay the parked copy over its own sizes.
+        for size, st in self._slot_states.items():
+            if size not in per_size:
+                self._slot_states[size] = st.reset_rows([slot])
+        for size, rows in per_size.items():
+            state = self._ensure_slot_state(size)
+            self._slot_states[size] = DigcState(entries={
+                k: dataclasses.replace(
+                    e.put_rows(rows.entries[k], [slot]), step=e.step
+                )
+                for k, e in state.entries.items()
+            })
         self.park_hits += 1
         self._refresh_tokens([slot])
         return True
@@ -843,46 +1092,64 @@ class VigServeEngine:
             return active
         return next(b for b in self.buckets if b >= active)
 
-    def _ensure_slot_state(self):
+    def _ensure_slot_state(self, size: Optional[int] = None):
         from repro.models.vig import init_vig_state
 
-        if self._slot_state is None:
+        size = self.image_sizes[0] if size is None else size
+        if size not in self._slot_states:
             # Allocate from the same impl choice the bucket programs
             # resolve: a user-provided VigSchedule may carry per-stage
             # specs (e.g. cluster with stage-specific n_clusters) whose
             # entry shapes differ from a stage-0-only resolution. The
             # autotuned (blocked-only) schedules never change entry
             # shapes, so the canonical state stays bucket-independent.
+            # Row buffers are sized by this N-bucket's stage plans
+            # (grid=) — a 448 cell's cached-graph rows are N=12544.
             choice = self.schedule if self._user_schedule else self.spec
-            self._slot_state = init_vig_state(
+            self._slot_states[size] = init_vig_state(
                 self.cfg, self.slots, choice, per_slot=True,
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
+                grid=size // self.cfg.patch,
             )
-        return self._slot_state
+        return self._slot_states[size]
 
-    def _choice_for(self, bucket: int):
-        """Resolve the bucket's DIGC impl through the degradation
-        ladder: at fallback level 0 this is the tuned per-bucket
+    def _choice_for(self, bucket: int, size: Optional[int] = None):
+        """Resolve the cell's DIGC impl through the degradation
+        ladder: at fallback level 0 this is the tuned per-cell
         choice; each descended rung swaps in the next tier of
         ``core.builder.fallback_chain`` (simpler machinery, never less
         exact)."""
         if self.fallback_level == 0:
-            return self._bucket_choice(bucket)
+            return self._bucket_choice(bucket, size)
         from repro.core.builder import degraded_spec, fallback_chain
 
         chain = fallback_chain(self._ladder_base_impl())
         return degraded_spec(self.spec, chain[self.fallback_level - 1])
 
-    def _build_program(self, bucket: int) -> Callable:
-        """Compile one bucket's donated forward. Split out so tests can
-        stub program construction and count compiles. Passes the
-        ``program.build`` fault site (injected compile failures)."""
+    def _build_program(self, bucket: int, size: Optional[int] = None,
+                       masked: bool = False) -> Callable:
+        """Compile one (B, N) cell's donated forward. Split out so
+        tests can stub program construction and count compiles. Passes
+        the ``program.build`` fault site (injected compile failures).
+        ``masked=True`` builds the pad-node variant: a fourth (B, N)
+        bool argument marks live nodes, BIG-norm-masked through DIGC
+        (exact-size cells keep the 3-argument program, so their trace
+        is byte-identical to the single-size engine's)."""
         from repro.models.vig import vig_forward
 
-        choice = self._choice_for(bucket)
+        size = self.image_sizes[0] if size is None else size
+        choice = self._choice_for(bucket, size)
         impl = (choice.spec_for(0).impl if hasattr(choice, "spec_for")
                 else choice.impl)
         self._fire("program.build", bucket=bucket, impl=impl)
+        if masked:
+            return jax.jit(
+                lambda p, im, st, mv: vig_forward(
+                    p, im, self.cfg, digc_impl=choice, state=st,
+                    valid_mask=mv,
+                ),
+                donate_argnums=(2,),
+            )
         return jax.jit(
             lambda p, im, st: vig_forward(
                 p, im, self.cfg, digc_impl=choice, state=st
@@ -890,15 +1157,29 @@ class VigServeEngine:
             donate_argnums=(2,),
         )
 
-    def _program_for(self, bucket: int) -> Callable:
-        """Bucket program lookup with recovery: a failing build is
+    def _program_for(self, bucket: int, size: Optional[int] = None,
+                     masked: bool = False) -> Callable:
+        """Cell program lookup with recovery: a failing build is
         retried (transient compile-service hiccups), and a
         persistently failing tier walks the degradation ladder until a
         rung builds — only an exhausted ladder re-raises."""
-        while bucket not in self._programs:
+        key = self._program_key(bucket, size, masked)
+        legacy = key == bucket  # single-size, unmasked: the 1-arg
+        # _build_program call the stubbing tests override
+        while key not in self._programs:
             try:
-                prog = self._retry(lambda: self._build_program(bucket),
-                                   f"bucket {bucket} program build")
+                if legacy:
+                    prog = self._retry(
+                        lambda: self._build_program(bucket),
+                        f"bucket {bucket} program build",
+                    )
+                else:
+                    prog = self._retry(
+                        lambda: self._build_program(
+                            bucket, size=size, masked=masked
+                        ),
+                        f"cell {key} program build",
+                    )
             except Exception as e:  # noqa: BLE001 — ladder boundary
                 info = (e.info if isinstance(e, FaultError) else FaultInfo(
                     kind="compile_failure", site="program.build",
@@ -910,11 +1191,11 @@ class VigServeEngine:
                 )):
                     raise
                 continue
-            self._programs[bucket] = prog
+            self._programs[key] = prog
             self.compile_count += 1
             if self.on_compile is not None:
-                self.on_compile(bucket)
-        return self._programs[bucket]
+                self.on_compile(key)
+        return self._programs[key]
 
     def _admit(self, tenant_key, used: set) -> Optional[int]:
         """Bind a new tenant to a slot: a free one, else LRU-evict an
@@ -941,16 +1222,21 @@ class VigServeEngine:
         if self._unpark(tenant_key, slot):
             self.last_restores.append(slot)
         else:
-            if self._slot_state is not None:
-                self._slot_state = self._slot_state.reset_rows([slot])
-                self._refresh_tokens([slot])
+            if self._slot_states:
+                self._reset_rows_all([slot])
             self.last_resets.append(slot)
         return slot
 
     def step(self) -> int:
         """One engine tick: admit queued requests into slots, serve the
         active slots padded to a bucket, scatter state back. Returns
-        the number of requests served."""
+        the number of requests served.
+
+        On the multi-resolution lattice a tick serves exactly ONE
+        (size, pad-variant) cell — the head-of-queue's. Requests
+        resolved to other cells stay queued (in order) for a later
+        tick: a compiled program has one static (B, N) shape, and
+        mixing cells in a tick would need a second program anyway."""
         if not self.queue:
             return 0
         if self.mode != "jit":
@@ -968,6 +1254,12 @@ class VigServeEngine:
         def _tkey(req):
             return req.tenant if req.tenant is not None else ("req", req.uid)
 
+        def _cell(req):
+            return (self._req_size(req), self._req_mask(req) is not None)
+
+        size, masked_cell = _cell(self.queue[0])
+        eligible = [r for r in self.queue if _cell(r) == (size, masked_cell)]
+
         # Admission pass 1 — tenants that already own a slot reserve it
         # first, so a new tenant admitted later in the same tick can
         # only LRU-evict *idle* slots, never a warm tenant that is
@@ -975,7 +1267,7 @@ class VigServeEngine:
         # warm state survives). One lane per tenant per tick: state is
         # a serial carry, a tenant's second request waits for the next
         # tick so it warm-starts from the first's output.
-        for req in self.queue:
+        for req in eligible:
             if len(assigned) >= self.slots:
                 break
             slot = self._tenant_slot.get(_tkey(req))
@@ -984,7 +1276,7 @@ class VigServeEngine:
                 assigned[id(req)] = slot
         # Admission pass 2 — new tenants, in arrival order, into free
         # slots first, else LRU-evicting an idle slot.
-        for req in self.queue:
+        for req in eligible:
             if len(assigned) >= self.slots:
                 break
             if id(req) in assigned:
@@ -997,19 +1289,19 @@ class VigServeEngine:
                 continue
             used.add(slot)
             assigned[id(req)] = slot
-        picked = [(assigned[id(r)], r) for r in self.queue
+        picked = [(assigned[id(r)], r) for r in eligible
                   if id(r) in assigned]
         self.queue = [r for r in self.queue if id(r) not in assigned]
         picked.sort(key=lambda sr: sr[0])
 
-        state = self._ensure_slot_state()
+        state = self._ensure_slot_state(size)
         # Fault site: unsanctioned state mutation (bit corruption that
         # bypassed put_rows/reset_rows). The replaced state is adopted
         # WITHOUT refreshing the integrity tokens — detecting exactly
         # this is what the tokens are for.
         mutated = self._fire("state.rows", value=state)
         if mutated is not state:
-            self._slot_state = state = mutated
+            self._slot_states[size] = state = mutated
 
         # Guarded screening (DESIGN.md §11): each picked lane passes
         # the admission finiteness screen and the state-row checks
@@ -1018,6 +1310,7 @@ class VigServeEngine:
         # are served exactly as if the faulty lane never existed.
         healthy: list[tuple[int, VigRequest]] = []
         imgs_list: list[np.ndarray] = []
+        masks_list: list[np.ndarray] = []
         # One batched device->host pull for all picked lanes' state
         # checks — the sync, not the crc/isfinite, is the guard cost
         # (the serve/guarded_* bench rows price exactly this).
@@ -1039,7 +1332,7 @@ class VigServeEngine:
                 ))
                 continue
             if self.guards:
-                if not self._row_finite(slot, finite):
+                if not self._row_finite(slot, finite, size):
                     # Non-finite state rows: the tenant's warm carry is
                     # poisoned — fail this request, cold-reset the slot.
                     self._quarantine(slot, req, FaultInfo(
@@ -1048,12 +1341,12 @@ class VigServeEngine:
                         detail=f"non-finite state rows on slot {slot}",
                     ))
                     continue
-                if not self._row_intact(slot, fps):
+                if not self._row_intact(slot, fps, size):
                     # Finite but token-mismatched rows (silent
                     # corruption): recover by serving this request
                     # COLD — reset, re-fingerprint, keep the lane.
-                    self._slot_state = self._slot_state.reset_rows([slot])
-                    state = self._slot_state
+                    state = state.reset_rows([slot])
+                    self._slot_states[size] = state
                     self.state_resets += 1
                     self.fault_log.append(FaultInfo(
                         kind="state_corruption", site="state.rows",
@@ -1062,13 +1355,27 @@ class VigServeEngine:
                                 f"{slot}; cold reset"),
                     ))
                     self.last_resets.append(slot)
-                    self._refresh_tokens([slot])
+                    self._refresh_tokens([slot], size)
+            if masked_cell and img.shape[0] < size:
+                # Zero-pad the ragged image up to its cell: the patch
+                # embed is stride-patch (node-local), so live patches
+                # see exactly their own pixels and pad patches are
+                # BIG-norm-masked out of every top-k downstream.
+                canvas = np.zeros((size, size, img.shape[-1]), np.float32)
+                canvas[:img.shape[0], :img.shape[1]] = img
+                img = canvas
             healthy.append((slot, req))
             imgs_list.append(img)
+            if masked_cell:
+                mask = self._req_mask(req)
+                n = (size // self.cfg.patch) ** 2
+                masks_list.append(np.ones(n, bool) if mask is None
+                                  else np.asarray(mask, bool))
 
         if not healthy:
             self.last_lanes = []
             self.last_bucket = None
+            self.last_cell = None
             return 0
 
         lanes = [slot for slot, _ in healthy]
@@ -1076,15 +1383,21 @@ class VigServeEngine:
         bucket = self.bucket_for(a)
         self.last_lanes = list(lanes)
         self.last_bucket = bucket
+        self.last_cell = (size, bucket)
         # Padding lanes replicate lane 0 (image AND state row): their
         # compute mirrors a live lane — well-conditioned, and warm
         # whenever lane 0 is, so they never force the mixed warm/cold
-        # path — and their outputs/state are simply dropped.
-        rows = lanes + [lanes[0]] * (bucket - a)
-        imgs = np.stack(imgs_list + [imgs_list[0]] * (bucket - a))
-        state = self._slot_state
+        # path — and their outputs/state are simply dropped. The tick
+        # width additionally rounds the bucket up to the next
+        # mesh_batch_axis multiple (same replication) when the rows are
+        # sharded — non-dividing buckets pad instead of failing.
+        width = self._tick_width(bucket)
+        rows = lanes + [lanes[0]] * (width - a)
+        imgs = np.stack(imgs_list + [imgs_list[0]] * (width - a))
+        state = self._slot_states[size]
         bucket_state = state.take_rows(rows)
-        fwd = self._program_for(bucket)
+        fwd = self._program_for(bucket, size, masked_cell)
+        pkey = self._program_key(bucket, size, masked_cell)
         # The timed serve section: dispatch + device compute + the
         # host sync that materializes the logits. A per-engine
         # deadline budget (deadline_ms) turns stragglers into counted
@@ -1092,16 +1405,25 @@ class VigServeEngine:
         # degradation ladder.
         t0 = time.perf_counter()
         self._fire("tick.serve", bucket=bucket)
-        logits, new_bucket_state = fwd(
-            self.params, jnp.asarray(imgs), bucket_state
-        )
+        if masked_cell:
+            masks = np.stack(
+                masks_list + [masks_list[0]] * (width - a)
+            )
+            logits, new_bucket_state = fwd(
+                self.params, jnp.asarray(imgs), bucket_state,
+                jnp.asarray(masks),
+            )
+        else:
+            logits, new_bucket_state = fwd(
+                self.params, jnp.asarray(imgs), bucket_state
+            )
         # Scatter live lanes only: src rows >= a (padding) are dropped.
-        self._slot_state = state.put_rows(new_bucket_state, lanes)
+        self._slot_states[size] = state.put_rows(new_bucket_state, lanes)
         logits_np = np.asarray(logits)  # host sync closes the region
-        self._graph_stats_update(state, self._slot_state, lanes)
+        self._graph_stats_update(state, self._slot_states[size], lanes)
         elapsed_ms = (time.perf_counter() - t0) * 1e3
-        first_tick = bucket not in self._program_ticks
-        self._program_ticks[bucket] = self._program_ticks.get(bucket, 0) + 1
+        first_tick = pkey not in self._program_ticks
+        self._program_ticks[pkey] = self._program_ticks.get(pkey, 0) + 1
         if self.deadline_ms is not None and not first_tick:
             # A bucket program's first served tick includes its jit
             # compile — never a deadline signal.
@@ -1123,7 +1445,7 @@ class VigServeEngine:
                     ))
             else:
                 self._consecutive_misses = 0
-        self._refresh_tokens(lanes)
+        self._refresh_tokens(lanes, size)
         for i, (slot, req) in enumerate(healthy):
             req.logits = logits_np[i]
             req.done = True
@@ -1136,6 +1458,8 @@ class VigServeEngine:
                 self._tenant_slot.pop(("req", req.uid), None)
         self.requests_served += a
         self.bucket_ticks[bucket] = self.bucket_ticks.get(bucket, 0) + 1
+        cell = (size, bucket)
+        self.cell_ticks[cell] = self.cell_ticks.get(cell, 0) + 1
         return a
 
     def run(self) -> list[VigRequest]:
@@ -1155,19 +1479,26 @@ class VigServeEngine:
         (the direct fixed-batch path)."""
         return {b: c[1].steps() for b, c in self._compiled.items()}
 
-    def slot_row_steps(self) -> dict:
+    def slot_row_steps(self, size: Optional[int] = None) -> dict:
         """Per-slot request counters of the canonical multi-tenant
-        state (empty before the first tick)."""
-        if self._slot_state is None:
+        state (empty before the first tick). ``size`` selects an
+        N-bucket on the lattice; default is the primary size."""
+        st = self._slot_states.get(
+            self.image_sizes[0] if size is None else size
+        )
+        if st is None:
             return {}
-        return self._slot_state.row_steps()
+        return st.row_steps()
 
     def stats(self) -> dict:
         out = {"requests_served": self.requests_served, "mode": self.mode,
                "digc_cache": self.cache.stats(),
                "digc_state": self.state_steps(),
                "buckets": self.buckets,
+               "image_sizes": self.image_sizes,
                "bucket_ticks": dict(self.bucket_ticks),
+               "cell_ticks": {f"{s}x{b}": n
+                              for (s, b), n in self.cell_ticks.items()},
                "compiled_programs": self.compile_count,
                "slot_tenants": list(self.slot_tenant),
                "slot_row_steps": self.slot_row_steps(),
