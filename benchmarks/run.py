@@ -43,11 +43,11 @@ SMOKE_ARGS = {
 
 
 # Rows the regression gate watches: the guard-overhead ratio and every
-# stale-graph and multi-resolution warm row (absolute us and speedup
-# ratios alike).
+# stale-graph, multi-resolution and admission-scheduler warm row
+# (absolute us and speedup ratios alike).
 _REGRESS_RE = re.compile(
     r"^serve/(guarded_overhead_warm$"
-    r"|(stale|multires)(_.*)?(_warm_us|_warm)$)"
+    r"|(stale|multires|sched)(_.*)?(_warm_us|_warm)$)"
 )
 _REGRESS_RATIO = 1.15
 
@@ -113,7 +113,8 @@ def main() -> None:
                     help="output JSON path ('' disables)")
     ap.add_argument("--check-regress", action="store_true",
                     help="fail if serve/guarded_overhead_warm or any "
-                         "serve/stale_* warm row regresses >"
+                         "serve/{stale,multires,sched}_* warm row "
+                         "regresses >"
                          f"{_REGRESS_RATIO}x vs the committed "
                          "BENCH_digc.json (same-workload rows only)")
     args = ap.parse_args()

@@ -250,6 +250,26 @@ def entry_row_finite(entry: DigcStateEntry, row: int) -> bool:
     return True
 
 
+def prefetch_park_rows(host_rows):
+    """Start the host->device upload of parked rows ahead of the tick
+    that binds them (prefetched parking restore, DESIGN.md §14).
+
+    ``host_rows`` is what ``VigServeEngine._park`` stored: a
+    ``DigcState`` of single-row entries with numpy leaves (or a
+    ``{size: DigcState}`` dict on the multi-resolution lattice). The
+    structure is preserved exactly — only the numpy leaves move to
+    device via ``jax.device_put`` (asynchronous on real accelerator
+    backends), so ``put_rows``'s ``jnp.asarray`` at bind time finds the
+    transfer already done (or in flight) instead of paying it on the
+    tick's critical path. Purely a placement change: the device values
+    are bit-identical to a bind-time upload, and the engine's §11
+    integrity screens still run against whatever rows end up bound."""
+    return jax.tree_util.tree_map(
+        lambda v: jax.device_put(v) if isinstance(v, np.ndarray) else v,
+        host_rows,
+    )
+
+
 def state_entry(
     *,
     centroids_shape: Optional[tuple[int, ...]] = None,

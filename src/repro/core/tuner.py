@@ -26,12 +26,19 @@ kernel-vs-engine is a measured per-workload choice, not a code path:
 The tuner never changes *what* is computed — only the engine schedule.
 Approximate merges (``packed``) are excluded unless ``allow_approx``.
 
-The JSON cache is **host-keyed** (schema 2): entries nest under
+The JSON cache is **host-keyed** (schema 3): entries nest under
 ``host_key()`` = backend + platform + jax version, so a schedule tuned
 on one machine is never silently reused on another — a laptop's
-block_n=512 is not a v5e's. Schema-1 files (flat, backend-only keys)
-are not migrated automatically: their entries cannot be attributed to
-a host, so they are dropped on load and re-measured.
+block_n=512 is not a v5e's. Each host slot holds two stores:
+``"schedules"`` (the tile measurements above, keyed by
+``workload_key``) and ``"bucket_sets"`` (the serving engine's
+arrival-histogram bucket-set choices, keyed by ``bucket_set_key`` —
+see ``optimal_bucket_set``/``tune_bucket_set``, DESIGN.md §14).
+Schema-2 files (hosts mapping straight to schedule entries) migrate
+losslessly on load — the measurements stay valid, only the nesting
+moved. Schema-1 files (flat, backend-only keys) are not migrated:
+their entries cannot be attributed to a host, so they are dropped on
+load and re-measured.
 
 ``VigSchedule`` maps pyramid stages to tuned specs:
 ``DigcTuner.tune_schedule`` tunes each stage's (N, M, D, kd) workload
@@ -43,6 +50,7 @@ different tiles.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import platform
 import time
@@ -169,6 +177,81 @@ def workload_key(
     return key
 
 
+def bucket_set_key(slots: int, sizes, max_programs: int) -> str:
+    """Identity of one serving shape for bucket-set persistence: the
+    slot count, the configured N-bucket image sizes, and the
+    compile-count cap. Unlike schedules (measurements of a machine), a
+    bucket set is a property of the *arrival trace* — but it is stored
+    under the host key anyway, because the trace that produced it was
+    served on this host and another machine's replica should re-profile
+    its own traffic."""
+    return (
+        f"slots{int(slots)}:cap{int(max_programs)}:sizes"
+        + "-".join(str(int(s)) for s in sorted(sizes))
+    )
+
+
+def optimal_bucket_set(
+    hist, *, slots: int, max_programs: int = 4, costs=None,
+) -> tuple[int, ...]:
+    """The (B, N) bucket set minimizing expected padded-lane work under
+    a compile-count cap (DESIGN.md §14).
+
+    ``hist`` is a serving engine's live-lane histogram — ``{size:
+    {live: ticks}}``, or a flat ``{live: ticks}`` for single-size
+    traffic: how many ticks served exactly ``live`` lanes at each
+    N-bucket. Under bucket set S, a tick at ``live`` lanes pays
+    ``min(b in S : b >= live)`` lanes of compute (padding lanes run the
+    full forward), weighted by ``costs[size]`` (per-lane work, e.g. the
+    patch count N; default 1). The optimizer minimizes
+
+        sum_{size, live} hist[size][live] * bucket_S(live) * cost[size]
+
+    by brute force over subsets of the *observed* live counts — an
+    optimal bucket boundary always sits on an observed count, so the
+    candidate pool is tiny (at most ``slots`` values) — of at most
+    ``max_programs`` buckets, always including ``slots`` so every
+    admissible tick fits. Ties break deterministically: least work,
+    then fewest buckets, then lexicographically smallest — a fixed
+    trace always selects the same set. An empty histogram returns
+    ``(slots,)``."""
+    slots = int(slots)
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    if int(max_programs) < 1:
+        raise ValueError(f"max_programs must be >= 1, got {max_programs}")
+    if hist and not isinstance(next(iter(hist.values())), dict):
+        hist = {None: hist}
+    weights: dict[tuple, float] = {}
+    for size, per in (hist or {}).items():
+        cost = 1.0 if costs is None else float(costs.get(size, 1.0))
+        for live, ticks in per.items():
+            live = int(live)
+            if not 1 <= live <= slots:
+                raise ValueError(
+                    f"histogram live-lane count {live} outside "
+                    f"1..slots={slots}"
+                )
+            weights[(size, live)] = (
+                weights.get((size, live), 0.0) + float(ticks) * cost
+            )
+    if not weights:
+        return (slots,)
+    pool = sorted({live for _, live in weights if live < slots})
+    best = None
+    for r in range(min(int(max_programs) - 1, len(pool)) + 1):
+        for extra in itertools.combinations(pool, r):
+            cand = tuple(sorted(set(extra) | {slots}))
+            work = sum(
+                w * min(b for b in cand if b >= live)
+                for (_, live), w in weights.items()
+            )
+            key = (work, len(cand), cand)
+            if best is None or key < best:
+                best = key
+    return best[2]
+
+
 class DigcTuner:
     """Prior-ranked, measurement-refined, JSON-persisted tile tuner."""
 
@@ -188,17 +271,34 @@ class DigcTuner:
         self.measure_iters = measure_iters
         self.max_measure = max_measure
         # Full file contents (all hosts) are preserved on save; only
-        # this host's entries are ever *read*.
+        # this host's entries are ever *read*. Schema 3 nests each
+        # host's stores by kind: {"schedules": {workload key: tile},
+        # "bucket_sets": {serving-shape key: bucket set}}.
         self._hosts: dict[str, dict] = {}
         if self.path is not None and self.path.exists():
             data = json.loads(self.path.read_text())
-            if data.get("schema") == 2:
+            if data.get("schema") == 3:
                 self._hosts = {
-                    h: dict(e) for h, e in data.get("hosts", {}).items()
+                    h: {"schedules": dict(v.get("schedules", {})),
+                        "bucket_sets": dict(v.get("bucket_sets", {}))}
+                    for h, v in data.get("hosts", {}).items()
+                }
+            elif data.get("schema") == 2:
+                # schema-2 migration: hosts mapped straight to their
+                # schedule entries. The measurements stay valid — only
+                # the nesting moved — so lift them under "schedules"
+                # and start each host with an empty bucket-set store.
+                self._hosts = {
+                    h: {"schedules": dict(e), "bucket_sets": {}}
+                    for h, e in data.get("hosts", {}).items()
                 }
             # schema 1: flat backend-keyed entries with no platform/jax
             # identity — unattributable, so dropped (re-measured here).
-        self.entries: dict[str, dict] = self._hosts.setdefault(self.host, {})
+        _slot = self._hosts.setdefault(
+            self.host, {"schedules": {}, "bucket_sets": {}}
+        )
+        self.entries: dict[str, dict] = _slot["schedules"]
+        self.bucket_sets: dict[str, dict] = _slot["bucket_sets"]
 
     # -- candidate generation -------------------------------------------
 
@@ -269,9 +369,52 @@ class DigcTuner:
         if self.path is None:
             return
         self.path.write_text(json.dumps(
-            {"schema": 2, "hosts": self._hosts},
+            {"schema": 3, "hosts": self._hosts},
             indent=2, sort_keys=True,
         ) + "\n")
+
+    def lookup_bucket_set(
+        self, *, slots: int, sizes, max_programs: int = 4,
+    ) -> Optional[tuple[int, ...]]:
+        """The persisted bucket set for one serving shape, or None."""
+        e = self.bucket_sets.get(bucket_set_key(slots, sizes, max_programs))
+        if e is None:
+            return None
+        return tuple(int(b) for b in e["buckets"])
+
+    def tune_bucket_set(
+        self, hist, *, slots: int, max_programs: int = 4, costs=None,
+        sizes=None, force: bool = False,
+    ) -> tuple[int, ...]:
+        """Persisted ``optimal_bucket_set``: derive the bucket set from
+        an arrival histogram and cache it per host + serving shape,
+        exactly like tuned schedules — a later engine constructed with
+        ``buckets="auto"`` and the same tuner path starts on it without
+        re-profiling. ``sizes`` pins the shape key (default: the
+        histogram's own size keys); the histogram itself is recorded in
+        the entry so a cached choice stays auditable."""
+        if hist and not isinstance(next(iter(hist.values())), dict):
+            hist = {None: hist}
+        if sizes is None:
+            sizes = sorted(s for s in (hist or {}) if s is not None)
+        key = bucket_set_key(slots, sizes, max_programs)
+        if not force:
+            e = self.bucket_sets.get(key)
+            if e is not None:
+                return tuple(int(b) for b in e["buckets"])
+        buckets = optimal_bucket_set(
+            hist, slots=slots, max_programs=max_programs, costs=costs
+        )
+        self.bucket_sets[key] = {
+            "buckets": list(buckets),
+            "hist": {
+                f"{'any' if s is None else s}:{live}": int(t)
+                for s, per in (hist or {}).items()
+                for live, t in sorted(per.items())
+            },
+        }
+        self.save()
+        return buckets
 
     # -- tuning ---------------------------------------------------------
 

@@ -184,11 +184,24 @@ def _downsample(x: jax.Array, grid: int, w: jax.Array) -> jax.Array:
 
 
 def _dilation_for(cfg: VigConfig, global_block: int, m: int,
-                  k: Optional[int] = None) -> int:
+                  k: Optional[int] = None, *,
+                  grid: Optional[int] = None,
+                  base_grid: Optional[int] = None) -> int:
     if not cfg.use_dilation:
         return 1
     k = cfg.k if k is None else k
-    d = min(global_block // 4 + 1, cfg.max_dilation)
+    d = global_block // 4 + 1
+    cap = cfg.max_dilation
+    if grid is not None and base_grid is not None:
+        # Per-cell dilation schedule (DESIGN.md §13/§14): the stride
+        # AND its cap ride the same resolution ramp as k, so a
+        # high-resolution cell's dilated blocks keep the same
+        # *relative* reach across the denser grid; at or below the
+        # native grid both scalers return their inputs, so native
+        # plans are untouched.
+        d = _resolution_dilation(d, grid, base_grid)
+        cap = _resolution_dilation(cap, grid, base_grid)
+    d = min(d, cap)
     while k * d > m and d > 1:
         d -= 1
     return d
@@ -206,6 +219,21 @@ def _resolution_k(k: int, grid: int, base_grid: int) -> int:
         return k
     frac = min(1.0, (grid - base_grid) / base_grid)
     return int(round(k * (1.0 + frac)))
+
+
+def _resolution_dilation(d: int, grid: int, base_grid: int) -> int:
+    """The resolution-scaled dilation stride, mirroring
+    ``_resolution_k``: d at the model's native grid, ramping linearly
+    to 2d at twice the native grid, clamped to [d, 2d]. A dilated
+    block's receptive reach is ~k*d node strides — on a denser grid the
+    same stride covers a smaller fraction of the image, so the stride
+    widens with resolution exactly as the neighbor count does (the
+    PVG-DET ramp applied to the dilation schedule). Grids at or below
+    native return ``d`` unchanged — native plans stay byte-identical."""
+    if grid <= base_grid:
+        return d
+    frac = min(1.0, (grid - base_grid) / base_grid)
+    return int(round(d * (1.0 + frac)))
 
 
 def _pos_for_grid(pos: jax.Array, base_grid: int, grid: int) -> jax.Array:
@@ -258,13 +286,18 @@ class StagePlan:
 
 
 def _block_geometry(cfg: VigConfig, gb: int, m: int,
-                    k: Optional[int] = None) -> tuple[int, int]:
+                    k: Optional[int] = None, *,
+                    grid: Optional[int] = None,
+                    base_grid: Optional[int] = None) -> tuple[int, int]:
     """(dilation, k_eff) for global block ``gb`` against ``m`` co-nodes
     — the single source of the k/dilation clamps the old layer loop
     applied inline. ``k`` overrides cfg.k (the resolution-scaled
-    schedule feeds the stage's scaled k here)."""
+    schedule feeds the stage's scaled k here); ``grid``/``base_grid``
+    additionally scale the dilation schedule for off-native cells
+    (``_resolution_dilation``), with the same m-feasibility clamps
+    applied *after* scaling."""
     k = cfg.k if k is None else k
-    dil = _dilation_for(cfg, gb, m, k)
+    dil = _dilation_for(cfg, gb, m, k, grid=grid, base_grid=base_grid)
     k_eff = min(k, m // max(dil, 1)) or 1
     if k_eff * dil > m:
         dil = 1
@@ -279,9 +312,10 @@ def vig_stage_plans(cfg: VigConfig,
 
     ``grid`` is the serving patch grid (default: the config's native
     ``base_grid``) — the resolution-parametric hook: stage grids, m,
-    the per-block (dilation, k_eff) clamps and the resolution-scaled k
-    schedule (``_resolution_k``) all derive from it, so one config
-    serves any square input whose grid passes the divisibility screen.
+    the per-block (dilation, k_eff) clamps and the resolution-scaled
+    k and dilation schedules (``_resolution_k`` /
+    ``_resolution_dilation``) all derive from it, so one config serves
+    any square input whose grid passes the divisibility screen.
 
     Raises ``VigGridError`` at config time (here, not mid-forward) when
     a stage's grid is not divisible by its reduce ratio or, for any
@@ -314,7 +348,9 @@ def vig_stage_plans(cfg: VigConfig,
         spec = spec.replace(k=k_s)
         m = (grid // max(r, 1)) ** 2
         geo = tuple(
-            _block_geometry(cfg, gb + bi, m, k_s) for bi in range(depth)
+            _block_geometry(cfg, gb + bi, m, k_s, grid=grid,
+                            base_grid=cfg.grid_at_stage(si))
+            for bi in range(depth)
         )
         plans.append(StagePlan(
             index=si, depth=depth, grid=grid, r=r, m=m, spec=spec,

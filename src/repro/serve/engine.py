@@ -208,6 +208,11 @@ class VigRequest:
     ``logits=None`` and the detected fault in ``fault`` (DESIGN.md
     §11) — failure is a typed per-request outcome, never an engine
     crash.
+
+    ``tclass`` names the request's tenant *class* — the key into the
+    engine's per-class ``slo_ms`` dict when the SLO-bounded admission
+    queue is armed (DESIGN.md §14). With a scalar ``slo_ms`` (or the
+    default synchronous engine) the class is inert.
     """
 
     uid: int
@@ -216,6 +221,7 @@ class VigRequest:
     logits: Optional[np.ndarray] = None
     done: bool = False
     fault: Optional[FaultInfo] = None
+    tclass: str = "default"
 
 
 DEFAULT_BUCKETS = (1, 2, 4, 8)
@@ -283,6 +289,23 @@ class VigServeEngine:
     explicit disconnect) still drops state entirely, and
     ``park_capacity=0`` restores the PR-4 evict-means-cold behavior.
 
+    **SLO-bounded admission scheduling** (``slo_ms``/``clock``/
+    ``prefetch``/``bucket_cap``, DESIGN.md §14): a positive ``slo_ms``
+    (scalar, or per tenant class via ``{class: ms}`` keyed by
+    ``VigRequest.tclass``) arms the async admission queue — a tick
+    dispatches a (size, masked) cell only when its earliest member
+    deadline arrives or it holds a full slot width of tenants, so
+    singleton arrivals coalesce into well-filled ticks instead of each
+    padding up to a bucket. ``clock`` injects a deterministic time
+    source (``serve.sched.VirtualClock``); ``buckets="auto"`` resolves
+    the bucket set from the host tuner cache (the arrival-histogram
+    optimizer — ``retune_buckets()`` re-derives and persists it from
+    the live-lane histogram a served trace accumulated, capped at
+    ``bucket_cap`` programs); ``prefetch`` lets the queue issue parked
+    tenants' host->device row uploads ahead of their admitting tick.
+    ``slo_ms=0`` (the default) is the legacy synchronous engine,
+    byte-for-byte.
+
     **Fault tolerance** (``guards``/``fault_plan``/``deadline_ms``,
     DESIGN.md §11): every picked lane passes an admission finiteness
     screen and per-row state checks (integrity fingerprints + state
@@ -336,7 +359,9 @@ class VigServeEngine:
                  fault_plan=None, guards: bool = True,
                  deadline_ms: Optional[float] = None,
                  deadline_strikes: int = 2,
-                 retry_attempts: int = 3, retry_backoff: float = 0.02):
+                 retry_attempts: int = 3, retry_backoff: float = 0.02,
+                 slo_ms=0.0, clock: Optional[Callable[[], float]] = None,
+                 prefetch: bool = True, bucket_cap: int = 4):
         from repro.core.builder import get_builder
         from repro.core.engine import DigcCache
         from repro.models.vig import resolve_digc_spec, vig_stage_plans
@@ -345,7 +370,15 @@ class VigServeEngine:
 
         if mode not in ("jit", "eager"):
             raise ValueError(f"mode must be 'jit' or 'eager', got {mode!r}")
-        if buckets is not None:
+        # buckets="auto" defers the choice to the host tuner cache (the
+        # arrival-histogram bucket-set optimizer, DESIGN.md §14); it is
+        # materialized below, after image_sizes resolve, so the lookup
+        # can key on the full serving shape.
+        self._auto_buckets = isinstance(buckets, str)
+        if self._auto_buckets and buckets != "auto":
+            raise ValueError(
+                f"buckets must be a tuple, None, or 'auto': {buckets!r}")
+        if buckets is not None and not self._auto_buckets:
             buckets = tuple(sorted(set(int(b) for b in buckets)))
             if not buckets or buckets[0] < 1:
                 raise ValueError(f"buckets must be positive ints: {buckets!r}")
@@ -381,6 +414,9 @@ class VigServeEngine:
                 )
             vig_stage_plans(cfg, grid=s // cfg.patch)  # VigGridError here
         self.image_sizes = sizes
+        self.bucket_cap = int(bucket_cap)
+        if self._auto_buckets:
+            buckets = self._auto_bucket_set(batch, tuner_path)
         # -- sharded mode (DESIGN.md §10): thread the mesh into the
         # construction spec, so every bucket program and the slot state
         # allocation see the same placement. mesh_axis names the
@@ -484,6 +520,38 @@ class VigServeEngine:
         self._parked: "dict[Any, Any]" = {}  # tenant -> host DigcState rows
         self.park_hits = 0
         self.park_evictions = 0
+        # -- SLO-bounded async admission (DESIGN.md §14) ----------------
+        # A positive slo (scalar ms, or {tenant class: ms}) arms the
+        # scheduler: submit() only enqueues, and a tick dispatches a
+        # (size, masked) cell when its earliest member deadline arrives
+        # or it can fill the full slot width — coalescing singleton
+        # arrivals into well-filled ticks instead of padding them up.
+        # slo_ms=0 (the default) keeps the legacy bind-on-next-tick
+        # admission byte-for-byte: _select_cell short-circuits to the
+        # head-of-queue cell and nothing else in the tick changes.
+        self._slo_ms = (dict(slo_ms) if isinstance(slo_ms, dict)
+                        else float(slo_ms))
+        _slo_vals = (self._slo_ms.values()
+                     if isinstance(self._slo_ms, dict) else [self._slo_ms])
+        if any(float(v) < 0 for v in _slo_vals):
+            raise ValueError(f"slo_ms must be >= 0: {slo_ms!r}")
+        self._sched_active = any(float(v) > 0 for v in _slo_vals)
+        self._clock = clock  # None = wall time; a VirtualClock in tests
+        self._enq_seq = 0  # submit-order stamp (per-tenant FIFO anchor)
+        self._next_deadline: Optional[float] = None
+        self.deferrals = 0  # ticks that waited instead of dispatching
+        # padding-waste accounting (stats(); feeds the bucket-set
+        # optimizer): padded_lanes == sum over ticks of (width - live).
+        self.live_lanes = 0
+        self.padded_lanes = 0
+        self.lane_hist: dict[tuple, int] = {}  # (size, live) -> ticks
+        # -- prefetched parking restore (DESIGN.md §14): the queue
+        # names who the next tick admits, so parked tenants' host rows
+        # start their host->device upload ahead of the admitting tick.
+        self._prefetch = bool(prefetch)
+        self._park_prefetch: dict[Any, tuple] = {}  # tenant -> (host, dev)
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
         # last-tick observability (asserted by the property tests)
         self.last_lanes: list[int] = []
         self.last_resets: list[int] = []
@@ -580,6 +648,198 @@ class VigServeEngine:
         for size, st in self._slot_states.items():
             self._slot_states[size] = st.reset_rows(list(slots))
         self._refresh_tokens(slots)
+
+    # -- SLO-bounded admission scheduling (DESIGN.md §14) ---------------
+
+    def _now(self) -> float:
+        """Scheduler time: the injected clock (a ``VirtualClock`` or
+        any zero-arg callable) or wall ``time.monotonic``."""
+        if self._clock is None:
+            return time.monotonic()
+        now = getattr(self._clock, "now", None)
+        return now() if now is not None else self._clock()
+
+    def _slo_s(self, req) -> float:
+        """The request's admission budget in seconds: its tenant
+        class's entry in the slo_ms dict (falling back to "default",
+        then 0 = dispatch-now), or the scalar slo."""
+        if isinstance(self._slo_ms, dict):
+            ms = self._slo_ms.get(req.tclass, self._slo_ms.get("default", 0.0))
+        else:
+            ms = self._slo_ms
+        return float(ms) / 1e3
+
+    def _tkey(self, req):
+        """Slot-identity of a request: its tenant, or a unique one-shot
+        key for anonymous requests."""
+        return req.tenant if req.tenant is not None else ("req", req.uid)
+
+    def _cell_of(self, req) -> tuple:
+        """The (size, masked) lattice cell a request resolved to."""
+        return (self._req_size(req), self._req_mask(req) is not None)
+
+    def _enqueue(self, req: VigRequest) -> None:
+        """Admit a validated request to the queue, stamped with its
+        arrival time and submit order (the deadline and FIFO anchors),
+        and give the parking prefetcher a look at the new queue."""
+        req._enq_t = self._now()
+        req._enq_seq = self._enq_seq
+        self._enq_seq += 1
+        self.queue.append(req)
+        self._prefetch_parked()
+
+    def _select_cell(self, peek: bool = False):
+        """Choose the (size, masked) cell the next tick serves and its
+        eligible requests, or defer.
+
+        Legacy (``slo_ms=0``): the head-of-queue's cell and every
+        queued request that resolved to it — the bind-on-next-tick
+        admission, unchanged byte-for-byte.
+
+        Scheduler (any positive slo): each request carries a deadline
+        (arrival + its class budget); a tenant's *effective* deadline
+        is the min over all its queued requests, attributed to its
+        head request (a tight-slo request queued behind a lax one
+        pulls the head forward — FIFO never starves a deadline). A
+        cell is **ripe** when its earliest member deadline has arrived
+        or it holds a full slot width of distinct tenants; the ripe
+        cell with the earliest (deadline, arrival) dispatches, and
+        only tenant *head* requests are eligible, so per-tenant FIFO
+        holds even across cells. With no ripe cell the tick defers:
+        ``_next_deadline`` records when the earliest cell ripens
+        (``run()`` advances the clock to it — a VirtualClock jumps,
+        the wall clock sleeps).
+
+        ``peek=True`` never defers — it returns the cell that WILL
+        dispatch at the next deadline, which is what the parking
+        prefetcher keys its uploads on."""
+        if not self.queue:
+            return None, None
+        if not self._sched_active:
+            cell = self._cell_of(self.queue[0])
+            return cell, [r for r in self.queue if self._cell_of(r) == cell]
+        heads: dict[Any, VigRequest] = {}
+        eff: dict[Any, float] = {}
+        for r in self.queue:
+            tk = self._tkey(r)
+            heads.setdefault(tk, r)
+            dl = r._enq_t + self._slo_s(r)
+            eff[tk] = min(eff.get(tk, dl), dl)
+        cells: dict[tuple, list] = {}  # cell -> [deadline, tenants, seq]
+        for tk, head in heads.items():
+            info = cells.setdefault(self._cell_of(head),
+                                    [float("inf"), 0, head._enq_seq])
+            info[0] = min(info[0], eff[tk])
+            info[1] += 1
+            info[2] = min(info[2], head._enq_seq)
+        now = self._now()
+        ripe = [c for c, (dl, nt, _) in cells.items()
+                if now >= dl - 1e-9 or nt >= self.slots]
+        if not ripe:
+            if not peek:
+                self._next_deadline = min(i[0] for i in cells.values())
+                return None, None
+            ripe = list(cells)
+        cell = min(ripe, key=lambda c: (cells[c][0], cells[c][2]))
+        head_ids = {id(r) for r in heads.values()}
+        eligible = [r for r in self.queue
+                    if id(r) in head_ids and self._cell_of(r) == cell]
+        if not peek:
+            self._next_deadline = None
+        return cell, eligible
+
+    def next_deadline(self) -> Optional[float]:
+        """The earliest admission deadline among queued requests, or
+        None (empty queue, or scheduler not armed). A serving loop
+        wakes at this time even with no new arrivals — replaying a
+        trace, ``serve.sched.replay`` advances the clock here between
+        arrivals so no queued cell overshoots its SLO."""
+        if not self._sched_active or not self.queue:
+            return None
+        return min(r._enq_t + self._slo_s(r) for r in self.queue)
+
+    def _advance_to_deadline(self) -> None:
+        """Move time to the next admission deadline after a deferred
+        tick: a clock with ``advance_to`` (VirtualClock) jumps —
+        deterministic tests/benches; the wall clock sleeps the
+        remainder."""
+        target = self._next_deadline
+        if target is None:
+            return
+        adv = getattr(self._clock, "advance_to", None)
+        if adv is not None:
+            adv(target)
+            return
+        delta = target - self._now()
+        if delta > 0:
+            time.sleep(min(delta, 60.0))
+
+    def _prefetch_parked(self) -> None:
+        """Issue the next tick's parking restores ahead of time: the
+        admission queue names who the next tick admits, so a parked,
+        unslotted tenant among the predicted admits starts its
+        host->device row upload (``prefetch_park_rows``) now, off the
+        admitting tick's critical path. Purely a placement hint —
+        ``_unpark`` still passes the ``park.restore`` fault site and
+        the §11 bind-time integrity screens, and consumes the device
+        copy only when the restored host object is the very one the
+        upload was issued from."""
+        if not self._prefetch or not self._parked or not self.queue:
+            return
+        from repro.core.state import prefetch_park_rows
+
+        _, eligible = self._select_cell(peek=True)
+        for req in (eligible or [])[: self.slots]:
+            tk = self._tkey(req)
+            if (tk in self._parked and tk not in self._tenant_slot
+                    and tk not in self._park_prefetch):
+                host = self._parked[tk]
+                self._park_prefetch[tk] = (host, prefetch_park_rows(host))
+                self.prefetch_issued += 1
+
+    def retune_buckets(self, max_programs: Optional[int] = None,
+                       force: bool = True) -> tuple:
+        """Re-derive the bucket set from the live-lane histogram this
+        engine's served trace accumulated (``lane_hist``), via the
+        arrival-histogram optimizer in ``core.tuner`` — persisted per
+        host in the tuner cache exactly like ``VigSchedule``s, so the
+        next engine constructed with ``buckets="auto"`` and the same
+        tuner path starts on the optimized set. Takes effect live:
+        programs for dropped buckets stay compiled but ``bucket_for``
+        never picks them again; new buckets compile lazily on first
+        use."""
+        from repro.core.tuner import DigcTuner, optimal_bucket_set
+
+        hist: dict[int, dict[int, int]] = {}
+        for (sz, live), ticks in self.lane_hist.items():
+            per = hist.setdefault(sz, {})
+            per[live] = per.get(live, 0) + ticks
+        cap = self.bucket_cap if max_programs is None else int(max_programs)
+        costs = {s: (s // self.cfg.patch) ** 2 for s in self.image_sizes}
+        if self.tuner_path is not None:
+            new = DigcTuner(self.tuner_path).tune_bucket_set(
+                hist, slots=self.slots, max_programs=cap, costs=costs,
+                sizes=self.image_sizes, force=force)
+        else:
+            new = optimal_bucket_set(hist, slots=self.slots,
+                                     max_programs=cap, costs=costs)
+        self.buckets = new
+        return new
+
+    def _auto_bucket_set(self, slots: int, tuner_path) -> tuple:
+        """Materialize ``buckets="auto"``: the host-persisted bucket
+        set for this (slots, sizes, cap) serving shape when the tuner
+        cache holds one (a previous trace's ``retune_buckets``), else
+        the default ladder capped at ``slots``."""
+        if tuner_path is not None:
+            from repro.core.tuner import DigcTuner
+
+            found = DigcTuner(tuner_path).lookup_bucket_set(
+                slots=slots, sizes=self.image_sizes,
+                max_programs=self.bucket_cap)
+            if found is not None:
+                return found
+        return tuple(b for b in DEFAULT_BUCKETS if b < slots) + (slots,)
 
     # -- tuning ---------------------------------------------------------
 
@@ -761,7 +1021,7 @@ class VigServeEngine:
         # DIGC BIG-norm-masks the pad nodes out of every top-k.
         if h in self.image_sizes:
             req._serve_size, req._serve_mask = h, None
-            self.queue.append(req)
+            self._enqueue(req)
             return
         if not self._lattice:
             want = (self.cfg.image_size, self.cfg.image_size,
@@ -790,7 +1050,7 @@ class VigServeEngine:
         mask2d = np.zeros((g, g), bool)
         mask2d[:g0, :g0] = True
         req._serve_size, req._serve_mask = size, mask2d.reshape(-1)
-        self.queue.append(req)
+        self._enqueue(req)
 
     def _check_pad_capable(self, req, h: int) -> None:
         """Typed submit-time screen for the padded (masked) path: pad
@@ -993,6 +1253,7 @@ class VigServeEngine:
         tenant's parked copy (if any) is dropped too — disconnect means
         gone, unlike an LRU eviction (which parks)."""
         self._parked.pop(tenant, None)
+        self._park_prefetch.pop(tenant, None)
         slot = self._tenant_slot.pop(tenant, None)
         if slot is None:
             return
@@ -1019,11 +1280,14 @@ class VigServeEngine:
             for size, st in self._slot_states.items()
         }
         self._parked.pop(tenant, None)  # re-insert = most recent
+        # a fresh park supersedes any in-flight prefetch of older rows
+        self._park_prefetch.pop(tenant, None)
         self._parked[tenant] = (host if self._multi_size()
                                 else host[self.image_sizes[0]])
         while len(self._parked) > self.park_capacity:
             oldest = next(iter(self._parked))
             del self._parked[oldest]
+            self._park_prefetch.pop(oldest, None)
             self.park_evictions += 1
 
     def _unpark(self, tenant: Any, slot: int) -> bool:
@@ -1039,6 +1303,8 @@ class VigServeEngine:
         the tenant re-admits cold (the caller resets the slot)."""
         had_copy = tenant in self._parked
         host = self._parked.pop(tenant, None)
+        prefetched = self._park_prefetch.pop(tenant, None)
+        orig = host
         if host is not None:
             try:
                 host = self._retry(
@@ -1063,6 +1329,16 @@ class VigServeEngine:
             return False
         from repro.core.state import DigcState
 
+        if prefetched is not None and host is orig:
+            # The queue-driven prefetch already uploaded exactly these
+            # host rows (identity-checked: a fault-site replacement
+            # must re-upload) — bind the in-flight device copy instead,
+            # taking the host->device transfer off the tick. The §11
+            # integrity screens below (_refresh_tokens now, the batched
+            # fingerprint/finiteness pull next tick) run against the
+            # bound rows either way.
+            host = prefetched[1]
+            self.prefetch_hits += 1
         per_size = (host if self._multi_size()
                     else {self.image_sizes[0]: host})
         # N-buckets allocated since the park (no rows in the copy) must
@@ -1244,21 +1520,23 @@ class VigServeEngine:
                 "the multi-tenant request path serves through the jitted "
                 "functional-state forward; construct with mode='jit'"
             )
+        cell, eligible = self._select_cell()
+        if cell is None:
+            # Scheduler deferral (slo_ms > 0): no cell is ripe — wait
+            # for arrivals to fill a cell or for the recorded
+            # ``_next_deadline`` (run() advances the clock to it). Not
+            # a tick: _tick/last_* stay untouched.
+            self.deferrals += 1
+            self._prefetch_parked()
+            return 0
+        size, masked_cell = cell
         self._tick += 1
         self.last_resets = []
         self.last_restores = []
         self.last_quarantined = []
         used: set[int] = set()
         assigned: dict[int, int] = {}  # id(request) -> slot
-
-        def _tkey(req):
-            return req.tenant if req.tenant is not None else ("req", req.uid)
-
-        def _cell(req):
-            return (self._req_size(req), self._req_mask(req) is not None)
-
-        size, masked_cell = _cell(self.queue[0])
-        eligible = [r for r in self.queue if _cell(r) == (size, masked_cell)]
+        _tkey = self._tkey
 
         # Admission pass 1 — tenants that already own a slot reserve it
         # first, so a new tenant admitted later in the same tick can
@@ -1376,6 +1654,7 @@ class VigServeEngine:
             self.last_lanes = []
             self.last_bucket = None
             self.last_cell = None
+            self._prefetch_parked()
             return 0
 
         lanes = [slot for slot, _ in healthy]
@@ -1460,16 +1739,30 @@ class VigServeEngine:
         self.bucket_ticks[bucket] = self.bucket_ticks.get(bucket, 0) + 1
         cell = (size, bucket)
         self.cell_ticks[cell] = self.cell_ticks.get(cell, 0) + 1
+        # padding-waste accounting (stats()/retune_buckets): the
+        # invariant the property tests pin is padded_lanes ==
+        # sum over ticks of (width - live), exactly.
+        self.live_lanes += a
+        self.padded_lanes += width - a
+        self.lane_hist[(size, a)] = self.lane_hist.get((size, a), 0) + 1
+        self._prefetch_parked()
         return a
 
     def run(self) -> list[VigRequest]:
         """Drain the queue; returns the completed requests in
         submission order. (The engine keeps no completion log of its
         own — a step()-driven server owns its request objects, so
-        nothing accumulates across ticks.)"""
+        nothing accumulates across ticks.)
+
+        Under the admission scheduler (slo_ms > 0) a deferred tick
+        advances time to the next recorded deadline — a ``VirtualClock``
+        jumps (deterministic drains in tests/benches), the wall clock
+        sleeps the remainder — so draining always terminates."""
         pending = list(self.queue)
         while self.queue:
-            self.step()
+            served = self.step()
+            if not served and self.queue and self._next_deadline is not None:
+                self._advance_to_deadline()
         return [r for r in pending if r.done]
 
     # -- observability --------------------------------------------------
@@ -1507,6 +1800,21 @@ class VigServeEngine:
                "parked_tenants": list(self._parked),
                "park_hits": self.park_hits,
                "park_evictions": self.park_evictions,
+               # admission scheduling + padding-waste accounting
+               # (DESIGN.md §14) — live on the legacy slo_ms=0 path too
+               "queue_depth": len(self.queue),
+               "live_lanes": self.live_lanes,
+               "padded_lanes": self.padded_lanes,
+               "util": (self.live_lanes
+                        / (self.live_lanes + self.padded_lanes)
+                        if (self.live_lanes + self.padded_lanes) else 1.0),
+               "lane_hist": {f"{s}x{live}": n
+                             for (s, live), n in sorted(self.lane_hist.items())},
+               "deferrals": self.deferrals,
+               "slo_ms": (dict(self._slo_ms)
+                          if isinstance(self._slo_ms, dict) else self._slo_ms),
+               "prefetch_issued": self.prefetch_issued,
+               "prefetch_hits": self.prefetch_hits,
                # fault tolerance (DESIGN.md §11)
                "guards": self.guards,
                "quarantines": self.quarantines,

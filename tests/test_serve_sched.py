@@ -1,0 +1,467 @@
+"""SLO-bounded admission scheduling (DESIGN.md §14).
+
+Property tests for the async admission queue, all under a
+``VirtualClock`` so every deadline comparison is exact and every run
+is deterministic:
+
+* **Deadline bound**: no request dispatches later than its class SLO
+  after arrival (replay wakes on deadlines, not just arrivals).
+* **Per-tenant FIFO**: a tenant's requests complete in submission
+  order even when tight-SLO requests pull other cells forward.
+* **Deterministic bucket sets**: the same trace always tunes to the
+  same bucket set, and ``buckets="auto"`` round-trips it through the
+  host tuner cache.
+* **Exact padding accounting**: ``padded_lanes`` equals the per-tick
+  sum of (width - live), and ``util`` is derived from it.
+* **Legacy parity**: ``slo_ms=0`` keeps the bind-on-next-tick engine
+  byte-for-byte — identical logits, bucket ticks and compile counts —
+  while still exposing the new queue/util counters.
+* **Prefetch transparency**: prefetched parking restores change
+  counters only, never logits (bitwise).
+
+Scheduler-order tests run on stubbed programs (no compiles, the
+``test_serve_multitenant`` idiom); the parity and prefetch tests use
+real compiled programs on the exact cluster tier.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.state import DigcState
+from repro.models import vig
+from repro.models.module import init_params
+from repro.serve.engine import VigRequest, VigServeEngine
+from repro.serve.sched import Arrival, VirtualClock, arrival_trace, replay
+
+
+def _tiny_vig(impl):
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"].replace(
+        image_size=16, patch=4, embed_dims=(16,), depths=(2,),
+        num_classes=3, k=3, digc_impl=impl,
+    )
+    params = init_params(vig.vig_param_spec(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _image(rng):
+    return rng.standard_normal((16, 16, 3)).astype(np.float32)
+
+
+_ZERO = np.zeros((16, 16, 3), np.float32)
+
+
+class _StubProgramEngine(VigServeEngine):
+    def _build_program(self, bucket):
+        def fake_fwd(params, imgs, state):
+            b = imgs.shape[0]
+            new = DigcState(entries={
+                k: e.bump() for k, e in state.entries.items()
+            })
+            return jnp.zeros((b, self.cfg.num_classes), jnp.float32), new
+
+        return fake_fwd
+
+
+def _stub_engine(**kw):
+    cfg, params = _tiny_vig("cluster")
+    kw.setdefault("autotune", False)
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("batch", 4)
+    return _StubProgramEngine(cfg, params, digc_impl="cluster", **kw)
+
+
+def _drain(eng, clock, arrivals, *, on_done=None):
+    """Replay ``arrivals`` through a stub engine, stamping each
+    request's dispatch time. Mirrors ``serve.sched.replay`` (deadline
+    wakeups between arrivals) but returns the request objects."""
+    reqs = []
+    done = set()
+
+    def _tick():
+        served = eng.step()
+        if served:
+            for r in reqs:
+                if r.done and r.uid not in done:
+                    done.add(r.uid)
+                    r._done_t = clock.now()
+                    if on_done is not None:
+                        on_done(r)
+        return served
+
+    for uid, arr in enumerate(arrivals):
+        t_arr = arr.t_ms / 1e3
+        while eng.queue:
+            dl = eng.next_deadline()
+            if dl is None or dl >= t_arr:
+                break
+            clock.advance_to(dl)
+            _tick()
+        clock.advance_to(t_arr)
+        req = VigRequest(uid=uid, image=_ZERO, tenant=arr.tenant,
+                         tclass=arr.tclass)
+        reqs.append(req)
+        eng.submit(req)
+        _tick()
+    guard = 0
+    while eng.queue:
+        if _tick() == 0:
+            dl = eng.next_deadline()
+            assert dl is not None, "deferred with no deadline"
+            clock.advance_to(dl)
+            guard += 1
+            assert guard < 10_000, "drain stalled"
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# VirtualClock / arrival_trace
+
+
+def test_virtual_clock_monotonic():
+    clk = VirtualClock()
+    assert clk.now() == 0.0 and clk() == 0.0
+    assert clk.advance(0.25) == 0.25
+    # advance_to into the past is a no-op, never a rewind
+    assert clk.advance_to(0.1) == 0.25
+    assert clk.advance_to(1.5) == 1.5
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+    assert VirtualClock(start=3.0).now() == 3.0
+
+
+def test_arrival_trace_deterministic_and_sorted():
+    a = arrival_trace(seed=7, tenants=4, poisson_n=20, burst_n=2,
+                      burst_size=3, classes=("gold", "default"))
+    b = arrival_trace(seed=7, tenants=4, poisson_n=20, burst_n=2,
+                      burst_size=3, classes=("gold", "default"))
+    assert a == b
+    assert len(a) == 20 + 2 * 3
+    assert all(x.t_ms <= y.t_ms for x, y in zip(a, a[1:]))
+    assert {x.tclass for x in a} == {"gold", "default"}
+    assert {x.tenant for x in a} <= {f"t{i}" for i in range(4)}
+    c = arrival_trace(seed=8, tenants=4, poisson_n=20, burst_n=2,
+                      burst_size=3, classes=("gold", "default"))
+    assert [x.t_ms for x in c] != [x.t_ms for x in a]
+
+
+# ---------------------------------------------------------------------------
+# Deadline bound
+
+
+def _assert_deadline_bound(reqs, eng):
+    for r in reqs:
+        assert r.done
+        assert r._done_t <= r._enq_t + eng._slo_s(r) + 1e-9, (
+            f"uid {r.uid} dispatched {r._done_t:.6f}, deadline "
+            f"{r._enq_t + eng._slo_s(r):.6f}")
+
+
+def test_deadline_bound_on_bursty_trace():
+    """Every request on the canonical Poisson+burst trace dispatches at
+    or before arrival + its SLO — deferrals coalesce, never starve."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=50.0, clock=clock)
+    arrivals = arrival_trace(seed=3, tenants=6, poisson_n=40,
+                             poisson_ms=30.0, burst_n=3, burst_size=4)
+    reqs = _drain(eng, clock, arrivals)
+    _assert_deadline_bound(reqs, eng)
+    assert eng.deferrals > 0  # the trickle actually waited
+    assert eng.stats()["queue_depth"] == 0
+
+
+def test_deadline_bound_per_class_slo():
+    """Dict slo: a gold request's tighter budget binds it, and a gold
+    request queued behind a lax one pulls the tenant head forward
+    (effective-deadline attribution) so FIFO never starves gold."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms={"gold": 10.0, "default": 200.0},
+                       clock=clock)
+    arrivals = [
+        Arrival(t_ms=0.0, tenant="a", tclass="default"),
+        Arrival(t_ms=1.0, tenant="a", tclass="gold"),
+        Arrival(t_ms=2.0, tenant="b", tclass="default"),
+    ]
+    reqs = _drain(eng, clock, arrivals)
+    _assert_deadline_bound(reqs, eng)
+    # the lax head itself must clear in time for the gold behind it
+    assert reqs[0]._done_t <= (1.0 + 10.0) / 1e3 + 1e-9
+    # unknown class falls back to "default"
+    assert eng._slo_s(VigRequest(uid=9, image=_ZERO, tenant="x",
+                                 tclass="nope")) == pytest.approx(0.2)
+
+
+@settings(max_examples=25)
+@given(gaps=st.lists(st.integers(0, 120), min_size=1, max_size=24),
+       slo=st.integers(1, 200))
+def test_property_deadline_bound(gaps, slo):
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=float(slo), clock=clock)
+    t, arrivals = 0.0, []
+    for i, g in enumerate(gaps):
+        t += g
+        arrivals.append(Arrival(t_ms=t, tenant=f"t{i % 5}"))
+    reqs = _drain(eng, clock, arrivals)
+    _assert_deadline_bound(reqs, eng)
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant FIFO / dispatch policy
+
+
+def test_per_tenant_fifo_across_deferrals():
+    """A tenant's requests complete in submission order even when the
+    scheduler reorders *cells*; only head requests are ever eligible."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=40.0, clock=clock)
+    arrivals = arrival_trace(seed=11, tenants=3, poisson_n=30,
+                             poisson_ms=15.0, burst_n=2, burst_size=5)
+    order = []
+    _drain(eng, clock, arrivals, on_done=lambda r: order.append(r))
+    per_tenant = {}
+    for r in order:
+        per_tenant.setdefault(r.tenant, []).append(r.uid)
+    for t, uids in per_tenant.items():
+        assert uids == sorted(uids), f"tenant {t} served out of order"
+
+
+@settings(max_examples=20)
+@given(tenants=st.lists(st.integers(0, 3), min_size=2, max_size=20))
+def test_property_per_tenant_fifo(tenants):
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=25.0, clock=clock)
+    arrivals = [Arrival(t_ms=5.0 * i, tenant=f"t{t}")
+                for i, t in enumerate(tenants)]
+    order = []
+    _drain(eng, clock, arrivals, on_done=lambda r: order.append(r))
+    per_tenant = {}
+    for r in order:
+        per_tenant.setdefault(r.tenant, []).append(r.uid)
+    for uids in per_tenant.values():
+        assert uids == sorted(uids)
+
+
+def test_full_width_dispatches_without_waiting():
+    """A full slot width of distinct tenants is ripe immediately — the
+    scheduler never sits on a full tick just because deadlines are far."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=10_000.0, clock=clock)
+    for i in range(eng.slots):
+        eng.submit(VigRequest(uid=i, image=_ZERO, tenant=f"t{i}"))
+    assert eng.step() == eng.slots
+    assert eng.deferrals == 0
+    assert clock.now() == 0.0  # no time passed
+
+
+def test_deferral_then_deadline_dispatch():
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=50.0, clock=clock)
+    eng.submit(VigRequest(uid=0, image=_ZERO, tenant="a"))
+    assert eng.step() == 0  # lone sub-width arrival waits
+    assert eng.deferrals == 1
+    assert eng._next_deadline == pytest.approx(0.05)
+    assert eng.next_deadline() == pytest.approx(0.05)
+    clock.advance_to(0.049)
+    assert eng.step() == 0  # still early
+    clock.advance_to(0.05)
+    assert eng.step() == 1
+    assert eng.stats()["queue_depth"] == 0
+
+
+def test_run_drains_under_virtual_clock():
+    """run() itself advances a VirtualClock to deadlines — a deferred
+    drain terminates without any external ticking."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=30.0, clock=clock)
+    reqs = [VigRequest(uid=i, image=_ZERO, tenant=f"t{i}")
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert [r.uid for r in done] == [0, 1]
+    assert clock.now() >= 0.03
+
+
+# ---------------------------------------------------------------------------
+# Padding accounting / bucket-set determinism
+
+
+def test_padding_accounting_sums_exactly():
+    """padded_lanes == sum over dispatched ticks of (width - live),
+    reconstructed independently from the replay's tick log."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=60.0, clock=clock)
+    arrivals = arrival_trace(seed=5, tenants=5, poisson_n=32,
+                             poisson_ms=25.0, burst_n=2, burst_size=4)
+    ticks = replay(eng, arrivals, _ZERO, clock=clock)
+    assert sum(served for served, _, _ in ticks) == len(arrivals)
+    assert eng.live_lanes == sum(live for _, live, _ in ticks)
+    assert eng.padded_lanes == sum(w - live for _, live, w in ticks)
+    s = eng.stats()
+    assert s["util"] == pytest.approx(
+        eng.live_lanes / (eng.live_lanes + eng.padded_lanes))
+    assert sum(s["lane_hist"].values()) == len(ticks)
+    # the histogram's live counts re-sum to the lane totals
+    assert sum(int(k.split("x")[1]) * n
+               for k, n in s["lane_hist"].items()) == eng.live_lanes
+
+
+def test_bucket_sets_deterministic_for_fixed_trace(tmp_path):
+    """The same replayed trace always tunes to the same bucket set,
+    and buckets="auto" round-trips it through the host tuner cache."""
+    sets = []
+    for _ in range(2):
+        clock = VirtualClock()
+        eng = _stub_engine(slo_ms=60.0, clock=clock)
+        arrivals = arrival_trace(seed=9, tenants=6, poisson_n=40,
+                                 burst_n=3, burst_size=4)
+        replay(eng, arrivals, _ZERO, clock=clock)
+        sets.append(eng.retune_buckets())
+    assert sets[0] == sets[1]
+    assert eng.buckets == sets[1]  # retune takes effect live
+    assert len(sets[0]) <= eng.bucket_cap and max(sets[0]) == eng.slots
+    # persist through the tuner cache, then construct on "auto"
+    path = tmp_path / "tune.json"
+    clock = VirtualClock()
+    tuned = _stub_engine(slo_ms=60.0, clock=clock, tuner_path=path)
+    arrivals = arrival_trace(seed=9, tenants=6, poisson_n=40,
+                             burst_n=3, burst_size=4)
+    replay(tuned, arrivals, _ZERO, clock=clock)
+    persisted = tuned.retune_buckets()
+    assert persisted == sets[0]
+    auto = _stub_engine(buckets="auto", tuner_path=path)
+    assert auto.buckets == persisted
+
+
+def test_auto_buckets_fallback_without_cache(tmp_path):
+    # no tuner path: the default ladder capped at slots
+    assert _stub_engine(buckets="auto").buckets == (1, 2, 4)
+    assert _stub_engine(buckets="auto", batch=8).buckets == (1, 2, 4, 8)
+    # a tuner path with no matching entry falls back the same way
+    eng = _stub_engine(buckets="auto", tuner_path=tmp_path / "t.json")
+    assert eng.buckets == (1, 2, 4)
+    with pytest.raises(ValueError):
+        _stub_engine(buckets="nonsense")
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 50))
+def test_property_bucket_set_seed_stability(seed):
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=45.0, clock=clock)
+    replay(eng, arrival_trace(seed=seed, tenants=5, poisson_n=24),
+           _ZERO, clock=clock)
+    first = eng.retune_buckets()
+    assert first == eng.retune_buckets()  # idempotent on the same hist
+    assert max(first) == eng.slots
+
+
+# ---------------------------------------------------------------------------
+# slo_ms=0 legacy parity (byte-for-byte) + counters on the legacy path
+
+
+def test_slo_zero_is_bitwise_legacy():
+    """slo_ms=0 + a clock + prefetch must serve a ragged trace
+    bit-identically to the default-constructed engine: same logits,
+    same bucket ticks, same compile count — the scheduler machinery
+    is provably inert until armed."""
+    impl = "cluster"
+    cfg, params = _tiny_vig(impl)
+    waves = [["A"], ["B", "C"], ["A", "B"], ["C"], ["A", "B", "C"]]
+
+    def _serve(**kw):
+        eng = VigServeEngine(cfg, params, digc_impl=impl, autotune=False,
+                             buckets=(1, 2, 4), **kw)
+        rng = np.random.default_rng(41)
+        out, uid = [], 0
+        for wave in waves:
+            reqs = [VigRequest(uid=uid + i, image=_image(rng), tenant=t)
+                    for i, t in enumerate(wave)]
+            uid += len(wave)
+            for r in reqs:
+                eng.submit(r)
+            assert eng.step() == len(wave)
+            out.extend(reqs)
+        return eng, out
+
+    base_eng, base = _serve()
+    sched_eng, sched = _serve(slo_ms=0.0, clock=VirtualClock(),
+                              prefetch=True)
+    assert sched_eng._sched_active is False
+    for b, s in zip(base, sched):
+        assert np.asarray(b.logits).tobytes() == np.asarray(s.logits).tobytes()
+    assert base_eng.stats()["bucket_ticks"] == sched_eng.stats()["bucket_ticks"]
+    assert base_eng.compile_count == sched_eng.compile_count
+    assert sched_eng.deferrals == 0 and sched_eng.prefetch_issued == 0
+
+
+def test_legacy_path_reports_queue_and_util():
+    """The new stats counters are live even with the scheduler off."""
+    eng = _stub_engine()  # slo_ms=0 default
+    for i in range(3):
+        eng.submit(VigRequest(uid=i, image=_ZERO, tenant=f"t{i}"))
+    assert eng.stats()["queue_depth"] == 3
+    eng.step()  # 3 live on bucket 4 -> 1 padded lane
+    s = eng.stats()
+    assert s["queue_depth"] == 0
+    assert s["live_lanes"] == 3 and s["padded_lanes"] == 1
+    assert s["util"] == pytest.approx(0.75)
+    assert s["lane_hist"] == {"16x3": 1}
+    assert s["deferrals"] == 0 and s["slo_ms"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Prefetched parking restore
+
+
+def test_prefetch_counters_and_bitwise_parity():
+    """Evict+park a tenant, resubmit it: the prefetcher issues the
+    upload at submit time, the restoring tick consumes it, and the
+    logits are bitwise identical to a prefetch=False engine serving
+    the same trace — prefetch is a placement hint, never a semantic."""
+    impl = "cluster"
+    cfg, params = _tiny_vig(impl)
+
+    def _serve(prefetch):
+        eng = VigServeEngine(cfg, params, digc_impl=impl, autotune=False,
+                             buckets=(1, 2), park_capacity=4,
+                             prefetch=prefetch)
+        rng = np.random.default_rng(17)
+        out = []
+        # waves of distinct tenants overflow the 2 slots -> A parks
+        for uid, wave in enumerate([["A"], ["B", "C"], ["D", "E"], ["A"]]):
+            reqs = [VigRequest(uid=(uid, i), image=_image(rng), tenant=t)
+                    for i, t in enumerate(wave)]
+            for r in reqs:
+                eng.submit(r)
+            assert eng.step() == len(wave)
+            out.extend(reqs)
+        return eng, out
+
+    pre_eng, pre = _serve(True)
+    base_eng, base = _serve(False)
+    assert pre_eng.prefetch_issued >= 1 and pre_eng.prefetch_hits >= 1
+    assert pre_eng.park_hits >= 1
+    assert base_eng.prefetch_issued == 0 and base_eng.prefetch_hits == 0
+    for p, b in zip(pre, base):
+        assert np.asarray(p.logits).tobytes() == np.asarray(b.logits).tobytes()
+
+
+def test_prefetch_scheduler_path_counts():
+    """Under the scheduler the peek-select predicts the admitting cell;
+    a parked tenant among the predicted admits is prefetched before the
+    tick that restores it."""
+    clock = VirtualClock()
+    eng = _stub_engine(slo_ms=20.0, clock=clock, buckets=(1, 2),
+                       batch=2, park_capacity=4)
+    arrivals = [Arrival(t_ms=0.0, tenant="A"),
+                Arrival(t_ms=30.0, tenant="B"),
+                Arrival(t_ms=31.0, tenant="C"),
+                Arrival(t_ms=60.0, tenant="A")]
+    reqs = _drain(eng, clock, arrivals)
+    assert all(r.done for r in reqs)
+    assert eng.prefetch_issued >= 1
+    assert eng.prefetch_hits >= 1

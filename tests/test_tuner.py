@@ -18,7 +18,9 @@ from repro.core.tuner import (
     TuneResult,
     VigSchedule,
     autotune_spec,
+    bucket_set_key,
     host_key,
+    optimal_bucket_set,
     workload_key,
 )
 
@@ -139,11 +141,11 @@ def test_tune_measures_persists_and_caches(tmp_path):
     i_r = digc(x, k=4, impl="reference")
     i_t = digc(x, spec=tuned)
     np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_t))
-    # persisted under this host's key (schema 2) ...
+    # persisted under this host's key (schema 3) ...
     data = json.loads(path.read_text())
-    assert data["schema"] == 2
+    assert data["schema"] == 3
     assert list(data["hosts"]) == [host_key()]
-    assert len(data["hosts"][host_key()]) == 1
+    assert len(data["hosts"][host_key()]["schedules"]) == 1
     # ... and served from cache by a fresh tuner (no re-measurement)
     tuner2 = DigcTuner(path)
     tuned2, res2 = tuner2.tune(x, spec=spec)
@@ -184,7 +186,10 @@ def test_tune_cache_not_shared_across_hosts(tmp_path):
     # Same file, different (faked) host: must re-measure, not reuse.
     other = DigcTuner(path, measure_iters=1, max_measure=1)
     other.host = "tpu|linux-v5e|jax-9.9.9"
-    other.entries = other._hosts.setdefault(other.host, {})
+    slot = other._hosts.setdefault(
+        other.host, {"schedules": {}, "bucket_sets": {}})
+    other.entries = slot["schedules"]
+    other.bucket_sets = slot["bucket_sets"]
     _, res = other.tune(x, spec=spec)
     assert res.source == "measured"
     other.save()
@@ -228,7 +233,7 @@ def test_tune_schedule_per_stage(tmp_path):
     assert sched.spec_for(5) == sched.stages[1]
     # both stage workloads cached under distinct keys
     data = json.loads(path.read_text())
-    assert len(data["hosts"][host_key()]) == 2
+    assert len(data["hosts"][host_key()]["schedules"]) == 2
     # a fresh tuner serves the whole schedule from cache
     sched2, results2 = DigcTuner(path).tune_schedule(
         workloads, spec=DigcSpec(impl="blocked", k=3), batch=2)
@@ -253,6 +258,102 @@ def test_tune_non_blocked_impl_passthrough():
     spec = DigcSpec(impl="reference", k=3)
     tuned, res = autotune_spec(x, spec=spec)
     assert tuned is spec and res.source == "prior"
+
+
+def test_schema2_tune_cache_migrates_losslessly(tmp_path):
+    """A schema-2 file (hosts mapping straight to schedule entries)
+    loads with every measurement intact under the schema-3 nesting,
+    and the next save writes schema 3 — the committed .digc_tune.json
+    upgrade path."""
+    path = tmp_path / "tune.json"
+    key = workload_key(2, 64, 64, 8, 4)
+    entry = {"block_n": None, "block_m": 64, "merge": "select",
+             "fuse_norms": False, "impl": "blocked", "kernel_merge": None,
+             "us_per_call": 1.0, "exact_match": True, "source": "measured"}
+    path.write_text(json.dumps({
+        "schema": 2, "hosts": {host_key(): {key: entry}},
+    }))
+    tuner = DigcTuner(path)
+    cached = tuner.lookup(key)
+    assert cached is not None and cached.source == "cached"
+    assert tuner.bucket_sets == {}
+    tuner.save()
+    data = json.loads(path.read_text())
+    assert data["schema"] == 3
+    host = data["hosts"][host_key()]
+    assert host["schedules"][key]["block_m"] == 64
+    # round-trip: a schema-3 load serves the migrated entry unchanged
+    assert DigcTuner(path).lookup(key).config.block_m == 64
+
+
+def test_optimal_bucket_set_minimizes_padded_work():
+    """Tiny closed-form cases: the optimizer picks the boundaries that
+    minimize sum(ticks * bucket(live) * cost) under the program cap,
+    always covering slots."""
+    # singleton-heavy traffic: a 1-bucket saves 7 padded lanes * 10
+    # ticks; the rare full tick keeps the mandatory 8.
+    assert optimal_bucket_set({1: 10, 8: 1}, slots=8,
+                              max_programs=2) == (1, 8)
+    # cap 1 leaves no room for boundaries: everything pads to slots
+    assert optimal_bucket_set({1: 10, 8: 1}, slots=8,
+                              max_programs=1) == (8,)
+    # enough cap for every observed count -> zero padded work
+    hist = {1: 5, 3: 4, 6: 2}
+    full = optimal_bucket_set(hist, slots=8, max_programs=4)
+    assert full == (1, 3, 6, 8)
+    # empty histogram: nothing observed, serve at the slot width
+    assert optimal_bucket_set({}, slots=8) == (8,)
+    # per-size costs weight the boundaries toward the expensive cell
+    hist2 = {224: {1: 10, 4: 10}, 448: {2: 10}}
+    got = optimal_bucket_set(hist2, slots=4, max_programs=2,
+                             costs={224: 1, 448: 1000})
+    assert 2 in got  # the 448 cell's live count wins the boundary
+    with pytest.raises(ValueError, match="outside"):
+        optimal_bucket_set({9: 1}, slots=8)
+
+
+def test_optimal_bucket_set_deterministic():
+    """A fixed histogram selects the same set regardless of dict
+    insertion order (the fixed-trace determinism the scheduler tests
+    rely on); ties break toward fewer, smaller buckets."""
+    h1 = {1: 3, 2: 3, 5: 1, 8: 2}
+    h2 = dict(reversed(list(h1.items())))
+    a = optimal_bucket_set(h1, slots=8, max_programs=3)
+    assert a == optimal_bucket_set(h2, slots=8, max_programs=3)
+    assert a == optimal_bucket_set(h1, slots=8, max_programs=3)
+    # a count observed once with zero benefit is not picked: ties go
+    # to the smaller set
+    assert optimal_bucket_set({8: 5}, slots=8, max_programs=4) == (8,)
+
+
+def test_tune_bucket_set_persists_per_shape(tmp_path):
+    """tune_bucket_set caches per (slots, sizes, cap) serving shape —
+    a fresh tuner (and an engine with buckets="auto") reads the choice
+    back without re-deriving; force=True re-derives in place."""
+    path = tmp_path / "tune.json"
+    tuner = DigcTuner(path)
+    hist = {32: {1: 10, 2: 4, 8: 1}}
+    got = tuner.tune_bucket_set(hist, slots=8, max_programs=3)
+    assert got == optimal_bucket_set(hist, slots=8, max_programs=3)
+    fresh = DigcTuner(path)
+    assert fresh.lookup_bucket_set(slots=8, sizes=(32,),
+                                   max_programs=3) == got
+    # a different shape is a different entry
+    assert fresh.lookup_bucket_set(slots=4, sizes=(32,),
+                                   max_programs=3) is None
+    # cached: a different histogram under the same shape returns the
+    # cached set unless forced
+    other_hist = {32: {7: 100}}
+    assert fresh.tune_bucket_set(other_hist, slots=8, max_programs=3,
+                                 sizes=(32,)) == got
+    forced = fresh.tune_bucket_set(other_hist, slots=8, max_programs=3,
+                                   sizes=(32,), force=True)
+    assert forced == (7, 8)
+    # the recorded histogram makes the cached choice auditable
+    data = json.loads(path.read_text())
+    entry = data["hosts"][host_key()]["bucket_sets"][
+        bucket_set_key(8, (32,), 3)]
+    assert entry["hist"] == {"32:7": 100}
 
 
 def test_kernel_tile_defaults_respect_vmem():

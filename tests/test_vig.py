@@ -83,6 +83,51 @@ def test_patchify_inverse_shape():
     assert p.shape == (2, 16, 8 * 8 * 3)
 
 
+def test_resolution_dilation_parity_at_native():
+    """Per-cell dilation schedules (DESIGN.md §13/§14): at or below
+    the native grid the scaled schedule IS the model's schedule — the
+    explicit grid= plans must match the default plans exactly, block
+    for block, so native serving cells stay byte-identical to the
+    pre-scaling programs."""
+    for name in ("vig_ti_iso", "vig_ti_pyr"):
+        cfg = vig.VIG_VARIANTS[name]
+        base = vig.vig_stage_plans(cfg)
+        at_native = vig.vig_stage_plans(cfg, grid=cfg.base_grid)
+        for p0, p1 in zip(base, at_native):
+            assert p0.dilations == p1.dilations, name
+            assert p0.k_effs == p1.k_effs, name
+            assert p0.spec.k == p1.spec.k, name
+    # below native: the ramp never shrinks a stride either
+    half = vig.vig_stage_plans(vig.VIG_VARIANTS["vig_ti_iso"], grid=7)
+    assert all(d >= 1 for d in half[0].dilations)
+    assert vig._resolution_dilation(3, 7, 14) == 3
+
+
+def test_resolution_dilation_scales_above_native():
+    """Above the native grid the dilation stride rides the same linear
+    ramp as k — d at native, 2d at twice native, clamped — and the
+    scaled schedule still honors the m-feasibility clamp
+    (k_eff * dilation <= m) on every block."""
+    assert vig._resolution_dilation(2, 28, 14) == 4
+    assert vig._resolution_dilation(2, 21, 14) == 3
+    assert vig._resolution_dilation(2, 56, 14) == 4  # clamped at 2d
+    cfg = vig.VIG_VARIANTS["vig_ti_iso"]
+    native = vig.vig_stage_plans(cfg)[0]
+    doubled = vig.vig_stage_plans(cfg, grid=cfg.base_grid * 2)[0]
+    # every block's stride doubled with the grid, under the scaled cap
+    # (max_dilation rides the ramp too: the 2x cell may exceed the
+    # native cap, up to 2x it)
+    assert doubled.dilations == tuple(
+        min(2 * d, 2 * cfg.max_dilation) for d in native.dilations)
+    assert max(doubled.dilations) > cfg.max_dilation
+    for dil, k_eff in zip(doubled.dilations, doubled.k_effs):
+        assert k_eff * dil <= doubled.m
+    # use_dilation=False stays inert at every resolution
+    flat = vig.vig_stage_plans(cfg.replace(use_dilation=False),
+                               grid=cfg.base_grid * 2)[0]
+    assert set(flat.dilations) == {1}
+
+
 @pytest.mark.slow
 def test_vig_training_reduces_loss():
     from repro.data.pipeline import DataConfig, synth_image_batch
